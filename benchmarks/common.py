@@ -1,0 +1,52 @@
+"""Shared benchmark plumbing: the paper's experimental setup (§6) at
+CPU-tractable scale, CSV writers, timing helpers."""
+from __future__ import annotations
+
+import csv
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+from repro.configs.surf_paper import BENCH  # noqa: E402
+
+OUT_DIR = os.environ.get("BENCH_OUT", "bench_out")
+
+# CPU-bench SURF config (paper: n=100, L=10, K=2; features 64-d synthetic
+# stand-in for frozen ResNet18 features — DESIGN.md §3).
+CFG = BENCH
+META_TRAIN_Q = 60     # paper: 600 (CPU budget: 60, cycled)
+META_TEST_Q = 10      # paper: 30
+META_STEPS = 700
+
+
+def write_csv(name, header, rows):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, name)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    print(f"wrote {path} ({len(rows)} rows)")
+    return path
+
+
+def time_us(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    import jax
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def star_cfg():
+    return dataclasses.replace(CFG, topology="star", filter_taps=1, eps=0.1,
+                               lr_theta=1e-3)

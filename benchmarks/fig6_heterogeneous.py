@@ -1,0 +1,50 @@
+"""Paper Figure 6: robustness to agent heterogeneity — accuracy over 30
+Dirichlet(α)-heterogeneous downstream datasets for α ∈ {1, 0.7, 0.3}
+(lower α = more heterogeneous), U-DGD vs decentralized baselines on a
+3-regular graph.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (CFG, META_STEPS, META_TEST_Q, META_TRAIN_Q,
+                               write_csv)
+from repro.core import baselines as BL
+from repro.core import surf, unroll as U
+from repro.data import synthetic
+
+ALPHAS = (1.0, 0.7, 0.3)
+ROUNDS = 200
+
+
+def main():
+    mds = synthetic.make_meta_dataset(CFG, META_TRAIN_Q, seed=0)
+    state, _, S = surf.train_surf(CFG, mds, steps=META_STEPS, log_every=0)
+    rows = []
+    for alpha in ALPHAS:
+        test = synthetic.make_meta_dataset(CFG, META_TEST_Q, seed=555,
+                                           alpha=alpha)
+        res = surf.evaluate_surf(CFG, state, S, test)
+        acc_u = float(res["final_acc"])
+        rows.append([alpha, "u-dgd(surf)",
+                     int(CFG.n_layers * CFG.filter_taps), acc_u])
+        for name, fn in BL.DECENTRALIZED.items():
+            lrs = {"dgd": 0.5, "dsgd": 0.2, "dfedavgm": 0.05}
+            accs = []
+            for d in test:
+                batch = {k: jnp.asarray(v) for k, v in d.items()}
+                W0 = U.sample_w0(jax.random.PRNGKey(0), CFG)
+                r = fn(S, W0, batch, jax.random.PRNGKey(1), CFG,
+                       rounds=ROUNDS, lr=lrs[name])
+                accs.append(np.asarray(r["acc"])[-1])
+            rows.append([alpha, name, ROUNDS, float(np.mean(accs))])
+            print(f"alpha={alpha}: u-dgd={acc_u:.3f} "
+                  f"{name}@{ROUNDS}r={float(np.mean(accs)):.3f}")
+    write_csv("fig6_heterogeneous.csv",
+              ["alpha", "method", "rounds", "accuracy"], rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper Figure 7 / Appendix D ablation: per-layer test loss/accuracy of
+U-DGD trained WITH vs WITHOUT the descending constraints. The paper's
+claim: constrained training descends gradually across layers; the
+unconstrained optimizer only 'hits the minimum at the final layer'.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (CFG, META_STEPS, META_TEST_Q, META_TRAIN_Q,
+                               write_csv)
+from repro.core import surf
+from repro.data import synthetic
+
+
+def main():
+    mds = synthetic.make_meta_dataset(CFG, META_TRAIN_Q, seed=0)
+    test = synthetic.make_meta_dataset(CFG, META_TEST_Q, seed=777)
+    rows = []
+    summary = {}
+    # NOTE: the ablation uses the generic random init the paper assumes —
+    # our default DGD-point init is itself a (beyond-paper) stabiliser that
+    # already produces descending trajectories without constraints; with
+    # random init the constraints must do the work (EXPERIMENTS.md §Claims).
+    for constrained in (True, False):
+        for init in ("random", "dgd"):
+            state, _, S = surf.train_surf(CFG, mds, steps=META_STEPS,
+                                          constrained=constrained,
+                                          log_every=0, init=init)
+            res = surf.evaluate_surf(CFG, state, S, test)
+            tag = ("surf" if constrained else "no-constraints") + f"+{init}"
+            for l, (lo, ac) in enumerate(zip(res["loss_per_layer"],
+                                             res["acc_per_layer"])):
+                rows.append([tag, l + 1, float(lo), float(ac)])
+            summary[tag] = np.asarray(res["acc_per_layer"])
+    write_csv("fig7_ablation.csv", ["method", "layer", "loss", "accuracy"],
+              rows)
+    for tag, acc in summary.items():
+        print(f"{tag:24s} per-layer acc: "
+              + " ".join(f"{a:.2f}" for a in acc))
+    # paper claim: constrained mid-layer accuracy >> unconstrained mid-layer
+    mid = CFG.n_layers // 2
+    print(f"mid-layer (l={mid}) acc (random init): "
+          f"surf={summary['surf+random'][mid]:.3f} "
+          f"no-constraints={summary['no-constraints+random'][mid]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Roofline table assembly (deliverable g): reads experiments/dryrun/*.json
+(produced by launch/dryrun.py) and prints/writes the per-(arch × shape)
+three-term roofline table for the single-pod mesh.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import write_csv
+
+
+def load_records(dirname="experiments/dryrun", mesh="16x16", tag=""):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh and r.get("tag", "") == (tag or ""):
+            recs.append(r)
+    return recs
+
+
+def main():
+    recs = load_records()
+    rows = []
+    for r in recs:
+        if r["status"] == "skipped":
+            rows.append([r["arch"], r["shape"], "skipped", "", "", "", "",
+                         "", r.get("reason", "")[:60]])
+            continue
+        if r["status"] != "ok":
+            rows.append([r["arch"], r["shape"], "error", "", "", "", "", "",
+                         r.get("error", "")[:60]])
+            continue
+        rl = r["roofline"]
+        rows.append([
+            r["arch"], r["shape"], rl["dominant"],
+            f"{rl['compute_s']:.3f}", f"{rl['memory_s']:.3f}",
+            f"{rl['collective_s']:.3f}",
+            f"{rl.get('useful_flop_ratio', 0):.3f}",
+            f"{r['memory']['per_device_total']/1e9:.2f}", ""])
+    header = ["arch", "shape", "dominant", "compute_s", "memory_s",
+              "collective_s", "useful_flop_ratio", "mem_gb_per_dev", "note"]
+    write_csv("roofline_16x16.csv", header, rows)
+    widths = [22, 12, 10, 10, 10, 12, 9, 8]
+    print(" ".join(h.ljust(w) for h, w in zip(header, widths)))
+    for row in rows:
+        print(" ".join(str(c).ljust(w) for c, w in zip(row, widths)))
+
+
+if __name__ == "__main__":
+    main()

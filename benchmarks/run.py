@@ -1,0 +1,114 @@
+"""Benchmark harness entry point — one function per paper figure/table plus
+kernel microbenches. Prints ``name,us_per_call,derived`` CSV lines and
+writes per-figure CSVs to bench_out/.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig5,kernels]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import common
+
+
+def bench_kernels():
+    """Kernel microbenches (interpret mode on CPU — numbers are correctness
+    -path timings, NOT TPU perf; TPU perf comes from the roofline)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.graph_filter import graph_filter
+    from repro.kernels.ssm_scan import wkv
+
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    n, d = 100, 650
+    S = jax.random.uniform(key, (n, n)); S = S / S.sum(1, keepdims=True)
+    W = jax.random.normal(key, (n, d))
+    h = jnp.array([0.2, 0.7, 0.1])
+    us = common.time_us(lambda: graph_filter(h, S, W))
+    rows.append(("kernel/graph_filter_n100_d650_K2", us,
+                 f"gflops={2*2*n*n*d/us/1e3:.2f}"))
+
+    q = jax.random.normal(key, (1, 4, 128, 64))
+    k = jax.random.normal(key, (1, 2, 128, 64))
+    v = jax.random.normal(key, (1, 2, 128, 64))
+    us = common.time_us(lambda: flash_attention(q, k, v, block_q=64,
+                                                block_kv=64))
+    rows.append(("kernel/flash_attention_s128_gqa", us, "interpret"))
+
+    r = jax.random.normal(key, (1, 4, 64, 64)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(key, (1, 4, 64, 64)))
+    u = jax.random.normal(key, (4, 64)) * 0.1
+    us = common.time_us(lambda: wkv(r, r, r, w, u, chunk=64)[0])
+    rows.append(("kernel/wkv_rwkv6_t64_h4", us, "interpret"))
+    return rows
+
+
+def bench_udgd_step():
+    """Meta-training step cost at paper topology scale (n=100)."""
+    import jax
+    from benchmarks.common import CFG
+    from repro.core import surf, trainer as TR
+    from repro.data import synthetic
+    _, S = surf.make_problem(CFG, seed=0)
+    mds = synthetic.make_meta_dataset(CFG, 2, seed=0)
+    state = TR.init_state(jax.random.PRNGKey(0), CFG)
+    meta_step, _ = TR.make_meta_step(CFG, S)
+    key = jax.random.PRNGKey(1)
+    state, _ = meta_step(state, mds[0], key)   # compile
+    t0 = time.perf_counter()
+    iters = 5
+    for _ in range(iters):
+        state, m = meta_step(state, mds[0], key)
+    jax.block_until_ready(m["test_loss"])
+    us = (time.perf_counter() - t0) / iters * 1e6
+    return [("surf/meta_step_n100_L10", us, "lagrangian+2nd_order_grads")]
+
+
+FIGS = {
+    "fig5": "benchmarks.fig5_convergence",
+    "fig6": "benchmarks.fig6_heterogeneous",
+    "fig7": "benchmarks.fig7_ablation",
+    "fig8": "benchmarks.fig8_async",
+    "roofline": "benchmarks.roofline_bench",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="kernels + udgd step only (skip figure sweeps)")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    rows = []
+    print("name,us_per_call,derived")
+    if only is None or "kernels" in only:
+        for r in bench_kernels():
+            rows.append(r)
+            print(f"{r[0]},{r[1]:.1f},{r[2]}", flush=True)
+    if only is None or "udgd" in only:
+        for r in bench_udgd_step():
+            rows.append(r)
+            print(f"{r[0]},{r[1]:.1f},{r[2]}", flush=True)
+    common.write_csv("microbench.csv", ["name", "us_per_call", "derived"],
+                     [[a, f"{b:.1f}", c] for a, b, c in rows])
+
+    if not args.quick:
+        import importlib
+        for name, mod in FIGS.items():
+            if only is not None and name not in only:
+                continue
+            t0 = time.time()
+            print(f"--- {name} ({mod}) ---", flush=True)
+            importlib.import_module(mod).main()
+            print(f"{name},{(time.time()-t0)*1e6:.0f},figure-complete",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Decentralized FL head-to-head (paper Fig. 5 left/middle, compressed):
+U-DGD trained via SURF vs DGD / DSGD / DFedAvgM on a 3-regular graph —
+prints accuracy at matched communication-round budgets.
+
+  PYTHONPATH=src python examples/decentralized_fl.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SURFConfig
+from repro.core import baselines as BL
+from repro.core import surf, unroll as U
+from repro.data import synthetic
+
+
+def main():
+    cfg = SURFConfig(n_agents=30, n_layers=8, filter_taps=2, feature_dim=32,
+                     n_classes=10, batch_per_agent=8, topology="regular",
+                     degree=3)
+    meta_train = synthetic.make_meta_dataset(cfg, 60, seed=0)
+    state, _, S = surf.train_surf(cfg, meta_train, steps=800, log_every=0)
+    test = synthetic.make_meta_dataset(cfg, 5, seed=42)
+
+    res = surf.evaluate_surf(cfg, state, S, test)
+    budget = cfg.n_layers * cfg.filter_taps
+    print(f"U-DGD(SURF)  @{budget:3d} rounds: acc={res['final_acc']:.3f}")
+
+    lrs = {"dgd": 0.5, "dsgd": 0.2, "dfedavgm": 0.05}
+    for name, fn in BL.DECENTRALIZED.items():
+        accs_at_budget, accs_200 = [], []
+        for d in test:
+            batch = {k: jnp.asarray(v) for k, v in d.items()}
+            W0 = U.sample_w0(jax.random.PRNGKey(0), cfg)
+            out = fn(S, W0, batch, jax.random.PRNGKey(1), cfg, rounds=200,
+                     lr=lrs[name])
+            acc = np.asarray(out["acc"])
+            accs_at_budget.append(acc[budget - 1])
+            accs_200.append(acc[-1])
+        print(f"{name:12s} @{budget:3d} rounds: "
+              f"acc={np.mean(accs_at_budget):.3f}   "
+              f"@200 rounds: acc={np.mean(accs_200):.3f}")
+    print("\n(The paper's claim: U-DGD at ~20 rounds beats baselines at "
+          "200 — check the first column against the last.)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: meta-train a U-DGD optimizer with SURF in ~1 minute on CPU,
+then use it to 'train' a fresh downstream classifier in 10 unrolled layers
+(= 20 communication rounds) — the paper's core loop end to end.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs.base import SURFConfig
+from repro.core import surf
+from repro.data import synthetic
+
+
+def main():
+    # A small decentralized FL problem: 20 agents on a 3-regular graph,
+    # each holding 45 train / 15 test examples of 32-d frozen features.
+    cfg = SURFConfig(n_agents=20, n_layers=8, filter_taps=2, feature_dim=32,
+                     n_classes=10, batch_per_agent=8, topology="regular",
+                     degree=3, eps=0.01)
+
+    print("1) building meta-training pool (class-imbalanced datasets)...")
+    meta_train = synthetic.make_meta_dataset(cfg, 20, seed=0)
+
+    print("2) meta-training U-DGD via SURF (primal-dual, Algorithm 1)...")
+    state, hist, S = surf.train_surf(cfg, meta_train, steps=250,
+                                     log_every=50)
+    for h in hist:
+        print(f"   step {h['step']:4d}  test_acc={h['test_acc']:.3f}  "
+              f"slack_mean={h['slack_mean']:+.4f}  λ·1={h['lam_sum']:.4f}")
+
+    print("3) deploying the trained optimizer on UNSEEN downstream tasks...")
+    meta_test = synthetic.make_meta_dataset(cfg, 5, seed=123)
+    res = surf.evaluate_surf(cfg, state, S, meta_test)
+    for l, acc in enumerate(res["acc_per_layer"]):
+        rounds = (l + 1) * cfg.filter_taps
+        print(f"   layer {l+1:2d} ({rounds:2d} comm rounds): "
+              f"acc={acc:.3f}")
+    print(f"\nfinal accuracy after {cfg.n_layers * cfg.filter_taps} "
+          f"communication rounds: {res['final_acc']:.3f}")
+    assert res["final_acc"] > 0.5
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

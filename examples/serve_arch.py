@@ -1,0 +1,17 @@
+"""Serve an assigned architecture with batched requests: prefill + greedy
+decode through the KV/state-cache path (reduced config on CPU; the full
+configs lower on the production mesh via launch/dryrun.py).
+
+  PYTHONPATH=src python examples/serve_arch.py --arch jamba-1.5-large-398b
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    args = sys.argv[1:] or ["--arch", "jamba-1.5-large-398b", "--batch", "2",
+                            "--prompt-len", "12", "--tokens", "8"]
+    serve_main(args)

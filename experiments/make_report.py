@@ -1,0 +1,57 @@
+"""Regenerate the EXPERIMENTS.md §Roofline tables from the dry-run JSONs.
+
+  PYTHONPATH=src python experiments/make_report.py [--mesh 16x16] [--tag '']
+"""
+import argparse
+import glob
+import json
+import os
+
+SH_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def fmt(x, p=3):
+    if x == 0:
+        return "0"
+    if abs(x) < 0.001:
+        return f"{x:.1e}"
+    return f"{x:.{p}f}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "dryrun"))
+    args = ap.parse_args()
+
+    recs = {}
+    for p in glob.glob(os.path.join(args.dir, "*.json")):
+        with open(p) as f:
+            r = json.load(f)
+        recs[(r["arch"], r["shape"], r["mesh"], r.get("tag", "") or "")] = r
+
+    print("| arch | shape | dominant | compute s | memory s | collective s"
+          " | useful-FLOP | GB/dev |")
+    print("|---|---|---|---|---|---|---|---|")
+    for (a, s, m, t), r in sorted(
+            recs.items(), key=lambda kv: (kv[0][0],
+                                          SH_ORDER.get(kv[0][1], 9))):
+        if m != args.mesh or t != args.tag:
+            continue
+        if r["status"] == "skipped":
+            print(f"| {a} | {s} | *skipped* | — | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {a} | {s} | ERROR | {r.get('error','')[:40]} | | | | |")
+            continue
+        rl = r["roofline"]
+        print(f"| {a} | {s} | **{rl['dominant']}** | {fmt(rl['compute_s'])}"
+              f" | {fmt(rl['memory_s'])} | {fmt(rl['collective_s'])} |"
+              f" {fmt(rl.get('useful_flop_ratio', 0), 2)} |"
+              f" {r['memory']['per_device_total']/1e9:.1f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.io import save, restore, latest_step
+
+__all__ = ["save", "restore", "latest_step"]

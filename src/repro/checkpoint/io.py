@@ -1,0 +1,60 @@
+"""Pytree checkpointing: npz payload + json manifest (no orbax offline).
+
+Leaves are saved as flat ``k<i>`` arrays; the manifest stores the treedef
+(via jax.tree_util serialization of key paths) and leaf dtypes so restore
+round-trips exactly, including bf16 (stored as uint16 views).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _path_str(path):
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def save(path, tree, step=None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    arrays, manifest = {}, {"leaves": [], "step": step}
+    for i, (p, leaf) in enumerate(leaves_with_paths):
+        arr = np.asarray(leaf)
+        dt = str(arr.dtype)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+            dt = "bfloat16"
+        arrays[f"k{i}"] = arr
+        manifest["leaves"].append({"path": _path_str(p), "dtype": dt})
+    np.savez(path + ".npz", **arrays)
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f)
+
+
+def restore(path, like):
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    data = np.load(path + ".npz")
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    assert len(leaves) == len(manifest["leaves"]), \
+        f"checkpoint has {len(manifest['leaves'])} leaves, template {len(leaves)}"
+    out = []
+    for i, (leaf, meta) in enumerate(zip(leaves, manifest["leaves"])):
+        arr = data[f"k{i}"]
+        if meta["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        out.append(jnp.asarray(arr).astype(leaf.dtype).reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(directory, prefix="ckpt_"):
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(f[len(prefix):-5]) for f in os.listdir(directory)
+             if f.startswith(prefix) and f.endswith(".json")]
+    return max(steps) if steps else None

@@ -1,0 +1,29 @@
+"""Config registry: ``get_config('<arch-id>')`` and the 4 input shapes."""
+from repro.configs.base import (ArchConfig, AttnConfig, MoEConfig, SSMConfig,
+                                ShapeConfig, SURFConfig)
+from repro.configs.shapes import SHAPES, get_shape
+
+from repro.configs import (qwen2_72b, qwen3_4b, jamba_1_5_large_398b,
+                           llama4_scout_17b_a16e, qwen1_5_32b, rwkv6_1_6b,
+                           whisper_small, deepseek_moe_16b, chameleon_34b,
+                           gemma3_27b, surf_paper)
+
+ARCHS = {
+    m.CONFIG.name: m.CONFIG
+    for m in (qwen2_72b, qwen3_4b, jamba_1_5_large_398b,
+              llama4_scout_17b_a16e, qwen1_5_32b, rwkv6_1_6b, whisper_small,
+              deepseek_moe_16b, chameleon_34b, gemma3_27b)
+}
+
+ARCH_IDS = tuple(sorted(ARCHS))
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+__all__ = ["ArchConfig", "AttnConfig", "MoEConfig", "SSMConfig",
+           "ShapeConfig", "SURFConfig", "SHAPES", "get_shape", "ARCHS",
+           "ARCH_IDS", "get_config", "surf_paper"]

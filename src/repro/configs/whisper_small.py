@@ -1,0 +1,18 @@
+"""Whisper-small [arXiv:2212.04356] — encoder-decoder; conv/mel frontend is
+a STUB per the audio carve-out (input_specs provides (B, 1500, d) frame
+embeddings). 12 encoder + 12 decoder layers, d_model=768, MHA, learned
+positions in the real model (sinusoidal fallback used beyond 448 for the
+structural decode_32k dry-run; see DESIGN.md).
+"""
+from repro.configs.base import ArchConfig, AttnConfig
+
+CONFIG = ArchConfig(
+    name="whisper-small", family="audio", n_layers=12, d_model=768,
+    d_ff=3072, vocab=51865,
+    attn=AttnConfig(n_heads=12, n_kv_heads=12, d_head=64, qkv_bias=True),
+    layout="encdec", n_encoder_layers=12, frontend="audio_stub",
+    norm="layernorm", act="gelu", subquadratic=False, max_position=32768,
+    source="[arXiv:2212.04356]",
+)
+
+AUDIO_FRAMES = 1500  # 30 s of audio after the conv frontend (stubbed)

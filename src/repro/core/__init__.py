@@ -1,0 +1,8 @@
+# The paper's primary contribution: SURF — stochastic unrolled federated
+# learning. graph topologies / U-DGD unrolled layers / descending
+# constraints / primal-dual meta-training / FL baselines.
+from repro.core import (graph, task, unroll, constraints, trainer, baselines,
+                        surf)
+
+__all__ = ["graph", "task", "unroll", "constraints", "trainer", "baselines",
+           "surf"]

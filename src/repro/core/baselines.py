@@ -1,0 +1,189 @@
+"""FL baselines the paper compares against (Fig. 5, App. D.2).
+
+Decentralized: DGD (full-batch local grad, eq. 10), DSGD (1-sample
+stochastic grad), DFedAvgM (6 local momentum steps between mixings,
+Sun et al. 2023).
+Classical/star: FedAvg, FedProx (proximal local objective), SCAFFOLD
+(control variates). MOON and FedDyn are omitted (contrastive /
+dynamic-regularizer machinery is orthogonal to the convergence-rate claim
+we validate; noted in EXPERIMENTS.md).
+
+All operate on the same softmax-head task as U-DGD; every mixing with the
+graph (or server round-trip) counts as ONE communication round so the
+x-axes match the paper's figures.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SURFConfig
+from repro.core import task as T
+
+
+def _sample_batch(key, Xtr, Ytr, b):
+    n, m = Ytr.shape
+    idx = jax.random.randint(key, (n, b), 0, m)
+    Xb = jnp.take_along_axis(Xtr, idx[..., None], axis=1)
+    Yb = jnp.take_along_axis(Ytr, idx, axis=1)
+    return Xb, Yb
+
+
+def _local_grads(W, Xb, Yb, cfg):
+    return jax.vmap(jax.grad(T.local_loss), (0, 0, 0, None, None))(
+        W, Xb, Yb, cfg.feature_dim, cfg.n_classes)
+
+
+def _metrics(W, batch, cfg):
+    return (T.fl_loss(W, batch["Xte"], batch["Yte"], cfg.feature_dim, cfg.n_classes),
+            T.fl_accuracy(W, batch["Xte"], batch["Yte"], cfg.feature_dim, cfg.n_classes))
+
+
+@partial(jax.jit, static_argnames=("cfg", "rounds", "lr"))
+def run_dgd(S, W0, batch, key, cfg: SURFConfig, rounds=200, lr=1e-3):
+    """W ← S W − β ∇f_local(W), full local batch each round."""
+    def body(W, _):
+        g = _local_grads(W, batch["Xtr"], batch["Ytr"], cfg)
+        W = S @ W - lr * g
+        return W, _metrics(W, batch, cfg)
+    W, (loss, acc) = jax.lax.scan(body, W0, None, length=rounds)
+    return {"loss": loss, "acc": acc}
+
+
+@partial(jax.jit, static_argnames=("cfg", "rounds", "lr"))
+def run_dsgd(S, W0, batch, key, cfg: SURFConfig, rounds=200, lr=1e-4):
+    """One-sample stochastic gradient per round."""
+    def body(carry, _):
+        W, k = carry
+        k, sub = jax.random.split(k)
+        Xb, Yb = _sample_batch(sub, batch["Xtr"], batch["Ytr"], 1)
+        g = _local_grads(W, Xb, Yb, cfg)
+        W = S @ W - lr * g
+        return (W, k), _metrics(W, batch, cfg)
+    (W, _), (loss, acc) = jax.lax.scan(body, (W0, key), None, length=rounds)
+    return {"loss": loss, "acc": acc}
+
+
+@partial(jax.jit, static_argnames=("cfg", "rounds", "lr", "local_steps", "beta"))
+def run_dfedavgm(S, W0, batch, key, cfg: SURFConfig, rounds=200, lr=1e-2,
+                 local_steps=6, beta=0.9):
+    """Decentralized FedAvg with momentum (Sun et al. 2023): 6 local
+    momentum SGD steps on mini-batches, then one graph mixing."""
+    def body(carry, _):
+        W, mom, k = carry
+        def local(carry2, _):
+            W_, m_, k_ = carry2
+            k_, sub = jax.random.split(k_)
+            Xb, Yb = _sample_batch(sub, batch["Xtr"], batch["Ytr"],
+                                   cfg.batch_per_agent)
+            g = _local_grads(W_, Xb, Yb, cfg)
+            m_ = beta * m_ + g
+            return (W_ - lr * m_, m_, k_), None
+        (W, mom, k), _ = jax.lax.scan(local, (W, mom, k), None,
+                                      length=local_steps)
+        W = S @ W
+        return (W, mom, k), _metrics(W, batch, cfg)
+    init = (W0, jnp.zeros_like(W0), key)
+    (W, _, _), (loss, acc) = jax.lax.scan(body, init, None, length=rounds)
+    return {"loss": loss, "acc": acc}
+
+
+# --------------------------------------------------------- classical (star)
+@partial(jax.jit, static_argnames=("cfg", "rounds", "lr", "local_steps",
+                                   "participate"))
+def run_fedavg(W0, batch, key, cfg: SURFConfig, rounds=25, lr=1e-1,
+               local_steps=6, participate=10):
+    """FedAvg with partial participation (paper: 10 agents/round)."""
+    n = cfg.n_agents
+    def body(carry, _):
+        w, k = carry                       # global weight (d,)
+        k, ks, kb = jax.random.split(k, 3)
+        sel = jax.random.permutation(ks, n)[:participate]
+        W_local = jnp.tile(w[None], (participate, 1))
+        Xs, Ys = batch["Xtr"][sel], batch["Ytr"][sel]
+        def local(W_, i):
+            kb_i = jax.random.fold_in(kb, i)
+            idx = jax.random.randint(kb_i, (participate, cfg.batch_per_agent),
+                                     0, Ys.shape[1])
+            Xb = jnp.take_along_axis(Xs, idx[..., None], axis=1)
+            Yb = jnp.take_along_axis(Ys, idx, axis=1)
+            g = jax.vmap(jax.grad(T.local_loss), (0, 0, 0, None, None))(
+                W_, Xb, Yb, cfg.feature_dim, cfg.n_classes)
+            return W_ - lr * g, None
+        W_local, _ = jax.lax.scan(local, W_local, jnp.arange(local_steps))
+        w = jnp.mean(W_local, axis=0)
+        Wfull = jnp.tile(w[None], (n, 1))
+        return (w, k), _metrics(Wfull, batch, cfg)
+    (w, _), (loss, acc) = jax.lax.scan(body, (W0[0], key), None, length=rounds)
+    return {"loss": loss, "acc": acc}
+
+
+@partial(jax.jit, static_argnames=("cfg", "rounds", "lr", "local_steps",
+                                   "participate", "mu"))
+def run_fedprox(W0, batch, key, cfg: SURFConfig, rounds=25, lr=1e-1,
+                local_steps=6, participate=10, mu=0.1):
+    """FedProx: local objective + (μ/2)‖w − w_global‖²."""
+    n = cfg.n_agents
+    def body(carry, _):
+        w, k = carry
+        k, ks, kb = jax.random.split(k, 3)
+        sel = jax.random.permutation(ks, n)[:participate]
+        W_local = jnp.tile(w[None], (participate, 1))
+        Xs, Ys = batch["Xtr"][sel], batch["Ytr"][sel]
+        def local(W_, i):
+            kb_i = jax.random.fold_in(kb, i)
+            idx = jax.random.randint(kb_i, (participate, cfg.batch_per_agent),
+                                     0, Ys.shape[1])
+            Xb = jnp.take_along_axis(Xs, idx[..., None], axis=1)
+            Yb = jnp.take_along_axis(Ys, idx, axis=1)
+            g = jax.vmap(jax.grad(T.local_loss), (0, 0, 0, None, None))(
+                W_, Xb, Yb, cfg.feature_dim, cfg.n_classes)
+            g = g + mu * (W_ - w[None])
+            return W_ - lr * g, None
+        W_local, _ = jax.lax.scan(local, W_local, jnp.arange(local_steps))
+        w = jnp.mean(W_local, axis=0)
+        Wfull = jnp.tile(w[None], (n, 1))
+        return (w, k), _metrics(Wfull, batch, cfg)
+    (w, _), (loss, acc) = jax.lax.scan(body, (W0[0], key), None, length=rounds)
+    return {"loss": loss, "acc": acc}
+
+
+@partial(jax.jit, static_argnames=("cfg", "rounds", "lr", "local_steps",
+                                   "participate"))
+def run_scaffold(W0, batch, key, cfg: SURFConfig, rounds=25, lr=1e-1,
+                 local_steps=6, participate=10):
+    """SCAFFOLD (Karimireddy et al. 2020) with option-II control variates."""
+    n, d = W0.shape
+    def body(carry, _):
+        w, c, ci, k = carry                # global w, global c, per-agent c_i
+        k, ks, kb = jax.random.split(k, 3)
+        sel = jax.random.permutation(ks, n)[:participate]
+        W_local = jnp.tile(w[None], (participate, 1))
+        Xs, Ys = batch["Xtr"][sel], batch["Ytr"][sel]
+        ci_sel = ci[sel]
+        def local(W_, i):
+            kb_i = jax.random.fold_in(kb, i)
+            idx = jax.random.randint(kb_i, (participate, cfg.batch_per_agent),
+                                     0, Ys.shape[1])
+            Xb = jnp.take_along_axis(Xs, idx[..., None], axis=1)
+            Yb = jnp.take_along_axis(Ys, idx, axis=1)
+            g = jax.vmap(jax.grad(T.local_loss), (0, 0, 0, None, None))(
+                W_, Xb, Yb, cfg.feature_dim, cfg.n_classes)
+            return W_ - lr * (g - ci_sel + c[None]), None
+        W_local, _ = jax.lax.scan(local, W_local, jnp.arange(local_steps))
+        ci_new_sel = ci_sel - c[None] + (w[None] - W_local) / (local_steps * lr)
+        ci_new = ci.at[sel].set(ci_new_sel)
+        c_new = c + jnp.sum(ci_new_sel - ci_sel, axis=0) / n
+        w_new = w + jnp.mean(W_local - w[None], axis=0)
+        Wfull = jnp.tile(w_new[None], (n, 1))
+        return (w_new, c_new, ci_new, k), _metrics(Wfull, batch, cfg)
+    init = (W0[0], jnp.zeros((d,)), jnp.zeros((n, d)), key)
+    (w, _, _, _), (loss, acc) = jax.lax.scan(body, init, None, length=rounds)
+    return {"loss": loss, "acc": acc}
+
+
+DECENTRALIZED = {"dgd": run_dgd, "dsgd": run_dsgd, "dfedavgm": run_dfedavgm}
+CLASSICAL = {"fedavg": run_fedavg, "fedprox": run_fedprox,
+             "scaffold": run_scaffold}

@@ -1,0 +1,41 @@
+"""Descending constraints and the empirical Lagrangian (paper §4, eq. 3).
+
+constraint l:  E[ ‖∇f(W_l)‖ − (1−ε) ‖∇f(W_{l−1})‖ ] ≤ 0
+Lagrangian:    L̂(θ, λ) = Ê[f(Φ(D;θ))] + Σ_l λ_l Ê[slack_l]
+
+Gradient norms use *stochastic* gradients evaluated on each layer's own
+mini-batch (the stochastic-unrolling uncertainty the theory handles).
+∇_θ of the Lagrangian therefore differentiates through ‖∇_W f‖ —
+grad-of-grad, handled natively by JAX.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SURFConfig
+from repro.core import task as T
+
+
+def layer_grad_norms(W_all, Xl, Yl, cfg: SURFConfig):
+    """‖∇f(W_l)‖ for l=0..L. W_all (L+1,n,d); Xl (L,n,b,F); Yl (L,n,b).
+    Layer l>0 is evaluated on the batch that produced it (B_l); W_0 on B_1."""
+    Xe = jnp.concatenate([Xl[:1], Xl], axis=0)        # (L+1, n, b, F)
+    Ye = jnp.concatenate([Yl[:1], Yl], axis=0)
+    def gn(W, X, Y):
+        return T.grad_norm(W, X, Y, cfg.feature_dim, cfg.n_classes)
+    return jax.vmap(gn)(W_all, Xe, Ye)                # (L+1,)
+
+
+def slacks(gnorms, eps):
+    """slack_l = ‖∇f(W_l)‖ − (1−ε)‖∇f(W_{l−1})‖, l=1..L."""
+    return gnorms[1:] - (1.0 - eps) * gnorms[:-1]
+
+
+def lagrangian(test_loss, slack, lam):
+    return test_loss + jnp.sum(lam * slack)
+
+
+def dual_ascent(lam, slack, lr):
+    """λ ← [λ + μ_λ slack]_+  (eq. 7)."""
+    return jnp.maximum(lam + lr * slack, 0.0)

@@ -1,0 +1,90 @@
+"""Public SURF API: build the FL problem, meta-train U-DGD, evaluate, and
+the asynchronous-agent perturbation study (paper App. D).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SURFConfig
+from repro.core import graph as G
+from repro.core import task as T
+from repro.core import trainer as TR
+from repro.core import unroll as U
+
+
+def make_problem(cfg: SURFConfig, seed=0):
+    """Returns (adjacency, mixing matrix S as jnp array)."""
+    A, S = G.build_topology(cfg.topology, cfg.n_agents, degree=cfg.degree,
+                            p=cfg.er_p, seed=seed)
+    return A, jnp.asarray(S, jnp.float32)
+
+
+def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
+               constrained=True, activation="relu", log_every=10,
+               init="dgd"):
+    _, S = make_problem(cfg, seed)
+    key = jax.random.PRNGKey(seed)
+    state, hist = TR.train(cfg, S, meta_datasets, steps, key,
+                           constrained=constrained, activation=activation,
+                           log_every=log_every, init=init)
+    return state, hist, S
+
+
+def evaluate_surf(cfg: SURFConfig, state, S, datasets, seed=0,
+                  activation="relu"):
+    """Average per-layer loss/acc trajectories over downstream datasets."""
+    ev = TR.make_eval(cfg, S, activation=activation)
+    key = jax.random.PRNGKey(1000 + seed)
+    outs = []
+    for i, d in enumerate(datasets):
+        key, sub = jax.random.split(key)
+        outs.append(ev(state.theta, d, sub))
+    stack = {k: np.stack([np.asarray(o[k]) for o in outs]) for k in outs[0]}
+    return {k: v.mean(0) for k, v in stack.items()}
+
+
+def evaluate_async(cfg: SURFConfig, state, S, datasets, n_async, seed=0,
+                   activation="relu"):
+    """Asynchronous communications (paper Fig. 8): ``n_async`` randomly
+    chosen agents fail to update in sync — their neighbours consume the
+    estimate communicated at the previous layer (one-layer-stale rows in
+    the graph filter input)."""
+    layer_fn = U.udgd_layer_star if cfg.topology == "star" else U.udgd_layer
+
+    @jax.jit
+    def run(theta, batch, key, async_mask):
+        kw, kb = jax.random.split(key)
+        W0 = U.sample_w0(kw, cfg)
+        Xl, Yl = U.sample_layer_batches(kb, batch["Xtr"], batch["Ytr"], cfg)
+
+        def body(carry, xs):
+            W_prev, W = carry
+            p_l, Xb, Yb = xs
+            W_seen = jnp.where(async_mask[:, None], W_prev, W)
+            Wn = layer_fn(p_l, S, W_seen, Xb, Yb, cfg, activation)
+            # async agents also skip their own update this layer
+            Wn = jnp.where(async_mask[:, None], W, Wn)
+            loss = T.fl_loss(Wn, batch["Xte"], batch["Yte"],
+                             cfg.feature_dim, cfg.n_classes)
+            acc = T.fl_accuracy(Wn, batch["Xte"], batch["Yte"],
+                                cfg.feature_dim, cfg.n_classes)
+            return (W, Wn), (loss, acc)
+        (_, W_L), (losses, accs) = jax.lax.scan(body, (W0, W0),
+                                                (theta, Xl, Yl))
+        return losses, accs
+
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(2000 + seed)
+    outs = []
+    for d in datasets:
+        mask = np.zeros(cfg.n_agents, bool)
+        mask[rng.choice(cfg.n_agents, n_async, replace=False)] = True
+        key, sub = jax.random.split(key)
+        losses, accs = run(state.theta, d, sub, jnp.asarray(mask))
+        outs.append((np.asarray(losses), np.asarray(accs)))
+    losses = np.mean([o[0] for o in outs], axis=0)
+    accs = np.mean([o[1] for o in outs], axis=0)
+    return {"loss_per_layer": losses, "acc_per_layer": accs,
+            "final_loss": losses[-1], "final_acc": accs[-1]}

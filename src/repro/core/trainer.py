@@ -1,0 +1,132 @@
+"""Primal-dual meta-training of U-DGD (paper Algorithm 1 + Figure 3).
+
+Each meta-step: sample one downstream dataset D_q, sample W_0 ~ N(μ0, σ0²I)
+and L per-layer mini-batches from D_q's training examples, run the unrolled
+network, evaluate the test loss f(W_L) on D_q's held-out examples, add the
+λ-weighted descending-constraint slacks, take an ADAM step on θ (eq. 6) and
+a projected ascent step on λ (eq. 7).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SURFConfig
+from repro.core import constraints as C
+from repro.core import task as T
+from repro.core import unroll as U
+from repro.optim import adam, apply_updates, clip_by_global_norm
+
+
+class TrainState(NamedTuple):
+    theta: dict
+    lam: jnp.ndarray
+    opt_state: dict
+    step: jnp.ndarray
+
+
+def init_state(key, cfg: SURFConfig, init="dgd"):
+    theta = U.init_udgd(key, cfg, init=init)
+    opt = adam(cfg.lr_theta)
+    return TrainState(theta=theta, lam=jnp.zeros((cfg.n_layers,)),
+                      opt_state=opt.init(theta), step=jnp.zeros((), jnp.int32))
+
+
+def make_meta_step(cfg: SURFConfig, S, *, constrained=True,
+                   activation="relu", star=None, mix_fn=None):
+    """Build the jitted meta-training step.
+
+    ``constrained=False`` gives the ablation of Appendix D (λ frozen at 0).
+    ``star``: override star-topology handling (defaults to cfg.topology).
+    ``mix_fn``: override the dense graph filter (ring ppermute path).
+    """
+    opt = adam(cfg.lr_theta)
+    use_star = cfg.topology == "star" if star is None else star
+    layer_fn = U.udgd_layer_star if use_star else U.udgd_layer
+
+    def forward(theta, W0, Xl, Yl):
+        def body(W, xs):
+            p_l, Xb, Yb = xs
+            Wn = layer_fn(p_l, S, W, Xb, Yb, cfg, activation, mix_fn=mix_fn)
+            return Wn, Wn
+        W_L, Ws = jax.lax.scan(body, W0, (theta, Xl, Yl))
+        return W_L, jnp.concatenate([W0[None], Ws], axis=0)
+
+    def lagrangian_fn(theta, lam, W0, Xl, Yl, Xte, Yte):
+        W_L, W_all = forward(theta, W0, Xl, Yl)
+        test_loss = T.fl_loss(W_L, Xte, Yte, cfg.feature_dim, cfg.n_classes)
+        gnorms = C.layer_grad_norms(W_all, Xl, Yl, cfg)
+        slack = C.slacks(gnorms, cfg.eps)
+        lag = C.lagrangian(test_loss, lam, slack) if constrained else test_loss
+        return lag, (test_loss, slack, gnorms, W_L)
+
+    @jax.jit
+    def meta_step(state: TrainState, batch, key):
+        """batch: dict with Xtr (n,m,F), Ytr (n,m), Xte (n,t,F), Yte (n,t)."""
+        kw, kb = jax.random.split(key)
+        W0 = U.sample_w0(kw, cfg)
+        Xl, Yl = U.sample_layer_batches(kb, batch["Xtr"], batch["Ytr"], cfg)
+        (lag, (tl, slack, gnorms, W_L)), grads = jax.value_and_grad(
+            lagrangian_fn, has_aux=True)(state.theta, state.lam, W0, Xl, Yl,
+                                         batch["Xte"], batch["Yte"])
+        grads, gn = clip_by_global_norm(grads, 10.0)
+        upd, opt_state = opt.update(grads, state.opt_state)
+        theta = apply_updates(state.theta, upd)
+        lam = (C.dual_ascent(state.lam, slack, cfg.lr_lambda)
+               if constrained else state.lam)
+        test_acc = T.fl_accuracy(W_L, batch["Xte"], batch["Yte"],
+                                 cfg.feature_dim, cfg.n_classes)
+        metrics = {"lagrangian": lag, "test_loss": tl, "test_acc": test_acc,
+                   "slack_max": jnp.max(slack), "slack_mean": jnp.mean(slack),
+                   "gnorm_first": gnorms[0], "gnorm_last": gnorms[-1],
+                   "grad_norm": gn, "lam_sum": jnp.sum(lam)}
+        return TrainState(theta, lam, opt_state, state.step + 1), metrics
+
+    return meta_step, forward
+
+
+def make_eval(cfg: SURFConfig, S, *, activation="relu", star=None):
+    """Per-layer loss/accuracy trajectory on a downstream dataset — the
+    evaluation used for every paper figure."""
+    use_star = cfg.topology == "star" if star is None else star
+    layer_fn = U.udgd_layer_star if use_star else U.udgd_layer
+
+    @jax.jit
+    def evaluate(theta, batch, key):
+        kw, kb = jax.random.split(key)
+        W0 = U.sample_w0(kw, cfg)
+        Xl, Yl = U.sample_layer_batches(kb, batch["Xtr"], batch["Ytr"], cfg)
+
+        def body(W, xs):
+            p_l, Xb, Yb = xs
+            Wn = layer_fn(p_l, S, W, Xb, Yb, cfg, activation)
+            loss = T.fl_loss(Wn, batch["Xte"], batch["Yte"],
+                             cfg.feature_dim, cfg.n_classes)
+            acc = T.fl_accuracy(Wn, batch["Xte"], batch["Yte"],
+                                cfg.feature_dim, cfg.n_classes)
+            return Wn, (loss, acc)
+        W_L, (losses, accs) = jax.lax.scan(body, W0, (theta, Xl, Yl))
+        return {"loss_per_layer": losses, "acc_per_layer": accs,
+                "final_loss": losses[-1], "final_acc": accs[-1]}
+
+    return evaluate
+
+
+def train(cfg: SURFConfig, S, meta_datasets, steps, key,
+          constrained=True, activation="relu", log_every=0, init="dgd"):
+    """Run Algorithm 1 for ``steps`` meta-iterations, cycling the
+    meta-training datasets. Returns (state, history)."""
+    state = init_state(key, cfg, init=init)
+    meta_step, _ = make_meta_step(cfg, S, constrained=constrained,
+                                  activation=activation)
+    hist = []
+    n_q = len(meta_datasets)
+    for t in range(steps):
+        key, sub = jax.random.split(key)
+        batch = meta_datasets[t % n_q]
+        state, m = meta_step(state, batch, sub)
+        if log_every and (t % log_every == 0 or t == steps - 1):
+            hist.append({k: float(v) for k, v in m.items()} | {"step": t})
+    return state, hist

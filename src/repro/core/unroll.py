@@ -1,0 +1,128 @@
+"""U-DGD: DGD unrolled into GNN layers (paper §5, eq. U-DGD).
+
+One unrolled layer at agent i:
+    w_{i,l} = [H_l(W_{l-1})]_i  −  σ( M_l [w_{i,l-1} ∥ b_{i,l}] + d_l )
+where H_l is a K-tap graph filter  H(W) = Σ_{k≤K} h_{k,l} S^k W  (K
+communication rounds) and the perceptron (M_l, d_l) is shared by all
+agents (⇒ permutation equivariance, Remark 5.1).
+
+The L layers are a ``lax.scan`` over stacked per-layer parameters; each
+layer consumes its own stochastic mini-batch (stochastic unrolling, §4).
+
+The classical-FL (star) variant of §5.2 is obtained by (a) a star
+topology S and (b) constraining K=1 — the server row of S aggregates,
+agents update locally.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SURFConfig
+from repro.core import task as T
+
+
+def graph_filter(S, W, h):
+    """Σ_k h_k S^k W, Horner form: K sparse-mixing rounds, not K matmul
+    powers. h (K+1,), S (n,n), W (n,d)."""
+    K = h.shape[0] - 1
+    Y = h[K] * W
+    for k in range(K - 1, -1, -1):
+        Y = S @ Y + h[k] * W
+    return Y
+
+
+def batch_vector(Xb, Yb, n_classes):
+    """Flatten an agent's mini-batch into the perceptron input b_i:
+    each example's features and one-hot label follow each other.
+    Xb (n, b, F), Yb (n, b) -> (n, b*(F+C))."""
+    oh = jax.nn.one_hot(Yb, n_classes, dtype=Xb.dtype)
+    packed = jnp.concatenate([Xb, oh], axis=-1)          # (n, b, F+C)
+    return packed.reshape(Xb.shape[0], -1)
+
+
+def perceptron_in_dim(cfg: SURFConfig) -> int:
+    return cfg.head_dim + cfg.batch_per_agent * (cfg.feature_dim + cfg.n_classes)
+
+
+def init_udgd(key, cfg: SURFConfig, dtype=jnp.float32, init="dgd"):
+    """Stacked per-layer parameters {h (L,K+1), M (L,din,d), d (L,d)}.
+
+    init='dgd' starts h at the DGD point (pure one-hop mixing h=[0,1,0..],
+    M near zero) — training starts at consensus dynamics. This is a
+    beyond-paper stabilisation; init='random' is the generic init the
+    paper's constraint-ablation story assumes (see fig7 benchmark).
+    """
+    L_, K = cfg.n_layers, cfg.filter_taps
+    d = cfg.head_dim
+    din = perceptron_in_dim(cfg)
+    k1, k2 = jax.random.split(key)
+    if init == "dgd":
+        h0 = jnp.zeros((L_, K + 1)).at[:, min(1, K)].set(1.0)
+        h = h0 + 0.01 * jax.random.normal(k1, (L_, K + 1))
+        M = 0.01 * jax.random.normal(k2, (L_, din, d)) * (din ** -0.5)
+    else:
+        h = 0.5 * jax.random.normal(k1, (L_, K + 1))
+        M = jax.random.normal(k2, (L_, din, d)) * (din ** -0.5)
+    dd = jnp.zeros((L_, d))
+    return {"h": h.astype(dtype), "M": M.astype(dtype), "d": dd.astype(dtype)}
+
+
+def udgd_layer(params_l, S, W, Xb, Yb, cfg: SURFConfig, activation="relu",
+               mix_fn=None):
+    """One unrolled layer. W (n,d); Xb (n,b,F); Yb (n,b). ``mix_fn(W, h)``
+    overrides the dense graph filter (e.g. the ring ppermute path)."""
+    h, M, d = params_l["h"], params_l["M"], params_l["d"]
+    mixed = mix_fn(W, h) if mix_fn is not None else graph_filter(S, W, h)
+    b_in = batch_vector(Xb, Yb, cfg.n_classes)
+    z = jnp.concatenate([W, b_in], axis=-1) @ M + d      # (n, d)
+    act = {"relu": jax.nn.relu, "tanh": jnp.tanh}[activation]
+    return mixed - act(z)
+
+
+def udgd_forward(params, S, W0, Xl, Yl, cfg: SURFConfig, activation="relu"):
+    """Run L layers. Xl (L,n,b,F), Yl (L,n,b).
+    Returns (W_L, W_all (L+1,n,d) including W0)."""
+    def body(W, xs):
+        p_l, Xb, Yb = xs
+        Wn = udgd_layer(p_l, S, W, Xb, Yb, cfg, activation)
+        return Wn, Wn
+    W_L, Ws = jax.lax.scan(body, W0, (params, Xl, Yl))
+    W_all = jnp.concatenate([W0[None], Ws], axis=0)
+    return W_L, W_all
+
+
+def star_filter_mask(cfg: SURFConfig):
+    """§5.2: in classical FL the server (node 0) has no local data — its
+    perceptron update is masked out; it only aggregates."""
+    mask = jnp.ones((cfg.n_agents, 1))
+    if cfg.topology == "star":
+        mask = mask.at[0, 0].set(0.0)
+    return mask
+
+
+def udgd_layer_star(params_l, S, W, Xb, Yb, cfg: SURFConfig,
+                    activation="relu", mix_fn=None):
+    """Classical-FL layer: server node only aggregates (no local update)."""
+    h, M, d = params_l["h"], params_l["M"], params_l["d"]
+    mixed = mix_fn(W, h) if mix_fn is not None else graph_filter(S, W, h)
+    b_in = batch_vector(Xb, Yb, cfg.n_classes)
+    z = jnp.concatenate([W, b_in], axis=-1) @ M + d
+    act = {"relu": jax.nn.relu, "tanh": jnp.tanh}[activation]
+    return mixed - star_filter_mask(cfg) * act(z)
+
+
+def sample_w0(key, cfg: SURFConfig):
+    return cfg.w0_mean + cfg.w0_std * jax.random.normal(
+        key, (cfg.n_agents, cfg.head_dim))
+
+
+def sample_layer_batches(key, Xtr, Ytr, cfg: SURFConfig):
+    """Stochastic unrolling: one independent uniform mini-batch per layer per
+    agent. Xtr (n, m, F), Ytr (n, m) -> (L, n, b, F), (L, n, b)."""
+    L_, n, b = cfg.n_layers, cfg.n_agents, cfg.batch_per_agent
+    m = Xtr.shape[1]
+    idx = jax.random.randint(key, (L_, n, b), 0, m)
+    Xl = jnp.take_along_axis(Xtr[None].repeat(L_, 0), idx[..., None], axis=2)
+    Yl = jnp.take_along_axis(Ytr[None].repeat(L_, 0), idx, axis=2)
+    return Xl, Yl

@@ -1,0 +1,3 @@
+from repro.data import synthetic, partition, pipeline
+
+__all__ = ["synthetic", "partition", "pipeline"]

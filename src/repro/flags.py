@@ -1,0 +1,73 @@
+"""Feature flags for the §Perf hillclimb — every optimization is
+toggleable so the paper-faithful/naive BASELINE stays reproducible and
+each EXPERIMENTS.md §Perf row is a single-flag diff.
+
+Flags are set via ``repro.flags.set_flags(...)`` or the dry-run CLI
+(--opts blockwise_prefill,embed_d_sharded,...).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class Flags:
+    # prefill attention computed in q-chunks (online per-chunk masking,
+    # window layers slice kv) instead of materializing S×S scores.
+    blockwise_prefill: bool = False
+    q_chunk: int = 512
+    # embedding table (V, d): shard d over 'model' instead of V (kills the
+    # SPMD full-rematerialization of the vocab-sharded gather).
+    embed_d_sharded: bool = False
+    # decode: keep weights replicated over the data axes (weight-stationary
+    # serving) when the per-chip model-sharded weights fit; removes the
+    # per-token FSDP all-gathers.
+    serve_weight_stationary: bool = False
+    # sharding hints on SSM/RWKV scan states (keep heads on 'model').
+    ssm_shard_hints: bool = False
+    # gradient-accumulation target: local microbatch sequences per step.
+    microbatch_target: int = 2
+    # nested (sqrt) remat: group the layer scan into outer scan of
+    # checkpointed inner scans of this length — residual storage drops from
+    # O(n_layers) to O(n_layers/g + g) hiddens at ~+33% recompute.
+    nested_remat_group: int = 1
+    # chunked cross-entropy: compute logits+CE per sequence chunk under
+    # remat instead of materializing the full (B, S, V) f32 logits
+    # (the memory whale at V≈152k).
+    chunked_ce: int = 0          # 0 = off; else chunk length
+    # Megatron col/row-parallel pairing by parameter NAME: wq/wk/wv/wg/wu
+    # shard model on the output dim, wo/wd on the input (contraction) dim.
+    # Without it, square projections (qwen2's 8192x8192 wo) tie-break onto
+    # the output dim and the residual stream flows model-sharded —
+    # measured 3.5 TB/chip of per-layer activation re-gathers.
+    megatron_pairs: bool = False
+    # Megatron sequence parallelism: residual stream sharded over the
+    # SEQUENCE dim on the model axis between blocks (wsc hints), turning
+    # the row-parallel all-reduces into reduce-scatter/all-gather pairs
+    # and dividing activation memory by the model-parallel degree.
+    seq_parallel: bool = False
+
+
+_FLAGS = Flags()
+
+
+def get() -> Flags:
+    return _FLAGS
+
+
+def set_flags(**kw) -> Flags:
+    global _FLAGS
+    _FLAGS = replace(_FLAGS, **kw)
+    return _FLAGS
+
+
+def parse_opts(opts: str) -> Flags:
+    """'blockwise_prefill,serve_weight_stationary,microbatch_target=4'."""
+    kw = {}
+    for item in filter(None, opts.split(",")):
+        if "=" in item:
+            k, v = item.split("=", 1)
+            kw[k] = int(v)
+        else:
+            kw[item] = True
+    return set_flags(**kw)

@@ -1,0 +1,9 @@
+# Pallas TPU kernels for the compute hot-spots (DESIGN.md §2):
+#   graph_filter/    — fused K-hop Horner graph filter (paper's comm step)
+#   flash_attention/ — blocked online-softmax attention (prefill hot spot)
+#   ssm_scan/        — RWKV6 data-dependent-decay recurrence
+# Each subpackage: kernel.py (pl.pallas_call + BlockSpec) + ops.py (jit'd
+# wrapper w/ custom VJP where training needs it) + ref.py (pure-jnp oracle).
+from repro.kernels import graph_filter, flash_attention, ssm_scan
+
+__all__ = ["graph_filter", "flash_attention", "ssm_scan"]

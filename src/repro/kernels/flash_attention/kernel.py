@@ -1,0 +1,113 @@
+"""FlashAttention Pallas TPU kernel: blocked online-softmax with causal +
+sliding-window masking and GQA head mapping.
+
+TPU adaptation (vs the CUDA original): no warp-level shuffles — the online
+softmax state (m, l, acc) lives in VMEM scratch and persists across the
+sequential kv-block grid dimension (TPU grids execute sequentially per
+core, which replaces the CUDA inner loop). Block shapes are MXU-aligned
+(q/kv blocks 128×dh with dh a multiple of 128 — padded by ops.py).
+Fully-masked kv blocks are skipped via ``pl.when`` on the *block-level*
+causal/window bounds, so local layers do O(S·W) work, not O(S²).
+
+Grid: (B, H, Sq/bq, Skv/bkv) — kv innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bq, bkv, causal, window, scale, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+    nkv = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo = i * bq
+    q_hi = q_lo + bq - 1
+    k_lo = j * bkv
+    k_hi = k_lo + bkv - 1
+    # block-level reachability: causal => need k_lo <= q_hi;
+    # window   => need k_hi > q_lo - window
+    live = True
+    if causal:
+        live = k_lo <= q_hi
+    if window:
+        live = jnp.logical_and(live, k_hi > q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bkv, dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qi = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kj = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = jnp.ones((bq, bkv), bool)
+        if causal:
+            mask &= kj <= qi
+        if window:
+            mask &= kj > qi - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == nkv - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, window=0,
+                           block_q=128, block_kv=128, scale=None,
+                           interpret=True):
+    """q (B,H,Sq,dh); k/v (B,KV,Skv,dh) — pre-padded by ops.py. ``scale``
+    lets the wrapper keep the softmax scale of the TRUE head_dim when dh is
+    zero-padded to lane width."""
+    B, H, Sq, dh = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    assert Sq % bq == 0 and Skv % bkv == 0
+    grid = (B, H, Sq // bq, Skv // bkv)
+    scale = dh ** -0.5 if scale is None else scale
+    return pl.pallas_call(
+        functools.partial(_kernel, bq, bkv, causal, window, scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bkv, dh),
+                         lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bkv, dh),
+                         lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

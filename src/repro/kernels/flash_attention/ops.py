@@ -1,0 +1,38 @@
+"""jit'd wrapper: pads sequence to block multiples and head_dim up to the
+128-lane width. Zero-padded head dims change nothing (zero dot
+contributions; softmax scale is passed explicitly with the TRUE head_dim).
+Zero-padded kv positions sit at sequence indices >= the real length, so the
+causal mask removes them; the non-causal path therefore requires exact kv
+divisibility (asserted)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_kv",
+                                   "interpret"))
+def flash_attention(q, k, v, causal=True, window=0, block_q=128,
+                    block_kv=128, interpret=True):
+    """q (B,H,Sq,dh); k/v (B,KV,Skv,dh). Returns (B,H,Sq,dh)."""
+    B, H, Sq, dh = q.shape
+    Skv = k.shape[2]
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    sq_pad = (-Sq) % bq
+    skv_pad = (-Skv) % bkv
+    if skv_pad and not causal:
+        raise ValueError("non-causal attention requires Skv % block_kv == 0")
+    dh_target = dh if dh % 128 == 0 else dh + ((-dh) % 128)
+    dh_pad = dh_target - dh
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sq_pad), (0, dh_pad)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, skv_pad), (0, dh_pad)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, skv_pad), (0, dh_pad)))
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                                 block_q=bq, block_kv=bkv,
+                                 scale=dh ** -0.5, interpret=interpret)
+    return out[:, :, :Sq, :dh]

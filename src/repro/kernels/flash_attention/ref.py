@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: full softmax attention with causal + sliding-window
+masks and GQA, matching the kernel's (B, H, S, dh) layout."""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q (B,H,Sq,dh); k/v (B,KV,Skv,dh). H % KV == 0. window=0 => global."""
+    B, H, Sq, dh = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Sq, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    logits = jnp.einsum("bkgqd,bksd->bkgqs", qg, kf) * dh ** -0.5
+    qi = jnp.arange(Sq)[:, None]
+    kj = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((Sq, k.shape[2]), bool)
+    if causal:
+        mask &= kj <= qi
+    if window:
+        mask &= kj > qi - window
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, Sq, dh).astype(q.dtype)

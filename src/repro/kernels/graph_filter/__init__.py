@@ -1,0 +1,4 @@
+from repro.kernels.graph_filter.ops import graph_filter
+from repro.kernels.graph_filter.ref import graph_filter_ref
+
+__all__ = ["graph_filter", "graph_filter_ref"]

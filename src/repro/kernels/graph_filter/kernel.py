@@ -1,0 +1,50 @@
+"""Fused K-hop graph filter Pallas TPU kernel (the paper's per-layer
+communication hot spot, DESIGN.md §3).
+
+TPU adaptation: the naive implementation does K separate HBM round trips
+(S @ Y each hop). Here S (n×n, the mixing matrix of up to ~1k agents)
+stays resident in VMEM across ALL K hops while W is streamed in
+MXU-aligned column blocks; the Horner recursion runs entirely in VMEM.
+Arithmetic intensity per W block rises from O(1) to O(K·n) flops/byte.
+
+Grid: (d // bd,). Block shapes: S full (n,n); W/Y (n, bd); taps (K+1, 1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(K, h_ref, s_ref, w_ref, o_ref):
+    S = s_ref[...]
+    W = w_ref[...].astype(jnp.float32)
+    Y = h_ref[K, 0] * W
+    for k in range(K - 1, -1, -1):
+        Y = jnp.dot(S, Y, preferred_element_type=jnp.float32) + h_ref[k, 0] * W
+    o_ref[...] = Y.astype(o_ref.dtype)
+
+
+def graph_filter_pallas(h, S, W, *, block_d=128, interpret=True):
+    """h (K+1,), S (n,n) f32, W (n,d). n and d must be padded by ops.py to
+    (8, 128) multiples. Returns Σ_k h_k S^k W with f32 accumulation."""
+    K = h.shape[0] - 1
+    n, d = W.shape
+    bd = min(block_d, d)
+    assert d % bd == 0, (d, bd)
+    grid = (d // bd,)
+    return pl.pallas_call(
+        functools.partial(_kernel, K),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K + 1, 1), lambda j: (0, 0)),
+            pl.BlockSpec((n, n), lambda j: (0, 0)),
+            pl.BlockSpec((n, bd), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((n, bd), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, d), W.dtype),
+        interpret=interpret,
+    )(h.reshape(-1, 1).astype(jnp.float32), S.astype(jnp.float32), W)

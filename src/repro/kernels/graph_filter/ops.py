@@ -1,0 +1,67 @@
+"""jit'd public wrapper with a custom VJP (the unrolled optimizer trains
+THROUGH the graph filter, eq. 6).
+
+  Y = Σ_k h_k S^k W
+  ∂L/∂W = Σ_k h_k (Sᵀ)^k Ḡ          — a graph filter with Sᵀ (same kernel!)
+  ∂L/∂h_k = ⟨Ḡ, S^k W⟩
+  ∂L/∂S = Σ_k h_k Σ_{a+b=k−1} (Sᵀ)^a Ḡ (S^b W)ᵀ
+
+Padding note: zero-padded agent rows of W and zero rows/cols of S leave
+real outputs untouched, so pad→kernel→slice is exact.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.graph_filter.kernel import graph_filter_pallas
+
+
+def _pad_call(h, S, W, block_d, interpret):
+    n, d = W.shape
+    n_pad = (-n) % 8
+    d_pad = (-d) % 128
+    Sp = jnp.pad(S, ((0, n_pad), (0, n_pad)))
+    Wp = jnp.pad(W, ((0, n_pad), (0, d_pad)))
+    Y = graph_filter_pallas(h, Sp, Wp, block_d=block_d, interpret=interpret)
+    return Y[:n, :d]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _graph_filter(h, S, W, block_d, interpret):
+    return _pad_call(h, S, W, block_d, interpret)
+
+
+def _fwd(h, S, W, block_d, interpret):
+    return _pad_call(h, S, W, block_d, interpret), (h, S, W)
+
+
+def _bwd(block_d, interpret, res, g):
+    h, S, W = res
+    K = h.shape[0] - 1
+    g = g.astype(jnp.float32)
+    dW = _pad_call(h, S.T, g, block_d, interpret).astype(W.dtype)
+    # powers P_k = S^k W
+    powers = [W.astype(jnp.float32)]
+    for _ in range(K):
+        powers.append(S.astype(jnp.float32) @ powers[-1])
+    dh = jnp.stack([jnp.sum(g * p) for p in powers]).astype(h.dtype)
+    # dS (graphs are usually fixed, but keep autodiff exact)
+    gT = [g]          # (S^T)^a g
+    for _ in range(K):
+        gT.append(S.T.astype(jnp.float32) @ gT[-1])
+    dS = jnp.zeros_like(S, dtype=jnp.float32)
+    for k in range(1, K + 1):
+        for a in range(k):
+            dS = dS + h[k].astype(jnp.float32) * gT[a] @ powers[k - 1 - a].T
+    return dh, dS.astype(S.dtype), dW
+
+
+_graph_filter.defvjp(_fwd, _bwd)
+
+
+@partial(jax.jit, static_argnames=("block_d", "interpret"))
+def graph_filter(h, S, W, block_d=128, interpret=True):
+    return _graph_filter(h, S, W, block_d, interpret)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the K-hop graph filter  Y = Σ_{k≤K} h_k S^k W."""
+import jax.numpy as jnp
+
+
+def graph_filter_ref(h, S, W):
+    """h (K+1,), S (n,n), W (n,d). Horner evaluation (exact same order of
+    operations the kernel uses, so tolerances stay tight)."""
+    K = h.shape[0] - 1
+    Y = h[K].astype(jnp.float32) * W.astype(jnp.float32)
+    Sf = S.astype(jnp.float32)
+    for k in range(K - 1, -1, -1):
+        Y = Sf @ Y + h[k].astype(jnp.float32) * W.astype(jnp.float32)
+    return Y.astype(W.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.ssm_scan.ops import wkv
+from repro.kernels.ssm_scan.ref import wkv_ref
+
+__all__ = ["wkv", "wkv_ref"]

@@ -1,0 +1,70 @@
+"""RWKV6 wkv recurrence Pallas TPU kernel.
+
+TPU adaptation: the CUDA reference threads one warp per (batch, head) and
+shuffles the matrix state between registers. Here the (dk × dk) f32 state
+lives in VMEM scratch and persists across the sequential time-chunk grid
+dimension; each chunk of T_c timesteps is streamed through VMEM and the
+recurrence unrolls inside the kernel as (8, dk)-shaped VPU ops (dk = 64
+lanes → pad to 128 by ops.py). The data-dependent per-channel decay w_t is
+applied as an elementwise multiply on the state — no matmul, so this layer
+is memory-bound by design (reflected in the roofline notes).
+
+Grid: (B*H, T/T_c) — time chunks innermost/sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(tc, r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_final, s_scr):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    u = u_ref[0].astype(jnp.float32)                  # (dk,)
+
+    def step(t, S):
+        rt = r_ref[0, t].astype(jnp.float32)          # (dk,)
+        kt = k_ref[0, t].astype(jnp.float32)
+        vt = v_ref[0, t].astype(jnp.float32)
+        wt = w_ref[0, t].astype(jnp.float32)
+        kv = kt[:, None] * vt[None, :]                # (dk, dk)
+        y = jnp.sum((S + u[:, None] * kv) * rt[:, None], axis=0)
+        o_ref[0, t] = y.astype(o_ref.dtype)
+        return wt[:, None] * S + kv
+
+    S = jax.lax.fori_loop(0, tc, step, s_scr[...])
+    s_scr[...] = S
+
+    @pl.when(c == pl.num_programs(1) - 1)
+    def _finish():
+        s_final[0] = S.astype(s_final.dtype)
+
+
+def wkv_pallas(r, k, v, w, u, *, chunk=64, interpret=True):
+    """r/k/v/w (BH, T, dk); u (BH, dk) (head-broadcast done by ops.py).
+    Returns (y (BH,T,dk), S_final (BH,dk,dk))."""
+    BH, T, dk = r.shape
+    tc = min(chunk, T)
+    assert T % tc == 0
+    grid = (BH, T // tc)
+    out_shape = (jax.ShapeDtypeStruct((BH, T, dk), r.dtype),
+                 jax.ShapeDtypeStruct((BH, dk, dk), jnp.float32))
+    io_spec = pl.BlockSpec((1, tc, dk), lambda b, c: (b, c, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, tc),
+        grid=grid,
+        in_specs=[io_spec, io_spec, io_spec, io_spec,
+                  pl.BlockSpec((1, dk), lambda b, c: (b, 0))],
+        out_specs=(io_spec, pl.BlockSpec((1, dk, dk), lambda b, c: (b, 0, 0))),
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((dk, dk), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

@@ -1,0 +1,31 @@
+"""jit'd wrapper: reshapes (B,H,T,dk) -> (B*H,T,dk), broadcasts the per-head
+bonus u, pads the time axis to the chunk size with w=1/k=0 no-op steps."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.kernel import wkv_pallas
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv(r, k, v, w, u, chunk=64, interpret=True):
+    """r/k/v/w (B,H,T,dk); u (H,dk). Returns (y (B,H,T,dk), S (B,H,dk,dk))."""
+    B, H, T, dk = r.shape
+    tc = min(chunk, T)
+    t_pad = (-T) % tc
+    if t_pad:
+        zero = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, t_pad), (0, 0)))
+        r, k_, v_ = zero(r), zero(k), zero(v)
+        w_ = jnp.pad(w, ((0, 0), (0, 0), (0, t_pad), (0, 0)),
+                     constant_values=1.0)   # decay 1 + kv 0 => state no-op
+    else:
+        k_, v_, w_ = k, v, w
+    flat = lambda a: a.reshape(B * H, a.shape[2], dk)
+    ub = jnp.broadcast_to(u[None], (B, H, dk)).reshape(B * H, dk)
+    y, S = wkv_pallas(flat(r), flat(k_), flat(v_), flat(w_), ub,
+                      chunk=tc, interpret=interpret)
+    y = y.reshape(B, H, -1, dk)[:, :, :T]
+    return y, S.reshape(B, H, dk, dk)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the RWKV6 wkv recurrence (data-dependent decay):
+
+    y_t = r_t · (S_{t-1} + (u ⊙ k_t) v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+"""
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, w, u, S0=None):
+    """r/k/v/w (B,H,T,dk); u (H,dk). Returns (y (B,H,T,dk), S (B,H,dk,dk))."""
+    B, H, T, dk = r.shape
+    S = jnp.zeros((B, H, dk, dk), jnp.float32) if S0 is None else S0
+
+    def step(S, xs):
+        rt, kt, vt, wt = [a.astype(jnp.float32) for a in xs]   # (B,H,dk)
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S + u[..., :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (r, k, v, w))
+    S, ys = jax.lax.scan(step, S, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(r.dtype), S

@@ -1,0 +1,155 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch × input-shape) on the
+production meshes, record memory / cost / collective analysis for the
+roofline (deliverables e and g).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all [--multipod]
+  python -m repro.launch.dryrun --surf           # the paper's own step
+Outputs one JSON per combo under experiments/dryrun/.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, get_shape
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import compute_roofline
+from repro.launch.specs import input_specs, shape_supported
+from repro.launch.steps import jitted_step
+
+
+def run_combo(arch: str, shape_name: str, multi_pod: bool, outdir: str,
+              tag: str = "", lower_only: bool = False):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "chips": chips, "tag": tag}
+    ok, reason = shape_supported(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        _write(rec, outdir, tag)
+        return rec
+    try:
+        t0 = time.time()
+        with mesh:
+            fn, args = jitted_step(cfg, shape, mesh)
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            if lower_only:
+                rec.update(status="lowered", lower_s=round(t_lower, 1))
+                _write(rec, outdir, tag)
+                return rec
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            ca = compiled.cost_analysis() or {}
+            parsed = hlo_cost.summarize(compiled.as_text())
+        rl = compute_roofline(parsed, cfg, shape, chips)
+        rec.update(
+            status="ok", lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "per_device_total": (mem.argument_size_in_bytes
+                                     + mem.temp_size_in_bytes
+                                     + mem.output_size_in_bytes
+                                     - mem.alias_size_in_bytes),
+            },
+            xla_cost={"flops": ca.get("flops", 0.0),
+                      "bytes": ca.get("bytes accessed", 0.0)},
+            parsed=parsed,
+            roofline=rl.to_dict(),
+            params=cfg.param_count(),
+            params_active=cfg.param_count(active_only=True),
+        )
+    except Exception as e:  # noqa: BLE001 — a failed lowering IS the result
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    _write(rec, outdir, tag)
+    return rec
+
+
+def run_surf(multi_pod: bool, outdir: str, ring: bool = False,
+             infer: bool = False):
+    """Dry-run of the paper's own meta-training step with the agent axis
+    sharded over the data axes (DESIGN.md §5). ``ring`` switches the dense
+    S@W mixing to the ppermute halo-exchange path (§Perf); ``infer`` lowers
+    the deployed forward-only optimizer."""
+    from repro.launch.surf_dryrun import lower_surf_step
+    rec = lower_surf_step(multi_pod=multi_pod, ring=ring, infer=infer)
+    _write(rec, outdir, rec.get("tag", ""))
+    return rec
+
+
+def _write(rec, outdir, tag=""):
+    os.makedirs(outdir, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+    if tag:
+        name += f"__{tag}"
+    with open(os.path.join(outdir, name + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--surf", action="store_true")
+    ap.add_argument("--surf-ring", action="store_true",
+                    help="SURF dry-run with the ppermute ring mixing")
+    ap.add_argument("--surf-infer", action="store_true",
+                    help="SURF dry-run of the deployed (forward-only) "
+                         "unrolled optimizer")
+    ap.add_argument("--lower-only", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--opts", default="",
+                    help="§Perf flags, e.g. blockwise_prefill,"
+                         "serve_weight_stationary,microbatch_target=4")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    if args.opts:
+        from repro import flags
+        flags.parse_opts(args.opts)
+        if not args.tag:
+            args.tag = args.opts.replace(",", "+").replace("=", "")
+
+    if args.surf or args.surf_ring or args.surf_infer:
+        rec = run_surf(args.multipod, args.out, ring=args.surf_ring,
+                       infer=args.surf_infer)
+        print(json.dumps({k: rec.get(k) for k in ("arch", "shape", "mesh",
+                                                  "status", "error")},
+                         indent=1))
+        return
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    for a in archs:
+        for s in shapes:
+            rec = run_combo(a, s, args.multipod, args.out, args.tag,
+                            args.lower_only)
+            msg = {k: rec.get(k) for k in ("arch", "shape", "mesh", "status",
+                                           "compile_s")}
+            if rec.get("status") == "ok":
+                msg["dominant"] = rec["roofline"]["dominant"]
+            if rec.get("status") == "error":
+                msg["error"] = rec["error"]
+            print(json.dumps(msg), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Production meshes (task spec: single pod 16×16 = 256 chips; multi-pod
+2×16×16 = 512 chips). A FUNCTION, not a module constant — importing this
+module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_cpu_mesh():
+    """1-device mesh for smoke tests / benches (no XLA_FLAGS needed)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,76 @@
+"""Three-term roofline from the compiled dry-run artifact (TPU v5e target).
+
+  compute   = flops / PEAK_FLOPS          (per chip, bf16)
+  memory    = bytes / HBM_BW              (per chip)
+  collective= coll_bytes / ICI_BW         (per chip, conservative 1 link)
+
+flops / bytes / coll_bytes come from the trip-count-aware HLO cost model
+(hlo_cost.py) on the post-SPMD module — per-chip quantities by
+construction. MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens
+(prefill / decode); the ratio MODEL_FLOPS / (chips · HLO_flops) exposes
+remat / dispatch / padding waste.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link (conservative: 1 link)
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes: float
+    coll_bytes: float
+    model_flops: float
+    chips: int
+
+    @property
+    def dominant(self):
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flop_ratio(self):
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def bound_s(self):
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self):
+        return {"compute_s": self.compute_s, "memory_s": self.memory_s,
+                "collective_s": self.collective_s, "dominant": self.dominant,
+                "flops_per_chip": self.flops, "bytes_per_chip": self.bytes,
+                "coll_bytes_per_chip": self.coll_bytes,
+                "model_flops": self.model_flops,
+                "useful_flop_ratio": self.useful_flop_ratio,
+                "chips": self.chips}
+
+
+def model_flops(cfg, shape) -> float:
+    n_active = cfg.param_count(active_only=True)
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch      # decode: 1 token/seq
+
+
+def compute_roofline(parsed: dict, cfg, shape, chips: int) -> Roofline:
+    return Roofline(
+        compute_s=parsed["flops"] / PEAK_FLOPS,
+        memory_s=parsed["bytes"] / HBM_BW,
+        collective_s=parsed["collective_bytes"] / ICI_BW,
+        flops=parsed["flops"], bytes=parsed["bytes"],
+        coll_bytes=parsed["collective_bytes"],
+        model_flops=model_flops(cfg, shape), chips=chips)

@@ -1,0 +1,146 @@
+"""Jit-ready step functions (train / prefill / decode) with mesh shardings
+attached — shared by the dry-run, the launch drivers and the perf pass.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch import specs as SP
+from repro.models import model as M
+from repro.optim import adam, apply_updates, clip_by_global_norm
+from repro.sharding import (batch_shardings, cache_shardings,
+                            params_shardings)
+
+
+def make_train_step(cfg: ArchConfig, lr=1e-4, remat=True, microbatches=1):
+    """Adam train step with optional gradient accumulation over
+    ``microbatches`` slices of the global batch (scan => activation memory
+    scales with batch/microbatches, the production recipe for train_4k)."""
+    opt = adam(lr)
+
+    def grads_of(params, batch):
+        def loss_fn(p):
+            return M.lm_loss(cfg, p, batch, remat=remat)
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, aux), grads = grads_of(params, batch)
+        else:
+            mb = jax.tree_util.tree_map(
+                lambda a: a.reshape((microbatches,
+                                     a.shape[0] // microbatches) + a.shape[1:]),
+                batch)
+
+            def acc_fn(carry, mbatch):
+                g_acc, l_acc = carry
+                (l, aux_i), g = grads_of(params, mbatch)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + l), aux_i
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), auxs = jax.lax.scan(acc_fn, (g0, 0.0), mb)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            aux = jax.tree_util.tree_map(lambda a: jnp.mean(a), auxs)
+        grads, gn = clip_by_global_norm(grads, 1.0)
+        upd, opt_state = opt.update(grads, opt_state)
+        params = apply_updates(params, upd)
+        return params, opt_state, {"loss": loss, "grad_norm": gn,
+                                   "moe_lb": aux["lb"]}
+    return train_step, opt
+
+
+def make_prefill_step(cfg: ArchConfig, cache_len):
+    def prefill_step(params, batch):
+        logits, cache, _ = M.forward(cfg, params, batch["tokens"],
+                                     frames=batch.get("frames"),
+                                     want_cache=True, cache_len=cache_len,
+                                     remat=True)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, cache_len):
+    def decode_step(params, cache, token, pos):
+        logits, cache = M.decode_step(cfg, params, token, cache, pos,
+                                      cache_len)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return decode_step
+
+
+def auto_microbatches(shape: ShapeConfig, mesh, target_local=None):
+    """Pick a gradient-accumulation factor so the per-device microbatch is
+    ~``target_local`` sequences (keeps train_4k activations inside HBM)."""
+    from repro import flags
+    from repro.sharding.rules import axis_size, data_axes
+    if target_local is None:
+        target_local = flags.get().microbatch_target
+    dp = axis_size(mesh, data_axes(mesh))
+    B = shape.global_batch
+    mb = max(1, B // (dp * target_local))
+    while B % (mb * dp) and mb > 1:     # keep microbatch dp-divisible
+        mb //= 2
+    return mb
+
+
+def jitted_step(cfg: ArchConfig, shape: ShapeConfig, mesh, lr=1e-4,
+                microbatches=None):
+    """Build the jitted (sharded) step + its abstract example args for
+    (arch × shape). Returns (jitfn, args_tuple)."""
+    specs = SP.input_specs(cfg, shape)
+    p_spec = SP.params_spec(cfg)
+    p_sh = params_shardings(p_spec, mesh)
+    rep = NamedSharding(mesh, P())
+
+    if shape.mode == "train":
+        if microbatches is None:
+            microbatches = auto_microbatches(shape, mesh)
+        step, opt = make_train_step(cfg, lr, microbatches=microbatches)
+        o_spec = jax.eval_shape(opt.init, p_spec)
+        # adam moments mirror params; step counter replicated
+        m_sh = params_shardings(o_spec["m"], mesh)
+        v_sh = params_shardings(o_spec["v"], mesh)
+        o_sh = {"m": m_sh, "v": v_sh, "t": rep}
+        b_sh = batch_shardings(specs, mesh)
+        fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, rep),
+                     donate_argnums=(0, 1))
+        return fn, (p_spec, o_spec, specs)
+
+    if shape.mode == "prefill":
+        step = make_prefill_step(cfg, shape.seq_len)
+        b_sh = batch_shardings(specs, mesh)
+        c_spec = SP.cache_spec_tree(cfg, shape.global_batch, shape.seq_len)
+        c_sh = cache_shardings(c_spec, mesh)
+        fn = jax.jit(step, in_shardings=(p_sh, b_sh),
+                     out_shardings=(NamedSharding(mesh, P()), c_sh))
+        return fn, (p_spec, specs)
+
+    # decode
+    from repro import flags
+    from repro.sharding.rules import axis_size
+    if flags.get().serve_weight_stationary:
+        # weight-stationary serving: replicate weights over the data axes
+        # when the model-sharded copy fits (<= ~10 GB bf16 per chip) —
+        # removes the per-token FSDP all-gathers.
+        from repro.utils import tree_bytes
+        per_chip = (cfg.param_count() * 2) / axis_size(mesh, "model")
+        if per_chip <= 10e9:
+            p_sh = params_shardings(p_spec, mesh, data_shard=False)
+    step = make_decode_step(cfg, shape.seq_len)
+    c_spec = specs["cache"]
+    c_sh = cache_shardings(c_spec, mesh)
+    t_sh = batch_shardings({"t": specs["token"]}, mesh)["t"]
+    fn = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh, rep),
+                 out_shardings=(t_sh, c_sh), donate_argnums=(1,))
+    return fn, (p_spec, c_spec, specs["token"], specs["pos"])

@@ -1,0 +1,116 @@
+"""Dry-run of SURF's own meta-training step on the production mesh.
+
+The agent axis n (=256, power-of-two dry-run variant of the paper's n=100,
+DESIGN.md §3) shards over the data axes; the unrolled perceptron M
+(Θ(d²) params — the paper's stated size cost) is replicated per the
+divisibility fallback; graph-filter mixing S@W lowers to all-gathers over
+the agent axis — the communication pattern the §Perf pass optimizes with
+a ring ppermute variant.
+"""
+from __future__ import annotations
+
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.surf_paper import DRYRUN
+from repro.core import graph as G
+from repro.core import trainer as TR
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+def lower_surf_step(multi_pod: bool = False, cfg=DRYRUN, ring: bool = False,
+                    infer: bool = False):
+    """``infer=True`` lowers the deployed unrolled optimizer (forward only,
+    the paper's inference regime) instead of the meta-training step — this
+    isolates the graph-mixing collectives the ring path optimizes from the
+    θ-gradient all-reduces that dominate meta-training."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    rec = {"arch": "surf-udgd" + ("-ring" if ring else ""),
+           "shape": f"n{cfg.n_agents}_L{cfg.n_layers}"
+                    + ("_infer" if infer else ""),
+           "mesh": mesh_name, "chips": mesh.size, "tag": ""}
+    try:
+        A, S = G.build_topology(cfg.topology, cfg.n_agents,
+                                degree=cfg.degree, seed=0)
+        S = jnp.asarray(S, jnp.float32)
+        mix_fn = None
+        if ring:
+            from repro.core.ring import make_ring_mix
+            assert cfg.topology == "ring"
+            mix_fn = make_ring_mix(mesh, "data", cfg.n_agents,
+                                   max(1, cfg.degree // 2))
+        if infer:
+            from repro.core import unroll as U
+
+            def step_fn(state, batch, key):
+                kw, kb = jax.random.split(key)
+                W0 = U.sample_w0(kw, cfg)
+                Xl, Yl = U.sample_layer_batches(kb, batch["Xtr"],
+                                                batch["Ytr"], cfg)
+
+                def body(W, xs):
+                    p_l, Xb, Yb = xs
+                    return U.udgd_layer(p_l, S, W, Xb, Yb, cfg,
+                                        mix_fn=mix_fn), None
+                W_L, _ = jax.lax.scan(body, W0, (state.theta, Xl, Yl))
+                return state, jnp.mean(W_L)
+        else:
+            meta_step, _ = TR.make_meta_step(cfg, S, mix_fn=mix_fn)
+            step_fn = meta_step.__wrapped__  # unjitted; re-jit w/ shardings
+
+        state_spec = jax.eval_shape(
+            lambda k: TR.init_state(k, cfg), jax.random.PRNGKey(0))
+        n, m, t, F_ = (cfg.n_agents, cfg.train_per_agent,
+                       cfg.test_per_agent, cfg.feature_dim)
+        batch_spec = {
+            "Xtr": jax.ShapeDtypeStruct((n, m, F_), jnp.float32),
+            "Ytr": jax.ShapeDtypeStruct((n, m), jnp.int32),
+            "Xte": jax.ShapeDtypeStruct((n, t, F_), jnp.float32),
+            "Yte": jax.ShapeDtypeStruct((n, t), jnp.int32),
+        }
+        key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        rep = NamedSharding(mesh, P())
+        agent_sh = NamedSharding(mesh, P(dp))
+        batch_sh = jax.tree_util.tree_map(
+            lambda l: NamedSharding(mesh, P(dp, *([None] * (l.ndim - 1)))),
+            batch_spec)
+        state_sh = jax.tree_util.tree_map(lambda l: rep, state_spec)
+
+        t0 = time.time()
+        with mesh:
+            fn = jax.jit(step_fn, in_shardings=(state_sh, batch_sh, rep),
+                         out_shardings=(state_sh, rep))
+            lowered = fn.lower(state_spec, batch_spec, key_spec)
+            compiled = lowered.compile()
+        dt = time.time() - t0
+        mem = compiled.memory_analysis()
+        parsed = hlo_cost.summarize(compiled.as_text())
+        rec.update(
+            status="ok", compile_s=round(dt, 1),
+            memory={"argument_bytes": mem.argument_size_in_bytes,
+                    "temp_bytes": mem.temp_size_in_bytes,
+                    "per_device_total": (mem.argument_size_in_bytes
+                                         + mem.temp_size_in_bytes)},
+            parsed=parsed,
+            roofline={"compute_s": parsed["flops"] / PEAK_FLOPS,
+                      "memory_s": parsed["bytes"] / HBM_BW,
+                      "collective_s": parsed["collective_bytes"] / ICI_BW,
+                      "dominant": max(
+                          (("compute", parsed["flops"] / PEAK_FLOPS),
+                           ("memory", parsed["bytes"] / HBM_BW),
+                           ("collective",
+                            parsed["collective_bytes"] / ICI_BW)),
+                          key=lambda kv: kv[1])[0]})
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    return rec

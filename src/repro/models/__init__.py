@@ -1,0 +1,3 @@
+from repro.models import layers, attention, moe, ssm, stack, model, frontend
+
+__all__ = ["layers", "attention", "moe", "ssm", "stack", "model", "frontend"]

@@ -1,0 +1,219 @@
+"""Grouped-query attention with QKV bias, qk-norm, sliding windows, RoPE,
+KV caches (full + ring-buffer) and cross-attention (enc-dec).
+
+Shapes: x (B, S, d_model); q (B, S, H, dh); k/v (B, S, KV, dh).
+GQA is computed with grouped einsums — KV heads are never materialized at
+H width.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttnConfig
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+def init_attn(key, d_model, a: AttnConfig, dtype):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": L.init_dense(kq, d_model, a.n_heads * a.d_head, dtype, a.qkv_bias),
+        "wk": L.init_dense(kk, d_model, a.n_kv_heads * a.d_head, dtype, a.qkv_bias),
+        "wv": L.init_dense(kv, d_model, a.n_kv_heads * a.d_head, dtype, a.qkv_bias),
+        "wo": L.init_dense(ko, a.n_heads * a.d_head, d_model, dtype, False),
+    }
+    if a.qk_norm:
+        p["qn"] = L.init_rmsnorm(a.d_head, dtype)
+        p["kn"] = L.init_rmsnorm(a.d_head, dtype)
+    return p
+
+
+def _project_q(p, a: AttnConfig, x, positions, use_rope):
+    B, S, _ = x.shape
+    q = L.dense(p["wq"], x).reshape(B, S, a.n_heads, a.d_head)
+    if a.qk_norm:
+        q = L.rmsnorm(p["qn"], q)
+    if use_rope:
+        cos, sin = L.rope_angles(positions, a.d_head, a.rope_theta)
+        q = L.apply_rope(q, cos, sin)
+    return q
+
+
+def _project_kv(p, a: AttnConfig, x, positions, use_rope):
+    B, S, _ = x.shape
+    k = L.dense(p["wk"], x).reshape(B, S, a.n_kv_heads, a.d_head)
+    v = L.dense(p["wv"], x).reshape(B, S, a.n_kv_heads, a.d_head)
+    if a.qk_norm:
+        k = L.rmsnorm(p["kn"], k)
+    if use_rope:
+        cos, sin = L.rope_angles(positions, a.d_head, a.rope_theta)
+        k = L.apply_rope(k, cos, sin)
+    return k, v
+
+
+def sdpa(q, k, v, mask, n_kv):
+    """Grouped SDPA. q (B,Sq,H,dh), k/v (B,Skv,KV,dh), mask broadcastable to
+    (B, Sq, Skv) or None."""
+    B, Sq, H, dh = q.shape
+    G = H // n_kv
+    qg = q.reshape(B, Sq, n_kv, G, dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=L.ACC)
+    logits = logits * (dh ** -0.5)
+    if mask is not None:
+        logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v,
+                     preferred_element_type=L.ACC).astype(q.dtype)
+    return out.reshape(B, Sq, H * dh)
+
+
+def causal_window_mask(sq, skv, q_offset, window):
+    """(sq, skv) bool mask: causal, optionally restricted to a local window.
+    q position = q_offset + i, kv position = j."""
+    qi = q_offset + jnp.arange(sq)[:, None]
+    kj = jnp.arange(skv)[None, :]
+    m = kj <= qi
+    if window and window > 0:
+        m = m & (kj > qi - window)
+    return m
+
+
+def full_attention(p, a: AttnConfig, x, positions, *, causal=True, window=0,
+                   use_rope=True, kv_x=None, kv_positions=None,
+                   blockwise=False, q_chunk=512):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    Returns (y, (k, v)) — k/v are the cache material (RoPE already applied).
+    Cross-attention: pass kv_x (encoder states) and kv_positions.
+    ``blockwise`` selects the q-chunked memory-bounded path (§Perf flag).
+    """
+    src = kv_x if kv_x is not None else x
+    src_pos = kv_positions if kv_positions is not None else positions
+    q = _project_q(p, a, x, positions, use_rope)
+    k, v = _project_kv(p, a, src, src_pos, use_rope)
+    if causal and blockwise:
+        y = blockwise_sdpa(q, k, v, a.n_kv_heads, causal=True,
+                           window=window, q_chunk=q_chunk)
+    else:
+        if causal:
+            mask = causal_window_mask(x.shape[1], src.shape[1], 0,
+                                      window)[None]
+        else:
+            mask = None
+        y = sdpa(q, k, v, mask, a.n_kv_heads)
+    return L.dense(p["wo"], y), (k, v)
+
+
+def blockwise_sdpa(q, k, v, n_kv, *, causal=True, window=0, q_chunk=512):
+    """Memory-bounded attention: scan over q chunks so scores are
+    (B, KV, G, qc, Skv) instead of (…, Sq, Skv) — peak activation drops by
+    Sq/qc. For sliding-window layers each chunk only reads the (qc + W)
+    kv slice it can see, so compute drops from O(S²) to O(S·W).
+
+    §Perf optimization (flag: blockwise_prefill); numerically identical to
+    ``sdpa`` + causal/window mask (same softmax, same masking).
+    """
+    B, Sq, H, dh = q.shape
+    Skv = k.shape[1]
+    qc = min(q_chunk, Sq)
+    if Sq % qc:
+        qc = next(c for c in range(qc, 0, -1) if Sq % c == 0)
+    nc = Sq // qc
+    qs = q.reshape(B, nc, qc, H, dh).transpose(1, 0, 2, 3, 4)
+
+    use_slice = bool(window) and window + qc < Skv
+    if use_slice:
+        # pad kv by W in front so slice [q_lo, q_lo + qc + W) always covers
+        # positions q_lo - W … q_lo + qc - 1 with in-bounds indices.
+        W = window
+        kp = jnp.pad(k, ((0, 0), (W, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (W, 0), (0, 0), (0, 0)))
+
+    def body(_, xs):
+        q_c, idx = xs
+        q_lo = idx * qc
+        if use_slice:
+            k_c = jax.lax.dynamic_slice_in_dim(kp, q_lo, qc + window, axis=1)
+            v_c = jax.lax.dynamic_slice_in_dim(vp, q_lo, qc + window, axis=1)
+            kj = q_lo - window + jnp.arange(qc + window)[None, :]
+        else:
+            k_c, v_c = k, v
+            kj = jnp.arange(Skv)[None, :]
+        qi = q_lo + jnp.arange(qc)[:, None]
+        mask = kj >= 0
+        if causal:
+            mask = mask & (kj <= qi)
+        if window:
+            mask = mask & (kj > qi - window)
+        y = sdpa(q_c, k_c, v_c, mask[None], n_kv)
+        return None, y
+
+    _, ys = jax.lax.scan(body, None, (qs, jnp.arange(nc)))
+    return ys.transpose(1, 0, 2, 3).reshape(B, Sq, H * dh)
+
+
+# ------------------------------------------------------------------- caches
+def init_cache(batch, cache_len, a: AttnConfig, dtype):
+    shp = (batch, cache_len, a.n_kv_heads, a.d_head)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+
+def fill_cache_from_prefill(cache, k, v, ring):
+    """Populate a cache from prefill-computed k/v (B, S, KV, dh)."""
+    W = cache["k"].shape[1]
+    S = k.shape[1]
+    if not ring or S <= W:
+        n = min(S, W)
+        ck = jax.lax.dynamic_update_slice(cache["k"], k[:, :n], (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v[:, :n], (0, 0, 0, 0))
+        return {"k": ck, "v": cv}
+    # ring buffer: keep last W positions at slot (pos % W)
+    pos = jnp.arange(S - W, S)
+    slots = pos % W
+    ck = cache["k"].at[:, slots].set(k[:, -W:])
+    cv = cache["v"].at[:, slots].set(v[:, -W:])
+    return {"k": ck, "v": cv}
+
+
+def _slot_positions(pos, W, ring):
+    """Absolute position held by each cache slot after writing token ``pos``.
+    Ring slot s holds q = pos - ((pos - s) mod W); full cache slot s holds s."""
+    s = jnp.arange(W)
+    if not ring:
+        return s
+    return pos - jnp.mod(pos - s, W)
+
+
+def decode_attention(p, a: AttnConfig, x1, pos, cache, *, ring=False,
+                     window=0, use_rope=True, cross=False):
+    """One-token decode. x1 (B, 1, d). ``cache``: {'k','v'} (B, W, KV, dh).
+
+    For self-attention the new k/v is written at slot ``pos`` (or pos % W for
+    ring caches) and attention runs over valid slots. For cross-attention the
+    cache is read-only (encoder K/V) and fully valid.
+    Returns (y, new_cache).
+    """
+    B = x1.shape[0]
+    W = cache["k"].shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q = _project_q(p, a, x1, positions, use_rope)
+    if cross:
+        ck, cv = cache["k"], cache["v"]
+        valid = jnp.ones((W,), bool)
+        new_cache = cache
+    else:
+        k1, v1 = _project_kv(p, a, x1, positions, use_rope)
+        slot = jnp.mod(pos, W) if ring else pos
+        ck = jax.lax.dynamic_update_slice(cache["k"], k1, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v1, (0, slot, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        spos = _slot_positions(pos, W, ring)
+        valid = (spos >= 0) & (spos <= pos)
+        if window and not ring:
+            valid = valid & (spos > pos - window)
+    mask = valid[None, None, :]  # (1, 1, W) -> broadcast (B, Sq=1, W)
+    y = sdpa(q, ck, cv, mask, a.n_kv_heads)
+    return L.dense(p["wo"], y), new_cache

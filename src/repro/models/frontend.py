@@ -1,0 +1,28 @@
+"""Modality frontend STUBS (the one allowed carve-out).
+
+[audio] whisper-small: the mel-spectrogram + 2×conv feature extractor is
+stubbed — ``input_specs`` provides precomputed frame embeddings of shape
+(B, AUDIO_FRAMES, d_model), exactly what the conv frontend would emit for
+30 s of audio.
+
+[vlm] chameleon-34b: the VQ-VAE image tokenizer is stubbed — image patches
+arrive as token ids inside the shared 65536 vocab (early fusion), so the
+backbone consumes a plain (B, S) id sequence mixing text and image tokens.
+"""
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+AUDIO_FRAMES = 1500
+
+
+def audio_frames_spec(batch, d_model, dtype=jnp.bfloat16):
+    import jax
+    return jax.ShapeDtypeStruct((batch, AUDIO_FRAMES, d_model), dtype)
+
+
+def add_positions(x):
+    """Sinusoidal absolute positions for non-RoPE (whisper) streams."""
+    B, S, d = x.shape
+    pos = L.sinusoidal_positions(jnp.arange(S), d)
+    return x + pos[None].astype(x.dtype)

@@ -1,0 +1,125 @@
+"""Primitive neural layers in raw JAX: norms, dense, embeddings, RoPE, MLPs.
+
+Parameters are plain dicts of jnp arrays. ``init_*`` functions build them,
+``*_apply`` functions consume them. Compute follows a bf16-matmul /
+f32-accumulate policy via ``preferred_element_type``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+ACC = jnp.float32  # accumulation dtype
+
+
+# --------------------------------------------------------------------- norms
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    xf = x.astype(ACC)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(ACC)).astype(x.dtype)
+
+
+def init_layernorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(ACC)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(ACC) + p["bias"].astype(ACC)).astype(x.dtype)
+
+
+def init_norm(kind, d, dtype):
+    return init_rmsnorm(d, dtype) if kind == "rmsnorm" else init_layernorm(d, dtype)
+
+
+def apply_norm(kind, p, x):
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+# --------------------------------------------------------------------- dense
+def init_dense(key, d_in, d_out, dtype, bias=False, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = jnp.einsum("...i,io->...o", x, p["w"], preferred_element_type=ACC)
+    if "b" in p:
+        y = y + p["b"].astype(ACC)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- embeddings
+def init_embedding(key, vocab, d, dtype):
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def unembed(p, x):
+    """Tied unembedding: (..., d) @ (vocab, d)^T."""
+    return jnp.einsum("...d,vd->...v", x, p["table"],
+                      preferred_element_type=ACC)
+
+
+def sinusoidal_positions(positions, d, base=10000.0):
+    """positions: int array (...,) -> (..., d) sinusoidal embedding."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(base) * jnp.arange(half, dtype=ACC) / half)
+    ang = positions.astype(ACC)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ----------------------------------------------------------------------- rope
+def rope_angles(positions, d_head, theta):
+    """positions (...,) int -> cos,sin (..., d_head//2)."""
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(half, dtype=ACC) / half)
+    ang = positions.astype(ACC)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., seq, heads, d_head); cos/sin: (..., seq, d_head//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # broadcast over heads axis
+    s = sin[..., None, :]
+    xf1, xf2 = x1.astype(ACC), x2.astype(ACC)
+    return jnp.concatenate([xf1 * c - xf2 * s, xf2 * c + xf1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------------------ mlp
+def init_mlp(key, d, d_ff, act, dtype, bias=False):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {"wg": init_dense(k1, d, d_ff, dtype, bias),
+                "wu": init_dense(k2, d, d_ff, dtype, bias),
+                "wd": init_dense(k3, d_ff, d, dtype, bias)}
+    return {"wu": init_dense(k1, d, d_ff, dtype, bias),
+            "wd": init_dense(k2, d_ff, d, dtype, bias)}
+
+
+def mlp(p, x, act):
+    if act == "swiglu":
+        g = dense(p["wg"], x)
+        u = dense(p["wu"], x)
+        h = jax.nn.silu(g.astype(ACC)).astype(x.dtype) * u
+    else:
+        u = dense(p["wu"], x)
+        h = jax.nn.gelu(u.astype(ACC)).astype(x.dtype)
+    return dense(p["wd"], h)

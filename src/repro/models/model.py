@@ -1,0 +1,169 @@
+"""Top-level language-model API: init / forward / prefill / decode / loss.
+
+Works for every assigned architecture via the segment mechanism in
+``stack.py``. Whisper (enc-dec) additionally runs an encoder over stubbed
+audio-frame embeddings.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import frontend as F
+from repro.models import layers as L
+from repro.models import stack as ST
+
+MOE_LB_WEIGHT = 0.01
+MOE_Z_WEIGHT = 1e-3
+
+
+def init_lm(cfg: ArchConfig, key, dtype=jnp.float32):
+    keys = jax.random.split(key, 8)
+    segs = ST.build_segments(cfg)
+    params = {
+        "embed": L.init_embedding(keys[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": L.init_norm(cfg.norm, cfg.d_model, dtype),
+        "segments": {},
+    }
+    for i, (name, reps, kinds) in enumerate(segs):
+        params["segments"][name] = ST.init_segment_params(
+            keys[1 + i % 4], cfg, kinds, reps, dtype)
+    if not cfg.tie_embeddings:
+        params["head"] = L.init_dense(keys[5], cfg.d_model, cfg.vocab, dtype)
+    if cfg.layout == "encdec":
+        enc = {"segments": {}, "ln_post": L.init_layernorm(cfg.d_model, dtype)}
+        for name, reps, kinds in ST.encoder_segments(cfg):
+            enc["segments"][name] = ST.init_segment_params(
+                keys[6], cfg, kinds, reps, dtype)
+        params["enc"] = enc
+    return params
+
+
+def _logits(cfg, params, x):
+    if cfg.tie_embeddings:
+        return L.unembed(params["embed"], x)
+    return jnp.einsum("...d,dv->...v", x, params["head"]["w"],
+                      preferred_element_type=L.ACC)
+
+
+def encode(cfg: ArchConfig, params, frames, remat=False):
+    """Whisper encoder over stubbed frame embeddings (B, F, d)."""
+    x = F.add_positions(frames)
+    ctx = ST.Ctx(mode="full", causal=False, remat=remat)
+    for name, reps, kinds in ST.encoder_segments(cfg):
+        x, _, _ = ST.apply_segment(cfg, kinds, params["enc"]["segments"][name],
+                                   x, None, ctx)
+    return L.layernorm(params["enc"]["ln_post"], x)
+
+
+def forward_hidden(cfg: ArchConfig, params, tokens, frames=None, *,
+                   want_cache=False, cache_len=0, remat=False):
+    """Full-sequence forward up to the final norm (pre-logits).
+    Returns (hidden, cache|None, aux)."""
+    x = L.embed(params["embed"], tokens)
+    enc = None
+    if cfg.layout == "encdec":
+        enc = encode(cfg, params, frames, remat=remat)
+        x = F.add_positions(x)
+    ctx = ST.Ctx(mode="full", want_cache=want_cache,
+                 cache_len=cache_len or tokens.shape[1], enc=enc,
+                 enc_len=0 if enc is None else enc.shape[1], remat=remat)
+    cache = {}
+    aux_total = {"lb": jnp.zeros((), L.ACC), "z": jnp.zeros((), L.ACC)}
+    for name, reps, kinds in ST.build_segments(cfg):
+        x, c, aux = ST.apply_segment(cfg, kinds, params["segments"][name],
+                                     x, None, ctx)
+        if want_cache:
+            cache[name] = c
+        aux_total = jax.tree_util.tree_map(lambda a, b: a + b, aux_total, aux)
+    x = ST.L.apply_norm(cfg.norm, params["final_norm"], x)
+    return x, (cache if want_cache else None), aux_total
+
+
+def forward(cfg: ArchConfig, params, tokens, frames=None, *,
+            want_cache=False, cache_len=0, remat=False):
+    """Full-sequence forward. Returns (logits, cache|None, aux)."""
+    x, cache, aux_total = forward_hidden(
+        cfg, params, tokens, frames=frames, want_cache=want_cache,
+        cache_len=cache_len, remat=remat)
+    logits = _logits(cfg, params, x)
+    return logits, cache, aux_total
+
+
+def chunked_ce_from_hidden(cfg: ArchConfig, params, hidden, labels, chunk):
+    """Cross-entropy computed per sequence chunk under remat — never
+    materializes the full (B, S, V) f32 logits (§Perf flag chunked_ce;
+    the whale at V≈152k is the logits chain, ~4 live f32 copies)."""
+    B, S, d = hidden.shape
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    n = S // c
+    xs = (hidden.reshape(B, n, c, d).transpose(1, 0, 2, 3),
+          labels.reshape(B, n, c).transpose(1, 0, 2))
+
+    @jax.checkpoint
+    def body(acc, xc):
+        hc, lc = xc
+        logits = _logits(cfg, params, hc)
+        logp = jax.nn.log_softmax(logits.astype(L.ACC), axis=-1)
+        nll = -jnp.take_along_axis(logp, lc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(nll), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), L.ACC), xs)
+    return total / (B * S)
+
+
+def init_cache(cfg: ArchConfig, batch, cache_len, enc_len=0,
+               dtype=jnp.float32):
+    cache = {}
+    for name, reps, kinds in ST.build_segments(cfg):
+        cache[name] = ST.init_segment_cache(cfg, kinds, reps, batch,
+                                            cache_len, enc_len, dtype)
+    return cache
+
+
+def decode_step(cfg: ArchConfig, params, token, cache, pos, cache_len):
+    """One-token decode. token (B, 1) int32; pos scalar int32; ``cache_len``
+    is the logical context capacity (ring caches are smaller than it).
+    Returns (logits (B, 1, V), new_cache)."""
+    x = L.embed(params["embed"], token)
+    if cfg.layout == "encdec":
+        posv = jnp.full((token.shape[0], 1), pos, jnp.int32)
+        x = x + L.sinusoidal_positions(posv, cfg.d_model).astype(x.dtype)
+    ctx = ST.Ctx(mode="decode", pos=pos, cache_len=cache_len)
+    new_cache = {}
+    for name, reps, kinds in ST.build_segments(cfg):
+        x, c, _ = ST.apply_segment(cfg, kinds, params["segments"][name],
+                                   x, cache[name], ctx)
+        new_cache[name] = c
+    x = ST.L.apply_norm(cfg.norm, params["final_norm"], x)
+    return _logits(cfg, params, x), new_cache
+
+
+def cross_entropy(logits, labels, mask=None):
+    logp = jax.nn.log_softmax(logits.astype(L.ACC), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(nll)
+
+
+def lm_loss(cfg: ArchConfig, params, batch, remat=False):
+    from repro import flags
+    ce_chunk = flags.get().chunked_ce
+    if ce_chunk:
+        hidden, _, aux = forward_hidden(cfg, params, batch["tokens"],
+                                        frames=batch.get("frames"),
+                                        remat=remat)
+        loss = chunked_ce_from_hidden(cfg, params, hidden, batch["labels"],
+                                      ce_chunk)
+    else:
+        logits, _, aux = forward(cfg, params, batch["tokens"],
+                                 frames=batch.get("frames"), remat=remat)
+        loss = cross_entropy(logits, batch["labels"])
+    loss = loss + MOE_LB_WEIGHT * aux["lb"] + MOE_Z_WEIGHT * aux["z"]
+    return loss, aux

@@ -1,0 +1,119 @@
+"""Mixture-of-experts FFN with top-k routing, shared experts, and
+capacity-bounded sort-based dispatch (Megablocks-style gather/scatter —
+no (T, E, C) one-hot dispatch tensors are ever materialized).
+
+Supports fine-grained MoE (DeepSeekMoE: d_expert != d_ff, shared experts)
+and top-1 (Llama4/Switch). Returns the standard load-balance auxiliary loss
+plus a router z-loss.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models import layers as L
+
+
+def init_moe(key, d_model, m: MoEConfig, d_ff_dense, act, dtype):
+    """Expert weights are stacked on a leading E axis (sharded over 'model')."""
+    de = m.d_expert or d_ff_dense
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    E = m.n_experts
+    scale = d_model ** -0.5
+
+    def stack(k, di, do):
+        return (jax.random.normal(k, (E, di, do)) * scale).astype(dtype)
+
+    p = {"router": {"w": (jax.random.normal(kr, (d_model, E)) * scale).astype(dtype)},
+         "wu": stack(ku, d_model, de),
+         "wd": stack(kd, de, d_model)}
+    if act == "swiglu":
+        p["wg"] = stack(kg, d_model, de)
+    if m.n_shared:
+        p["shared"] = L.init_mlp(ks, d_model, de * m.n_shared, act, dtype)
+    return p
+
+
+def capacity(n_tokens, m: MoEConfig) -> int:
+    return max(1, math.ceil(m.top_k * n_tokens / m.n_experts * m.capacity_factor))
+
+
+def route(p, x2, m: MoEConfig):
+    """x2 (T, d) -> (weights (T,k), expert_idx (T,k), aux losses)."""
+    logits = jnp.einsum("td,de->te", x2, p["router"]["w"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, idx = jax.lax.top_k(probs, m.top_k)
+    weights = vals / (jnp.sum(vals, axis=-1, keepdims=True) + 1e-9)
+    # Switch-style load-balance loss + z-loss
+    E = m.n_experts
+    me = jnp.mean(probs, axis=0)                                # mean router prob
+    onehot = jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32)    # top-1 assignment share
+    ce = jnp.mean(onehot, axis=0)
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return weights, idx, lb_loss, z_loss
+
+
+def dispatch_indices(idx, n_tokens, m: MoEConfig):
+    """Sort-based capacity dispatch.
+
+    idx: (T, k) expert assignment. Returns (tok_idx (E,C) int32 with T as the
+    OOB sentinel, slot_weight_scale left to caller via keep mask, keep (E,C)).
+    """
+    T, k = idx.shape
+    E, C = m.n_experts, capacity(n_tokens, m)
+    flat_e = idx.reshape(-1)                       # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st = flat_e[order], flat_t[order]
+    counts = jnp.bincount(se, length=E)
+    seg_start = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - seg_start[se].astype(jnp.int32)
+    keep = pos_in_e < C
+    tok_idx = jnp.full((E, C), T, dtype=jnp.int32)
+    tok_idx = tok_idx.at[se, jnp.where(keep, pos_in_e, C)].set(
+        jnp.where(keep, st, T), mode="drop")
+    slot_src = jnp.full((E, C), T * k, dtype=jnp.int32)  # index back into sorted order
+    slot_src = slot_src.at[se, jnp.where(keep, pos_in_e, C)].set(
+        jnp.where(keep, order.astype(jnp.int32), T * k), mode="drop")
+    return tok_idx, slot_src
+
+
+def moe_apply(p, x, m: MoEConfig, act):
+    """x (B, S, d) or (T, d). Returns (y, lb_loss, z_loss)."""
+    shape = x.shape
+    d = shape[-1]
+    x2 = x.reshape(-1, d)
+    T = x2.shape[0]
+    weights, idx, lb_loss, z_loss = route(p, x2, m)
+
+    tok_idx, _ = dispatch_indices(idx, T, m)        # (E, C)
+    xg = jnp.take(x2, tok_idx, axis=0, mode="fill", fill_value=0)  # (E, C, d)
+
+    if act == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", xg, p["wg"], preferred_element_type=L.ACC)
+        u = jnp.einsum("ecd,edf->ecf", xg, p["wu"], preferred_element_type=L.ACC)
+        h = (jax.nn.silu(g) * u).astype(x.dtype)
+    else:
+        u = jnp.einsum("ecd,edf->ecf", xg, p["wu"], preferred_element_type=L.ACC)
+        h = jax.nn.gelu(u).astype(x.dtype)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wd"], preferred_element_type=L.ACC)
+
+    # combine weight per (e, c) slot: weight of (token, that expert)
+    w_te = jnp.zeros((T + 1, m.n_experts), dtype=L.ACC)
+    w_te = w_te.at[jnp.arange(T)[:, None], idx].set(weights.astype(L.ACC))
+    slot_w = w_te[jnp.minimum(tok_idx, T), jnp.arange(m.n_experts)[:, None]]
+    slot_w = jnp.where(tok_idx < T, slot_w, 0.0)
+
+    y2 = jnp.zeros((T, d), dtype=L.ACC)
+    y2 = y2.at[tok_idx.reshape(-1)].add(
+        (ye * slot_w[..., None]).reshape(-1, d), mode="drop")
+    y2 = y2.astype(x.dtype)
+
+    if "shared" in p:
+        y2 = y2 + L.mlp(p["shared"], x2, act)
+    return y2.reshape(shape), lb_loss, z_loss

@@ -1,0 +1,271 @@
+"""State-space sequence mixers: Mamba (selective SSM, Jamba's mixer) and
+RWKV6 'Finch' (data-dependent per-channel decay, matrix-valued state).
+
+Full-sequence paths use a two-level chunked time scan (outer ``lax.scan``
+over chunks, rematerialized inner scan) so backward memory is
+O(T/chunk + chunk) states instead of O(T). Decode paths are single-step
+recurrences over a small carried state — O(1) in context length, which is
+what makes these architectures eligible for the ``long_500k`` shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models import layers as L
+
+
+def _hint(x, *spec):
+    """Optional sharding constraint (§Perf flag ssm_shard_hints): keeps
+    SSM/RWKV scan states sharded over 'model' instead of letting SPMD
+    propagation replicate them (measured 16x redundant state compute)."""
+    from repro import flags
+    if not flags.get().ssm_shard_hints:
+        return x
+    try:
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:   # no mesh context (CPU tests) — no-op
+        return x
+
+
+def _pick_chunk(T, target=128):
+    if T <= target:
+        return T
+    c = target
+    while T % c:
+        c //= 2
+    return max(c, 1)
+
+
+def chunked_time_scan(step, state, xs, chunk=128):
+    """scan ``step(state, x_t) -> (state, y_t)`` over time-major xs (T, ...)
+    in rematerialized chunks."""
+    T = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    c = _pick_chunk(T, chunk)
+    n = T // c
+    xs_c = jax.tree_util.tree_map(
+        lambda a: a.reshape((n, c) + a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def run_chunk(st, xc):
+        return jax.lax.scan(step, st, xc)
+
+    state, ys = jax.lax.scan(run_chunk, state, xs_c)
+    ys = jax.tree_util.tree_map(
+        lambda a: a.reshape((T,) + a.shape[2:]), ys)
+    return state, ys
+
+
+# ======================================================================
+# Mamba (selective SSM) — Jamba's non-attention mixer
+# ======================================================================
+def init_mamba(key, d_model, s: SSMConfig, dtype):
+    di = s.expand * d_model
+    k = jax.random.split(key, 7)
+    scale = d_model ** -0.5
+    p = {
+        "in_x": L.init_dense(k[0], d_model, di, dtype),
+        "in_z": L.init_dense(k[1], d_model, di, dtype),
+        "conv": (jax.random.normal(k[2], (s.d_conv, di)) * 0.2).astype(dtype),
+        "x_bc": L.init_dense(k[3], di, 2 * s.d_state, dtype),
+        "x_dt": L.init_dense(k[4], di, 1, dtype),  # broadcast dt (cheap rank-1 stand-in)
+        "dt_bias": jnp.full((di,), -4.6, dtype),   # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.arange(1, s.d_state + 1, dtype=jnp.float32)
+                         )[None, :].repeat(di, 0).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out": L.init_dense(k[5], di, d_model, dtype, scale=di ** -0.5),
+    }
+    return p
+
+
+def _mamba_conv_full(p, x):
+    """Causal depthwise conv over (B, T, di)."""
+    w = p["conv"].astype(L.ACC)          # (d_conv, di)
+    dc = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(L.ACC), w[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out.astype(x.dtype)
+
+
+def _mamba_scan_inputs(p, s: SSMConfig, xc):
+    """Projection of conv output to per-step SSM tensors."""
+    bc = L.dense(p["x_bc"], xc).astype(L.ACC)            # (B,T,2N)
+    Bt, Ct = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(L.dense(p["x_dt"], xc).astype(L.ACC)
+                         + p["dt_bias"].astype(L.ACC))   # (B,T,di)
+    A = -jnp.exp(p["A_log"].astype(L.ACC))               # (di, N)
+    return dt, Bt, Ct, A
+
+
+def _mamba_step(A, D):
+    def step(h, inputs):
+        xt, dt, Bt, Ct = inputs            # (B,di), (B,di), (B,N), (B,N)
+        decay = jnp.exp(dt[..., None] * A)             # (B,di,N)
+        h = decay * h + (dt * xt)[..., None] * Bt[:, None, :]
+        y = jnp.sum(h * Ct[:, None, :], axis=-1) + D * xt
+        return h, y
+    return step
+
+
+def mamba_full(p, s: SSMConfig, x, chunk=128):
+    """x (B,T,d) -> (y (B,T,d), state (B,di,N))."""
+    B, T, d = x.shape
+    xi = L.dense(p["in_x"], x)
+    z = L.dense(p["in_z"], x)
+    xc = jax.nn.silu(_mamba_conv_full(p, xi).astype(L.ACC)).astype(x.dtype)
+    xc = _hint(xc, None, None, "model")
+    dt, Bt, Ct, A = _mamba_scan_inputs(p, s, xc)
+    dt = _hint(dt, None, None, "model")
+    di = xi.shape[-1]
+    h0 = _hint(jnp.zeros((B, di, s.d_state), L.ACC), None, "model", None)
+    xs = (jnp.moveaxis(xc.astype(L.ACC), 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bt, 1, 0), jnp.moveaxis(Ct, 1, 0))
+    h, ys = chunked_time_scan(_mamba_step(A, p["D"].astype(L.ACC)), h0, xs, chunk)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)          # (B,T,di)
+    y = y * jax.nn.silu(z.astype(L.ACC)).astype(x.dtype)
+    return L.dense(p["out"], y), {"h": h,
+                                  "conv": xi[:, -(s.d_conv - 1):, :].astype(L.ACC)}
+
+
+def init_mamba_state(batch, d_model, s: SSMConfig):
+    di = s.expand * d_model
+    return {"h": jnp.zeros((batch, di, s.d_state), L.ACC),
+            "conv": jnp.zeros((batch, s.d_conv - 1, di), L.ACC)}
+
+
+def mamba_step(p, s: SSMConfig, x1, state):
+    """One-token decode. x1 (B,1,d)."""
+    xi = L.dense(p["in_x"], x1)                          # (B,1,di)
+    z = L.dense(p["in_z"], x1)
+    hist = jnp.concatenate([state["conv"], xi.astype(L.ACC)], axis=1)  # (B,dc,di)
+    w = p["conv"].astype(L.ACC)
+    xc = jnp.einsum("bcd,cd->bd", hist, w)
+    xc = jax.nn.silu(xc).astype(x1.dtype)[:, None, :]    # (B,1,di)
+    dt, Bt, Ct, A = _mamba_scan_inputs(p, s, xc)
+    step = _mamba_step(A, p["D"].astype(L.ACC))
+    h, y = step(state["h"], (xc[:, 0].astype(L.ACC), dt[:, 0], Bt[:, 0], Ct[:, 0]))
+    y = y[:, None, :].astype(x1.dtype) * jax.nn.silu(z.astype(L.ACC)).astype(x1.dtype)
+    return L.dense(p["out"], y), {"h": h, "conv": hist[:, 1:]}
+
+
+# ======================================================================
+# RWKV6 'Finch' — data-dependent decay, matrix state per head
+# ======================================================================
+def init_rwkv6(key, d_model, s: SSMConfig, dtype):
+    H = s.n_heads
+    dk = d_model // H
+    k = jax.random.split(key, 10)
+    scale = d_model ** -0.5
+    lora = max(32, d_model // 32)
+    p = {
+        # time-mix interpolation coefficients (static mu per channel)
+        "mu": (jax.random.uniform(k[0], (5, d_model))).astype(dtype),  # r,k,v,w,g
+        "wr": L.init_dense(k[1], d_model, d_model, dtype),
+        "wk": L.init_dense(k[2], d_model, d_model, dtype),
+        "wv": L.init_dense(k[3], d_model, d_model, dtype),
+        "wg": L.init_dense(k[4], d_model, d_model, dtype),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x Wa) Wb))  (low-rank)
+        "w0": jnp.full((d_model,), -2.0, dtype),
+        "wa": L.init_dense(k[5], d_model, lora, dtype),
+        "wb": L.init_dense(k[6], lora, d_model, dtype, scale=lora ** -0.5),
+        "u": (jax.random.normal(k[7], (H, dk)) * 0.1).astype(dtype),  # bonus
+        "gn": L.init_layernorm(dk, dtype),   # per-head group norm
+        "out": L.init_dense(k[8], d_model, d_model, dtype, scale=scale),
+    }
+    return p
+
+
+def _rwkv_mix(p, x, x_prev):
+    """Token-shift interpolation. x (B,T,d); x_prev (B,1,d) previous token of
+    the first position. Returns the 5 mixed streams r,k,v,w,g inputs."""
+    shifted = jnp.concatenate([x_prev.astype(x.dtype), x[:, :-1]], axis=1)
+    mu = p["mu"].astype(L.ACC)
+    xs, sh = x.astype(L.ACC), shifted.astype(L.ACC)
+    mixed = [xs + (sh - xs) * mu[i] for i in range(5)]
+    return [m.astype(x.dtype) for m in mixed]
+
+
+def _rwkv_projections(p, x, x_prev, H):
+    B, T, d = x.shape
+    dk = d // H
+    mr, mk, mv, mw, mg = _rwkv_mix(p, x, x_prev)
+    r = L.dense(p["wr"], mr).reshape(B, T, H, dk)
+    kk = L.dense(p["wk"], mk).reshape(B, T, H, dk)
+    v = L.dense(p["wv"], mv).reshape(B, T, H, dk)
+    g = jax.nn.silu(L.dense(p["wg"], mg).astype(L.ACC))
+    loraw = jnp.tanh(L.dense(p["wa"], mw).astype(L.ACC))
+    wdec = p["w0"].astype(L.ACC) + L.dense(
+        p["wb"], loraw.astype(x.dtype)).astype(L.ACC)
+    w = jnp.exp(-jnp.exp(wdec)).reshape(B, T, H, dk)     # decay in (0,1)
+    return r, kk, v, g, w
+
+
+def _rwkv_step(u):
+    def step(S, inputs):
+        r, k, v, w = inputs                 # each (B,H,dk)
+        kv = k[..., :, None] * v[..., None, :]           # (B,H,dk,dv)
+        y = jnp.einsum("bhk,bhkv->bhv", r, S + u[..., None] * kv)
+        S = w[..., None] * S + kv
+        return S, y
+    return step
+
+
+def rwkv6_full(p, s: SSMConfig, x, chunk=128):
+    """x (B,T,d) -> (y, state)."""
+    B, T, d = x.shape
+    H = s.n_heads
+    dk = d // H
+    x_prev = jnp.zeros((B, 1, d), L.ACC)
+    r, k, v, g, w = _rwkv_projections(p, x, x_prev, H)
+    r, k, v, w = (_hint(a, None, None, "model", None) for a in (r, k, v, w))
+    S0 = _hint(jnp.zeros((B, H, dk, dk), L.ACC), None, "model", None, None)
+    xs = tuple(jnp.moveaxis(a.astype(L.ACC), 1, 0) for a in (r, k, v, w))
+    S, ys = chunked_time_scan(_rwkv_step(p["u"].astype(L.ACC)), S0, xs, chunk)
+    y = jnp.moveaxis(ys, 0, 1)                            # (B,T,H,dk)
+    y = L.layernorm(p["gn"], y.astype(x.dtype)).astype(L.ACC)
+    y = (y.reshape(B, T, d) * g).astype(x.dtype)
+    return L.dense(p["out"], y), {"S": S, "x_prev": x[:, -1:, :].astype(L.ACC)}
+
+
+def init_rwkv6_state(batch, d_model, s: SSMConfig):
+    H = s.n_heads
+    dk = d_model // H
+    return {"S": jnp.zeros((batch, H, dk, dk), L.ACC),
+            "x_prev": jnp.zeros((batch, 1, d_model), L.ACC)}
+
+
+def rwkv6_step(p, s: SSMConfig, x1, state):
+    B, _, d = x1.shape
+    H = s.n_heads
+    dk = d // H
+    r, k, v, g, w = _rwkv_projections(p, x1, state["x_prev"], H)
+    step = _rwkv_step(p["u"].astype(L.ACC))
+    S, y = step(state["S"], (r[:, 0].astype(L.ACC), k[:, 0].astype(L.ACC),
+                             v[:, 0].astype(L.ACC), w[:, 0].astype(L.ACC)))
+    y = L.layernorm(p["gn"], y[:, None].astype(x1.dtype)).astype(L.ACC)
+    y = (y.reshape(B, 1, d) * g).astype(x1.dtype)
+    return L.dense(p["out"], y), {"S": S, "x_prev": x1.astype(L.ACC)}
+
+
+# rwkv channel-mix (squared-relu FFN with token shift)
+def init_rwkv_cmix(key, d_model, d_ff, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"mu": jax.random.uniform(k1, (1, d_model)).astype(dtype),
+            "wk": L.init_dense(k1, d_model, d_ff, dtype),
+            "wv": L.init_dense(k2, d_ff, d_model, dtype, scale=d_ff ** -0.5)}
+
+
+def rwkv_cmix(p, x, x_prev):
+    shifted = jnp.concatenate([x_prev.astype(x.dtype), x[:, :-1]], axis=1)
+    mu = p["mu"].astype(L.ACC)
+    mixed = (x.astype(L.ACC) + (shifted.astype(L.ACC) - x.astype(L.ACC)) * mu
+             ).astype(x.dtype)
+    h = L.dense(p["wk"], mixed).astype(L.ACC)
+    h = jnp.square(jax.nn.relu(h)).astype(x.dtype)
+    return L.dense(p["wv"], h)

@@ -1,0 +1,361 @@
+"""Segmented decoder stacks.
+
+A model is a list of *segments*; each segment is ``(name, repeats, kinds)``
+where ``kinds`` is the tuple of sub-layer kinds making up one repeated body
+(e.g. Gemma3's ``(local,)*5 + (global,)`` superblock). Bodies are applied
+with ``lax.scan`` over stacked per-repeat parameters, so HLO size is
+independent of depth — this is what keeps 512-device dry-run compiles of
+80-layer models tractable.
+
+Sub-layer kinds:
+  ('attn', ffn, window)  window=0 => global attention
+  ('mamba', ffn)
+  ('rwkv',)
+  ('enc',)               whisper encoder layer (bidirectional)
+  ('dec',)               whisper decoder layer (self + cross attention)
+ffn ∈ {'dense', 'moe'}.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+
+# ---------------------------------------------------------------- segments
+def _tiles(kinds, p):
+    return all(kinds[j] == kinds[j % p] for j in range(len(kinds)))
+
+
+def _group(kinds):
+    segs, i, n = [], 0, len(kinds)
+    while i < n:
+        rem = n - i
+        placed = False
+        for tail in range(0, min(8, rem)):
+            body = rem - tail
+            for p in range(1, min(12, body) + 1):
+                if body % p == 0 and _tiles(kinds[i:i + body], p):
+                    segs.append((f"seg{len(segs)}", body // p,
+                                 tuple(kinds[i:i + p])))
+                    i += body
+                    placed = True
+                    break
+            if placed:
+                break
+        if not placed:
+            segs.append((f"seg{len(segs)}", 1, (kinds[i],)))
+            i += 1
+    return segs
+
+
+def build_segments(cfg: ArchConfig):
+    """Per-layer kind list -> grouped segments for the decoder stack."""
+    if cfg.layout == "encdec":
+        return [("dec", cfg.n_layers, (("dec",),))]
+    if cfg.ssm is not None and cfg.attn is None:
+        return [("blocks", cfg.n_layers, (("rwkv",),))]
+    a = cfg.attn
+    kinds = []
+    layer_kinds = cfg._layer_kinds()
+    for i in range(cfg.n_layers):
+        mixer, ffn = layer_kinds[i]
+        if mixer == "ssm":
+            kinds.append(("mamba", ffn))
+        else:
+            if a.pattern_period and not cfg.is_global_layer(i):
+                w = a.window
+            else:
+                w = 0 if a.pattern_period else a.window
+            kinds.append(("attn", ffn, w))
+    return _group(kinds)
+
+
+def encoder_segments(cfg: ArchConfig):
+    return [("enc", cfg.n_encoder_layers, (("enc",),))]
+
+
+# ------------------------------------------------------------------ context
+@dataclass
+class Ctx:
+    mode: str = "full"            # 'full' | 'decode'
+    want_cache: bool = False
+    cache_len: int = 0
+    pos: Any = None               # decode position (traced scalar)
+    enc: Any = None               # encoder output for cross-attention
+    enc_len: int = 0
+    remat: bool = False
+    causal: bool = True
+
+
+def _sp_hint(x):
+    """Sequence-parallel residual constraint (§Perf flag seq_parallel):
+    (B, S, d) sharded over S on 'model' between blocks."""
+    from repro import flags
+    if not flags.get().seq_parallel or x.ndim != 3 or x.shape[1] < 2048:
+        return x
+    try:
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, P(None, "model", None))
+    except Exception:   # no mesh context (CPU tests) — no-op
+        return x
+
+
+# ------------------------------------------------------------- layer bodies
+def init_layer(key, cfg: ArchConfig, kind, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    if kind[0] == "attn":
+        _, ffn, _ = kind
+        p = {"ln1": L.init_norm(cfg.norm, d, dtype),
+             "attn": A.init_attn(ks[0], d, cfg.attn, dtype),
+             "ln2": L.init_norm(cfg.norm, d, dtype)}
+        p["ffn"] = (M.init_moe(ks[1], d, cfg.moe, cfg.d_ff, cfg.act, dtype)
+                    if ffn == "moe" else
+                    L.init_mlp(ks[1], d, cfg.d_ff, cfg.act, dtype))
+        return p
+    if kind[0] == "mamba":
+        _, ffn = kind
+        p = {"ln1": L.init_norm(cfg.norm, d, dtype),
+             "mixer": S.init_mamba(ks[0], d, cfg.ssm, dtype),
+             "ln2": L.init_norm(cfg.norm, d, dtype)}
+        p["ffn"] = (M.init_moe(ks[1], d, cfg.moe, cfg.d_ff, cfg.act, dtype)
+                    if ffn == "moe" else
+                    L.init_mlp(ks[1], d, cfg.d_ff, cfg.act, dtype))
+        return p
+    if kind[0] == "rwkv":
+        return {"ln1": L.init_layernorm(d, dtype),
+                "tmix": S.init_rwkv6(ks[0], d, cfg.ssm, dtype),
+                "ln2": L.init_layernorm(d, dtype),
+                "cmix": S.init_rwkv_cmix(ks[1], d, cfg.d_ff, dtype)}
+    if kind[0] == "enc":
+        return {"ln1": L.init_layernorm(d, dtype),
+                "attn": A.init_attn(ks[0], d, cfg.attn, dtype),
+                "ln2": L.init_layernorm(d, dtype),
+                "ffn": L.init_mlp(ks[1], d, cfg.d_ff, "gelu", dtype, bias=True)}
+    if kind[0] == "dec":
+        return {"ln1": L.init_layernorm(d, dtype),
+                "self": A.init_attn(ks[0], d, cfg.attn, dtype),
+                "ln_x": L.init_layernorm(d, dtype),
+                "cross": A.init_attn(ks[1], d, cfg.attn, dtype),
+                "ln2": L.init_layernorm(d, dtype),
+                "ffn": L.init_mlp(ks[2], d, cfg.d_ff, "gelu", dtype, bias=True)}
+    raise ValueError(kind)
+
+
+def init_layer_cache(cfg: ArchConfig, kind, batch, cache_len, enc_len, dtype):
+    if kind[0] == "attn":
+        w = kind[2]
+        clen = min(w, cache_len) if w else cache_len
+        return A.init_cache(batch, clen, cfg.attn, dtype)
+    if kind[0] == "mamba":
+        return S.init_mamba_state(batch, cfg.d_model, cfg.ssm)
+    if kind[0] == "rwkv":
+        st = S.init_rwkv6_state(batch, cfg.d_model, cfg.ssm)
+        st["cm_prev"] = jnp.zeros((batch, 1, cfg.d_model), L.ACC)
+        return st
+    if kind[0] == "dec":
+        return {"self": A.init_cache(batch, cache_len, cfg.attn, dtype),
+                "cross": A.init_cache(batch, enc_len, cfg.attn, dtype)}
+    raise ValueError(kind)
+
+
+def _zero_aux():
+    return {"lb": jnp.zeros((), L.ACC), "z": jnp.zeros((), L.ACC)}
+
+
+def _apply_ffn(p, cfg, ffn, x):
+    if ffn == "moe":
+        y, lb, z = M.moe_apply(p, x, cfg.moe, cfg.act)
+        return y, {"lb": lb, "z": z}
+    return L.mlp(p, x, cfg.act), _zero_aux()
+
+
+def apply_layer_full(cfg: ArchConfig, kind, p, x, ctx: Ctx):
+    """Full-sequence sub-layer. Returns (x, cache_entry, aux)."""
+    B, Sq, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(Sq), (B, Sq))
+    cache = {}
+    if kind[0] == "attn":
+        from repro import flags
+        f = flags.get()
+        blockwise = f.blockwise_prefill and ctx.causal and Sq >= 2048
+        _, ffn, w = kind
+        h = L.apply_norm(cfg.norm, p["ln1"], x)
+        y, (k, v) = A.full_attention(p["attn"], cfg.attn, h, positions,
+                                     causal=ctx.causal, window=w,
+                                     blockwise=blockwise, q_chunk=f.q_chunk)
+        x = x + y
+        if ctx.want_cache:
+            clen = min(w, ctx.cache_len) if w else ctx.cache_len
+            cache = A.fill_cache_from_prefill(
+                A.init_cache(B, clen, cfg.attn, x.dtype), k, v,
+                ring=bool(w) and w < ctx.cache_len)
+        x = _sp_hint(x)
+        h2 = L.apply_norm(cfg.norm, p["ln2"], x)
+        y2, aux = _apply_ffn(p["ffn"], cfg, ffn, h2)
+        return _sp_hint(x + y2), cache, aux
+    if kind[0] == "mamba":
+        _, ffn = kind
+        h = L.apply_norm(cfg.norm, p["ln1"], x)
+        y, state = S.mamba_full(p["mixer"], cfg.ssm, h)
+        x = x + y
+        if ctx.want_cache:
+            cache = state
+        h2 = L.apply_norm(cfg.norm, p["ln2"], x)
+        y2, aux = _apply_ffn(p["ffn"], cfg, ffn, h2)
+        return x + y2, cache, aux
+    if kind[0] == "rwkv":
+        h = L.layernorm(p["ln1"], x)
+        y, st = S.rwkv6_full(p["tmix"], cfg.ssm, h)
+        x = x + y
+        h2 = L.layernorm(p["ln2"], x)
+        y2 = S.rwkv_cmix(p["cmix"], h2, jnp.zeros((B, 1, d), L.ACC))
+        if ctx.want_cache:
+            st["cm_prev"] = h2[:, -1:, :].astype(L.ACC)
+            cache = st
+        return x + y2, cache, _zero_aux()
+    if kind[0] == "enc":
+        h = L.layernorm(p["ln1"], x)
+        y, _ = A.full_attention(p["attn"], cfg.attn, h, positions,
+                                causal=False, use_rope=False)
+        x = x + y
+        h2 = L.layernorm(p["ln2"], x)
+        return x + L.mlp(p["ffn"], h2, "gelu"), cache, _zero_aux()
+    if kind[0] == "dec":
+        h = L.layernorm(p["ln1"], x)
+        y, (k, v) = A.full_attention(p["self"], cfg.attn, h, positions,
+                                     causal=True, use_rope=False)
+        x = x + y
+        hx = L.layernorm(p["ln_x"], x)
+        enc_pos = jnp.broadcast_to(jnp.arange(ctx.enc.shape[1]),
+                                   (B, ctx.enc.shape[1]))
+        yx, (ck, cv) = A.full_attention(p["cross"], cfg.attn, hx, positions,
+                                        causal=False, use_rope=False,
+                                        kv_x=ctx.enc, kv_positions=enc_pos)
+        x = x + yx
+        if ctx.want_cache:
+            cache = {"self": A.fill_cache_from_prefill(
+                A.init_cache(B, ctx.cache_len, cfg.attn, x.dtype), k, v, False),
+                "cross": {"k": ck, "v": cv}}
+        h2 = L.layernorm(p["ln2"], x)
+        return x + L.mlp(p["ffn"], h2, "gelu"), cache, _zero_aux()
+    raise ValueError(kind)
+
+
+def apply_layer_decode(cfg: ArchConfig, kind, p, x1, cache, ctx: Ctx):
+    """Single-token sub-layer. Returns (x1, new_cache, aux)."""
+    if kind[0] == "attn":
+        _, ffn, w = kind
+        ring = bool(w) and cache["k"].shape[1] < ctx.cache_len
+        h = L.apply_norm(cfg.norm, p["ln1"], x1)
+        y, cache = A.decode_attention(p["attn"], cfg.attn, h, ctx.pos, cache,
+                                      ring=ring, window=w)
+        x1 = x1 + y
+        h2 = L.apply_norm(cfg.norm, p["ln2"], x1)
+        y2, aux = _apply_ffn(p["ffn"], cfg, ffn, h2)
+        return x1 + y2, cache, aux
+    if kind[0] == "mamba":
+        _, ffn = kind
+        h = L.apply_norm(cfg.norm, p["ln1"], x1)
+        y, cache = S.mamba_step(p["mixer"], cfg.ssm, h, cache)
+        x1 = x1 + y
+        h2 = L.apply_norm(cfg.norm, p["ln2"], x1)
+        y2, aux = _apply_ffn(p["ffn"], cfg, ffn, h2)
+        return x1 + y2, cache, aux
+    if kind[0] == "rwkv":
+        h = L.layernorm(p["ln1"], x1)
+        tm_state = {"S": cache["S"], "x_prev": cache["x_prev"]}
+        y, tm_state = S.rwkv6_step(p["tmix"], cfg.ssm, h, tm_state)
+        x1 = x1 + y
+        h2 = L.layernorm(p["ln2"], x1)
+        y2 = S.rwkv_cmix(p["cmix"], h2, cache["cm_prev"])
+        new_cache = {"S": tm_state["S"], "x_prev": tm_state["x_prev"],
+                     "cm_prev": h2.astype(L.ACC)}
+        return x1 + y2, new_cache, _zero_aux()
+    if kind[0] == "dec":
+        h = L.layernorm(p["ln1"], x1)
+        y, self_c = A.decode_attention(p["self"], cfg.attn, h, ctx.pos,
+                                       cache["self"], use_rope=False)
+        x1 = x1 + y
+        hx = L.layernorm(p["ln_x"], x1)
+        yx, _ = A.decode_attention(p["cross"], cfg.attn, hx, ctx.pos,
+                                   cache["cross"], use_rope=False, cross=True)
+        x1 = x1 + yx
+        h2 = L.layernorm(p["ln2"], x1)
+        y2 = L.mlp(p["ffn"], h2, "gelu")
+        return x1 + y2, {"self": self_c, "cross": cache["cross"]}, _zero_aux()
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------- segment runner
+def init_segment_params(key, cfg, kinds, repeats, dtype):
+    def init_body(k):
+        ks = jax.random.split(k, len(kinds))
+        return {f"s{j}": init_layer(ks[j], cfg, kinds[j], dtype)
+                for j in range(len(kinds))}
+    return jax.vmap(init_body)(jax.random.split(key, repeats))
+
+
+def init_segment_cache(cfg, kinds, repeats, batch, cache_len, enc_len, dtype):
+    def one():
+        return {f"s{j}": init_layer_cache(cfg, kinds[j], batch, cache_len,
+                                          enc_len, dtype)
+                for j in range(len(kinds))}
+    c = one()
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (repeats,) + a.shape), c)
+
+
+def apply_segment(cfg, kinds, params, x, cache, ctx: Ctx):
+    """Scan one segment. Returns (x, new_cache_or_None, aux_sums)."""
+    decode = ctx.mode == "decode"
+
+    def body(carry, xs):
+        p, c = xs
+        y = carry
+        new_c, auxes = {}, []
+        for j, kind in enumerate(kinds):
+            cj = None if c is None else c[f"s{j}"]
+            if decode:
+                y, cj2, aux = apply_layer_decode(cfg, kind, p[f"s{j}"], y, cj, ctx)
+            else:
+                y, cj2, aux = apply_layer_full(cfg, kind, p[f"s{j}"], y, ctx)
+            new_c[f"s{j}"] = cj2
+            auxes.append(aux)
+        aux_sum = jax.tree_util.tree_map(lambda *a: sum(a), *auxes)
+        return y, (new_c, aux_sum)
+
+    from repro import flags
+    g = flags.get().nested_remat_group
+    reps = jax.tree_util.tree_leaves(params)[0].shape[0]
+    if (ctx.remat and not decode and not ctx.want_cache and g > 1
+            and reps % g == 0 and reps > g):
+        # nested (sqrt) remat: outer scan of checkpointed groups of g
+        # checkpointed layers — stores reps/g + g hiddens instead of reps.
+        regroup = lambda t: jax.tree_util.tree_map(
+            lambda a: a.reshape((reps // g, g) + a.shape[1:]), t)
+        inner_body = jax.checkpoint(body)
+
+        @jax.checkpoint
+        def outer_body(carry, xs_grp):
+            return jax.lax.scan(inner_body, carry, xs_grp)
+
+        x, (new_cache, aux) = jax.lax.scan(
+            outer_body, x, (regroup(params), regroup(cache)))
+    else:
+        if ctx.remat:
+            body = jax.checkpoint(body)
+        x, (new_cache, aux) = jax.lax.scan(body, x, (params, cache))
+    aux = jax.tree_util.tree_map(jnp.sum, aux)
+    if not (ctx.want_cache or decode):
+        new_cache = None
+    return x, new_cache, aux

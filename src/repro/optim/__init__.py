@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (adam, sgd, momentum, apply_updates,
+                                    clip_by_global_norm, Optimizer)
+
+__all__ = ["adam", "sgd", "momentum", "apply_updates",
+           "clip_by_global_norm", "Optimizer"]

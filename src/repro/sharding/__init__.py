@@ -1,0 +1,6 @@
+from repro.sharding.rules import (param_spec, params_shardings, batch_spec,
+                                  batch_shardings, cache_spec,
+                                  cache_shardings, data_axes)
+
+__all__ = ["param_spec", "params_shardings", "batch_spec", "batch_shardings",
+           "cache_spec", "cache_shardings", "data_axes"]

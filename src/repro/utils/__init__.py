@@ -1,0 +1,5 @@
+from repro.utils.tree import (tree_size, tree_bytes, tree_norm, tree_add,
+                              tree_scale, tree_zeros_like, has_nan)
+
+__all__ = ["tree_size", "tree_bytes", "tree_norm", "tree_add", "tree_scale",
+           "tree_zeros_like", "has_nan"]

@@ -1,0 +1,34 @@
+"""Small pytree / numerics utilities."""
+import jax
+import jax.numpy as jnp
+
+
+def tree_size(tree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def tree_add(a, b, scale_b=1.0):
+    return jax.tree_util.tree_map(lambda x, y: x + scale_b * y, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree_util.tree_map(lambda x: s * x, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+def has_nan(tree) -> bool:
+    return bool(any(bool(jnp.any(~jnp.isfinite(x.astype(jnp.float32))))
+                    for x in jax.tree_util.tree_leaves(tree)))

@@ -1,0 +1,16 @@
+import os
+import sys
+
+# Tests run on the single real CPU device — the 512-device trick is ONLY for
+# launch/dryrun.py (task spec). Keep any accidental import honest:
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,103 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AttnConfig
+from repro.models import attention as A
+
+
+def mk(key, causal=True, window=0, kv=2):
+    a = AttnConfig(n_heads=4, n_kv_heads=kv, d_head=16)
+    p = A.init_attn(key, 32, a, jnp.float32)
+    return a, p
+
+
+def test_full_attention_shapes(key):
+    a, p = mk(key)
+    x = jax.random.normal(key, (2, 10, 32))
+    pos = jnp.broadcast_to(jnp.arange(10), (2, 10))
+    y, (k, v) = A.full_attention(p, a, x, pos)
+    assert y.shape == (2, 10, 32)
+    assert k.shape == (2, 10, 2, 16)
+
+
+def test_causality(key):
+    """Changing future tokens must not change past outputs."""
+    a, p = mk(key)
+    x = jax.random.normal(key, (1, 8, 32))
+    pos = jnp.arange(8)[None]
+    y1, _ = A.full_attention(p, a, x, pos)
+    x2 = x.at[:, 5:].set(9.0)
+    y2, _ = A.full_attention(p, a, x2, pos)
+    np.testing.assert_allclose(y1[:, :5], y2[:, :5], atol=1e-5)
+    assert not np.allclose(y1[:, 6:], y2[:, 6:])
+
+
+def test_window_mask_limits_reach(key):
+    """With window w, token i must ignore tokens < i-w+1."""
+    a, p = mk(key)
+    x = jax.random.normal(key, (1, 12, 32))
+    pos = jnp.arange(12)[None]
+    y1, _ = A.full_attention(p, a, x, pos, window=3)
+    x2 = x.at[:, 0:2].set(-5.0)   # far past
+    y2, _ = A.full_attention(p, a, x2, pos, window=3)
+    np.testing.assert_allclose(y1[:, 8:], y2[:, 8:], atol=1e-5)
+
+
+def test_decode_matches_full(key):
+    a, p = mk(key)
+    S = 9
+    x = jax.random.normal(key, (2, S, 32))
+    pos = jnp.broadcast_to(jnp.arange(S), (2, S))
+    y_full, (k, v) = A.full_attention(p, a, x, pos)
+    cache = A.fill_cache_from_prefill(A.init_cache(2, S, a, jnp.float32),
+                                      k[:, :S-1], v[:, :S-1], ring=False)
+    y_dec, _ = A.decode_attention(p, a, x[:, S-1:], jnp.int32(S-1), cache)
+    np.testing.assert_allclose(y_dec[:, 0], y_full[:, -1], atol=1e-4)
+
+
+def test_ring_cache_decode_matches_window_attention(key):
+    """Ring-buffer decode == full attention with the same sliding window."""
+    a, p = mk(key)
+    S, W = 12, 4
+    x = jax.random.normal(key, (1, S, 32))
+    pos = jnp.arange(S)[None]
+    y_full, (k, v) = A.full_attention(p, a, x, pos, window=W)
+    cache = A.fill_cache_from_prefill(A.init_cache(1, W, a, jnp.float32),
+                                      k[:, :S-1], v[:, :S-1], ring=True)
+    y_dec, _ = A.decode_attention(p, a, x[:, S-1:], jnp.int32(S-1), cache,
+                                  ring=True, window=W)
+    np.testing.assert_allclose(y_dec[:, 0], y_full[:, -1], atol=1e-4)
+
+
+def test_gqa_matches_repeated_heads(key):
+    """GQA grouped einsum == explicitly repeating kv heads."""
+    a, p = mk(key, kv=2)
+    x = jax.random.normal(key, (1, 6, 32))
+    pos = jnp.arange(6)[None]
+    q = A._project_q(p, a, x, pos, True)
+    k, v = A._project_kv(p, a, x, pos, True)
+    mask = A.causal_window_mask(6, 6, 0, 0)[None]
+    y = A.sdpa(q, k, v, mask, a.n_kv_heads)
+    k_rep = jnp.repeat(k, 2, axis=2)
+    v_rep = jnp.repeat(v, 2, axis=2)
+    y_rep = A.sdpa(q, k_rep, v_rep, mask, a.n_heads)
+    np.testing.assert_allclose(y, y_rep, atol=1e-5)
+
+
+def test_qk_norm_and_bias(key):
+    a = AttnConfig(n_heads=4, n_kv_heads=4, d_head=16, qkv_bias=True,
+                   qk_norm=True)
+    p = A.init_attn(key, 32, a, jnp.float32)
+    assert "b" in p["wq"] and "qn" in p
+    x = jax.random.normal(key, (1, 5, 32))
+    y, _ = A.full_attention(p, a, x, jnp.arange(5)[None])
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_slot_positions_ring():
+    W = 4
+    spos = A._slot_positions(jnp.int32(9), W, True)
+    # slots 0..3 hold positions 8,9,6,7
+    np.testing.assert_array_equal(np.asarray(spos), [8, 9, 6, 7])

@@ -1,0 +1,84 @@
+import pytest
+
+from repro.configs import ARCH_IDS, ARCHS, SHAPES, get_config
+from repro.models.stack import build_segments
+
+EXPECTED = {
+    "qwen2-72b": dict(n_layers=80, d_model=8192, vocab=152064),
+    "qwen3-4b": dict(n_layers=36, d_model=2560, vocab=151936),
+    "jamba-1.5-large-398b": dict(n_layers=72, d_model=8192, vocab=65536),
+    "llama4-scout-17b-a16e": dict(n_layers=48, d_model=5120, vocab=202048),
+    "qwen1.5-32b": dict(n_layers=64, d_model=5120, vocab=152064),
+    "rwkv6-1.6b": dict(n_layers=24, d_model=2048, vocab=65536),
+    "whisper-small": dict(n_layers=12, d_model=768, vocab=51865),
+    "deepseek-moe-16b": dict(n_layers=28, d_model=2048, vocab=102400),
+    "chameleon-34b": dict(n_layers=48, d_model=8192, vocab=65536),
+    "gemma3-27b": dict(n_layers=62, d_model=5376, vocab=262144),
+}
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCH_IDS) == 10
+    assert set(EXPECTED) == set(ARCH_IDS)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_assigned_dims(arch):
+    cfg = get_config(arch)
+    for k, v in EXPECTED[arch].items():
+        assert getattr(cfg, k) == v, (arch, k)
+    assert cfg.source, "every config must cite its source"
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_reduced_constraints(arch):
+    r = get_config(arch).reduced()
+    assert r.n_layers <= 8 and r.d_model <= 512
+    if r.moe:
+        assert r.moe.n_experts <= 4
+
+
+def test_param_counts_plausible():
+    # within a loose factor of the marketing number
+    approx = {"qwen2-72b": 72e9, "qwen1.5-32b": 32e9, "rwkv6-1.6b": 1.6e9,
+              "deepseek-moe-16b": 16e9, "chameleon-34b": 34e9,
+              "gemma3-27b": 27e9, "jamba-1.5-large-398b": 398e9}
+    for a, n in approx.items():
+        got = get_config(a).param_count()
+        assert 0.5 * n < got < 1.7 * n, (a, got, n)
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("deepseek-moe-16b")
+    assert cfg.param_count(active_only=True) < 0.4 * cfg.param_count()
+
+
+def test_segments_cover_all_layers():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        segs = build_segments(cfg)
+        total = sum(reps * len(kinds) for _, reps, kinds in segs)
+        assert total == cfg.n_layers, (arch, total)
+
+
+def test_gemma3_pattern():
+    cfg = get_config("gemma3-27b")
+    segs = build_segments(cfg)
+    assert segs[0][1] == 10 and len(segs[0][2]) == 6  # 10 superblocks of 6
+    locals_ = sum(1 for k in segs[0][2] if k[2] > 0)
+    assert locals_ == 5  # 5 local : 1 global
+
+
+def test_jamba_ratio():
+    cfg = get_config("jamba-1.5-large-398b")
+    segs = build_segments(cfg)
+    kinds = segs[0][2]
+    attn = sum(1 for k in kinds if k[0] == "attn")
+    mamba = sum(1 for k in kinds if k[0] == "mamba")
+    assert attn == 1 and mamba == 7  # 1:7 interleave
+
+
+def test_shapes():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["decode_32k"].global_batch == 128

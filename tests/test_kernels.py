@@ -1,0 +1,109 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.graph_filter import graph_filter, graph_filter_ref
+from repro.kernels.ssm_scan import wkv, wkv_ref
+
+TOL = {jnp.float32: 5e-5, jnp.bfloat16: 5e-2}
+
+
+# ------------------------------------------------------------ graph filter
+@pytest.mark.parametrize("n,d,K", [(8, 16, 1), (100, 650, 2), (64, 128, 3),
+                                   (33, 100, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_graph_filter_sweep(n, d, K, dtype):
+    key = jax.random.PRNGKey(n + d + K)
+    S = jax.random.uniform(key, (n, n))
+    S = S / S.sum(1, keepdims=True)
+    W = (jax.random.normal(jax.random.PRNGKey(1), (n, d))).astype(dtype)
+    h = jax.random.normal(jax.random.PRNGKey(2), (K + 1,)) * 0.5
+    y = graph_filter(h, S, W)
+    yr = graph_filter_ref(h, S.astype(dtype), W)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_graph_filter_grad():
+    n, d = 16, 32
+    S = jnp.eye(n) * 0.5 + 0.5 / n
+    W = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    h = jnp.array([0.3, 0.7])
+    g = jax.grad(lambda hh: jnp.sum(graph_filter(hh, S, W) ** 2))(h)
+    gr = jax.grad(lambda hh: jnp.sum(graph_filter_ref(hh, S, W) ** 2))(h)
+    np.testing.assert_allclose(g, gr, rtol=1e-4)
+
+
+# --------------------------------------------------------- flash attention
+@pytest.mark.parametrize("B,H,KV,S,dh,win", [
+    (1, 4, 4, 64, 32, 0),       # MHA global
+    (2, 4, 2, 80, 32, 0),       # GQA + seq padding
+    (1, 8, 2, 128, 64, 16),     # GQA + sliding window
+    (1, 2, 1, 48, 16, 8),       # tiny dims
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, KV, S, dh, win, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(S + dh), 3)
+    q = jax.random.normal(ks[0], (B, H, S, dh)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, KV, S, dh)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, KV, S, dh)).astype(dtype)
+    o = flash_attention(q, k, v, causal=True, window=win,
+                        block_q=32, block_kv=32)
+    orf = attention_ref(q, k, v, causal=True, window=win)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(orf, np.float32),
+                               atol=10 * TOL[dtype], rtol=10 * TOL[dtype])
+
+
+def test_flash_attention_block_shape_invariance():
+    B, H, S, dh = 1, 2, 96, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, dh))
+    k = jax.random.normal(ks[1], (B, H, S, dh))
+    v = jax.random.normal(ks[2], (B, H, S, dh))
+    o1 = flash_attention(q, k, v, block_q=16, block_kv=48)
+    o2 = flash_attention(q, k, v, block_q=96, block_kv=96)
+    np.testing.assert_allclose(o1, o2, atol=1e-5)
+
+
+# ----------------------------------------------------------------- wkv
+@pytest.mark.parametrize("B,H,T,dk,chunk", [
+    (1, 2, 32, 16, 8), (2, 3, 50, 16, 16), (1, 4, 64, 64, 64),
+    (2, 1, 17, 8, 8),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv_sweep(B, H, T, dk, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(T + dk), 5)
+    mk = lambda i: (0.5 * jax.random.normal(ks[i], (B, H, T, dk))).astype(dtype)
+    r, k, v = mk(0), mk(1), mk(2)
+    w = (jax.nn.sigmoid(mk(3).astype(jnp.float32)) * 0.5 + 0.5).astype(dtype)
+    u = (0.1 * jax.random.normal(ks[4], (H, dk))).astype(dtype)
+    y, Sf = wkv(r, k, v, w, u, chunk=chunk)
+    yr, Sr = wkv_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               atol=20 * TOL[dtype], rtol=20 * TOL[dtype])
+    np.testing.assert_allclose(np.asarray(Sf), np.asarray(Sr),
+                               atol=20 * TOL[dtype], rtol=20 * TOL[dtype])
+
+
+def test_wkv_state_resumes():
+    """Final kernel state == ref state => serving can resume the recurrence."""
+    B, H, T, dk = 1, 2, 24, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    mk = lambda i: 0.5 * jax.random.normal(ks[i], (B, H, T, dk))
+    r, k, v = mk(0), mk(1), mk(2)
+    w = jax.nn.sigmoid(mk(3)) * 0.5 + 0.5
+    u = 0.1 * jax.random.normal(ks[4], (H, dk))
+    _, S_half = wkv(r[:, :, :12], k[:, :, :12], v[:, :, :12], w[:, :, :12],
+                    u, chunk=4)
+    y2, S_full = wkv_ref(r[:, :, 12:], k[:, :, 12:], v[:, :, 12:],
+                         w[:, :, 12:], u, S0=S_half)
+    _, S_direct = wkv_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(S_full), np.asarray(S_direct),
+                               atol=1e-5)

@@ -1,0 +1,68 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+
+def test_rmsnorm_unit_scale(key):
+    p = L.init_rmsnorm(64, jnp.float32)
+    x = jax.random.normal(key, (4, 64)) * 7.0
+    y = L.rmsnorm(p, x)
+    rms = jnp.sqrt(jnp.mean(jnp.square(y), -1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_layernorm_moments(key):
+    p = L.init_layernorm(64, jnp.float32)
+    x = jax.random.normal(key, (4, 64)) * 3 + 5
+    y = L.layernorm(p, x)
+    np.testing.assert_allclose(jnp.mean(y, -1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(jnp.std(y, -1), 1.0, rtol=1e-2)
+
+
+def test_rope_preserves_norm(key):
+    x = jax.random.normal(key, (2, 6, 4, 32))
+    pos = jnp.broadcast_to(jnp.arange(6), (2, 6))
+    cos, sin = L.rope_angles(pos, 32, 1e4)
+    y = L.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_property(key):
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    q = jax.random.normal(key, (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 32))
+    def dot_at(i, j):
+        pi = jnp.full((1, 1), i); pj = jnp.full((1, 1), j)
+        qr = L.apply_rope(q, *L.rope_angles(pi, 32, 1e4))
+        kr = L.apply_rope(k, *L.rope_angles(pj, 32, 1e4))
+        return float(jnp.sum(qr * kr))
+    assert abs(dot_at(5, 3) - dot_at(9, 7)) < 1e-4
+    assert abs(dot_at(5, 3) - dot_at(5, 2)) > 1e-6
+
+
+def test_dense_bias(key):
+    p = L.init_dense(key, 8, 4, jnp.float32, bias=True)
+    x = jnp.zeros((2, 8))
+    np.testing.assert_allclose(L.dense(p, x), 0.0)
+
+
+@pytest.mark.parametrize("act", ["swiglu", "gelu"])
+def test_mlp_shapes(key, act):
+    p = L.init_mlp(key, 16, 32, act, jnp.float32)
+    y = L.mlp(p, jax.random.normal(key, (3, 5, 16)), act)
+    assert y.shape == (3, 5, 16)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_embed_unembed_tied(key):
+    p = L.init_embedding(key, 50, 16, jnp.float32)
+    ids = jnp.array([[1, 2, 3]])
+    e = L.embed(p, ids)
+    logits = L.unembed(p, e)
+    assert logits.shape == (1, 3, 50)
+    # the true id should score highest for near-orthogonal random tables
+    assert bool(jnp.all(jnp.argmax(logits, -1) == ids))

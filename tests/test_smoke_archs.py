@@ -1,0 +1,98 @@
+"""Per-architecture smoke tests (task spec deliverable f): a REDUCED
+variant of each assigned family runs one forward + one train step on CPU
+with shape checks and no NaNs, plus a prefill→decode equivalence check.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.steps import make_train_step
+from repro.models import model as M
+from repro.utils import has_nan
+
+B, S = 2, 16
+
+
+def make_batch(cfg, key):
+    tok = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tok, "labels": tok}
+    if cfg.layout == "encdec":
+        batch["frames"] = 0.1 * jax.random.normal(key, (B, 24, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCH_IDS))
+def test_forward_shapes_and_finite(arch, key):
+    cfg = get_config(arch).reduced()
+    params = M.init_lm(cfg, key)
+    batch = make_batch(cfg, key)
+    logits, _, aux = M.forward(cfg, params, batch["tokens"],
+                               frames=batch.get("frames"))
+    assert logits.shape == (B, S, cfg.vocab)
+    assert not has_nan({"l": logits})
+    loss, _ = M.lm_loss(cfg, params, batch)
+    assert 0 < float(loss) < 3 * np.log(cfg.vocab)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCH_IDS))
+def test_one_train_step(arch, key):
+    cfg = get_config(arch).reduced()
+    params = M.init_lm(cfg, key)
+    step, opt = make_train_step(cfg, lr=1e-3, remat=False)
+    opt_state = opt.init(params)
+    batch = make_batch(cfg, key)
+    p2, opt_state, metrics = jax.jit(step)(params, opt_state, batch)
+    assert jnp.isfinite(metrics["loss"])
+    assert float(metrics["grad_norm"]) > 0
+    assert not has_nan(p2)
+    # params actually moved
+    moved = sum(float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree_util.tree_leaves(params),
+                                jax.tree_util.tree_leaves(p2)))
+    assert moved > 0
+
+
+@pytest.mark.parametrize("arch", sorted(ARCH_IDS))
+def test_prefill_decode_equivalence(arch, key):
+    cfg = get_config(arch).reduced()
+    params = M.init_lm(cfg, key)
+    batch = make_batch(cfg, key)
+    tok = batch["tokens"]
+    logits_full, cache, _ = M.forward(cfg, params, tok[:, :S-1],
+                                      frames=batch.get("frames"),
+                                      want_cache=True, cache_len=S)
+    logits_dec, _ = M.decode_step(cfg, params, tok[:, S-1:], cache,
+                                  jnp.int32(S - 1), S)
+    logits_all, _, _ = M.forward(cfg, params, tok,
+                                 frames=batch.get("frames"))
+    np.testing.assert_allclose(np.asarray(logits_dec[:, 0]),
+                               np.asarray(logits_all[:, -1]),
+                               atol=2e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("arch", ["gemma3-27b", "llama4-scout-17b-a16e"])
+def test_ring_cache_smaller_than_context(arch, key):
+    """Local-attention archs must allocate window-sized ring caches."""
+    cfg = get_config(arch).reduced()
+    cache = M.init_cache(cfg, B, 64)
+    sizes = {leaf.shape[2] for leaf in jax.tree_util.tree_leaves(cache)
+             if leaf.ndim == 5}
+    assert len(sizes) > 1, "expected mixed local(ring)/global cache lengths"
+    assert min(sizes) < 64
+
+
+def test_two_train_steps_reduce_loss(key):
+    """End-to-end sanity: a few steps on one arch reduce the loss."""
+    cfg = get_config("qwen3-4b").reduced()
+    params = M.init_lm(cfg, key)
+    step, opt = make_train_step(cfg, lr=1e-2, remat=False)
+    opt_state = opt.init(params)
+    batch = make_batch(cfg, key)
+    step = jax.jit(step)
+    first = None
+    for _ in range(5):
+        params, opt_state, m = step(params, opt_state, batch)
+        first = first if first is not None else float(m["loss"])
+    assert float(m["loss"]) < first

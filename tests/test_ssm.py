@@ -1,0 +1,83 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SSMConfig
+from repro.models import ssm as S
+
+
+def test_chunked_scan_equals_plain(key):
+    xs = jax.random.normal(key, (24, 3))
+    def step(c, x):
+        c = 0.9 * c + x
+        return c, c * 2.0
+    c1, y1 = jax.lax.scan(step, jnp.zeros(3), xs)
+    c2, y2 = S.chunked_time_scan(step, jnp.zeros(3), xs, chunk=8)
+    np.testing.assert_allclose(c1, c2, rtol=1e-6)
+    np.testing.assert_allclose(y1, y2, rtol=1e-6)
+
+
+def test_pick_chunk():
+    assert S._pick_chunk(4096) == 128
+    assert S._pick_chunk(24) == 24
+    assert 100 % S._pick_chunk(100) == 0
+
+
+# ----------------------------------------------------------------- mamba
+def test_mamba_decode_matches_full(key):
+    cfg = SSMConfig(kind="mamba", d_state=8, d_conv=4, expand=2)
+    p = S.init_mamba(key, 16, cfg, jnp.float32)
+    T = 10
+    x = jax.random.normal(key, (2, T, 16)) * 0.5
+    y_full, _ = S.mamba_full(p, cfg, x, chunk=5)
+    st = S.init_mamba_state(2, 16, cfg)
+    ys = []
+    for t in range(T):
+        y1, st = S.mamba_step(p, cfg, x[:, t:t+1], st)
+        ys.append(y1)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(y_step, y_full, atol=2e-4)
+
+
+def test_mamba_state_carries_context(key):
+    cfg = SSMConfig(kind="mamba", d_state=8, d_conv=4, expand=2)
+    p = S.init_mamba(key, 16, cfg, jnp.float32)
+    x = jax.random.normal(key, (1, 6, 16))
+    _, st1 = S.mamba_full(p, cfg, x)
+    _, st2 = S.mamba_full(p, cfg, x * -2.0)
+    assert not np.allclose(st1["h"], st2["h"])
+
+
+# ----------------------------------------------------------------- rwkv6
+def test_rwkv6_decode_matches_full(key):
+    cfg = SSMConfig(kind="rwkv6", n_heads=4)
+    p = S.init_rwkv6(key, 32, cfg, jnp.float32)
+    T = 9
+    x = jax.random.normal(key, (2, T, 32)) * 0.5
+    y_full, _ = S.rwkv6_full(p, cfg, x, chunk=3)
+    st = S.init_rwkv6_state(2, 32, cfg)
+    ys = []
+    for t in range(T):
+        y1, st = S.rwkv6_step(p, cfg, x[:, t:t+1], st)
+        ys.append(y1)
+    np.testing.assert_allclose(jnp.concatenate(ys, 1), y_full, atol=2e-4)
+
+
+def test_rwkv6_decay_in_unit_interval(key):
+    cfg = SSMConfig(kind="rwkv6", n_heads=4)
+    p = S.init_rwkv6(key, 32, cfg, jnp.float32)
+    x = jax.random.normal(key, (1, 5, 32))
+    _, _, _, _, w = S._rwkv_projections(p, x, jnp.zeros((1, 1, 32)), 4)
+    assert bool(jnp.all(w > 0)) and bool(jnp.all(w < 1))
+
+
+def test_rwkv_cmix_token_shift(key):
+    p = S.init_rwkv_cmix(key, 16, 32, jnp.float32)
+    x = jax.random.normal(key, (1, 4, 16))
+    y1 = S.rwkv_cmix(p, x, jnp.zeros((1, 1, 16)))
+    # perturbing token 2 must not change outputs at tokens 0..1
+    x2 = x.at[:, 2].set(3.0)
+    y2 = S.rwkv_cmix(p, x2, jnp.zeros((1, 1, 16)))
+    np.testing.assert_allclose(y1[:, :2], y2[:, :2], atol=1e-6)
+    assert not np.allclose(y1[:, 2:], y2[:, 2:])

@@ -1,0 +1,154 @@
+"""data / optim / checkpoint / sharding / hlo_cost unit tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as CKPT
+from repro.configs.surf_paper import SMOKE
+from repro.data import partition, pipeline, synthetic
+from repro.launch import hlo_cost as H
+from repro.optim import adam, apply_updates, momentum, sgd
+
+
+# ------------------------------------------------------------------- data
+def test_synthetic_dataset_shapes():
+    d = synthetic.sample_dataset(SMOKE, seed=0)
+    n, m = SMOKE.n_agents, SMOKE.train_per_agent
+    assert d["Xtr"].shape == (n, m, SMOKE.feature_dim)
+    assert d["Ytr"].shape == (n, m)
+    assert d["Ytr"].min() >= 0 and d["Ytr"].max() < SMOKE.n_classes
+
+
+def test_dirichlet_heterogeneity_ordering():
+    """Lower alpha => more heterogeneous label distributions."""
+    stats = {}
+    for alpha in (0.3, 10.0):
+        d = synthetic.sample_dataset(SMOKE, seed=1, alpha=alpha)
+        labels = [d["Ytr"][i] for i in range(SMOKE.n_agents)]
+        stats[alpha] = partition.heterogeneity_stat(labels, SMOKE.n_classes)
+    assert stats[0.3] > stats[10.0]
+
+
+def test_dirichlet_partition_covers_everything():
+    labels = np.random.default_rng(0).integers(0, 5, 200)
+    parts = partition.dirichlet_partition(labels, 8, alpha=0.5, seed=0)
+    allidx = np.concatenate(parts)
+    assert sorted(allidx.tolist()) == list(range(200))
+
+
+def test_token_pipeline_deterministic():
+    p1 = next(iter(pipeline.TokenPipeline(100, 2, 16, seed=5)))
+    p2 = next(iter(pipeline.TokenPipeline(100, 2, 16, seed=5)))
+    np.testing.assert_array_equal(p1["tokens"], p2["tokens"])
+    assert p1["tokens"].shape == (2, 16)
+    # labels are next-token shifted
+    np.testing.assert_array_equal(p1["tokens"][:, 1:], p1["labels"][:, :-1])
+
+
+# ------------------------------------------------------------------ optim
+@pytest.mark.parametrize("make", [lambda: sgd(0.1), lambda: momentum(0.05),
+                                  lambda: adam(0.1)])
+def test_optimizers_minimize_quadratic(make):
+    opt = make()
+    params = {"x": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum(p["x"] ** 2))(params)
+        upd, state = opt.update(g, state)
+        params = apply_updates(params, upd)
+    assert float(jnp.max(jnp.abs(params["x"]))) < 1e-2
+
+
+def test_adam_moments_fp32_regardless_of_param_dtype():
+    opt = adam(0.1)
+    params = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    st = opt.init(params)
+    assert st["m"]["w"].dtype == jnp.float32
+
+
+# ------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16) * 1.5,
+                  "d": jnp.array(7, jnp.int32)}}
+    path = os.path.join(tmp_path, "ckpt_1")
+    CKPT.save(path, tree, step=1)
+    back = CKPT.restore(path, jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree))
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert CKPT.latest_step(tmp_path) == 1
+
+
+# --------------------------------------------------------------- hlo_cost
+def test_hlo_cost_counts_loop_trips():
+    """The whole reason hlo_cost exists: scan flops == unrolled flops."""
+    def scanned(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        return jax.lax.scan(body, x, w)[0]
+
+    def unrolled(x, w):
+        for i in range(8):
+            x = jnp.tanh(x @ w[i])
+        return x
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+    fs = H.summarize(jax.jit(scanned).lower(x, w).compile().as_text())
+    fu = H.summarize(jax.jit(unrolled).lower(x, w).compile().as_text())
+    analytic = 8 * 2 * 64 * 128 * 128
+    assert abs(fs["flops"] - analytic) / analytic < 0.15
+    assert abs(fs["flops"] - fu["flops"]) / fu["flops"] < 0.15
+
+
+def test_hlo_cost_dot_flops_exact():
+    f = jax.jit(lambda a, b: a @ b)
+    c = f.lower(jax.ShapeDtypeStruct((32, 64), jnp.float32),
+                jax.ShapeDtypeStruct((64, 16), jnp.float32)).compile()
+    s = H.summarize(c.as_text())
+    assert abs(s["flops"] - 2 * 32 * 64 * 16) / (2 * 32 * 64 * 16) < 0.05
+
+
+def test_shape_bytes_parser():
+    assert H._shape_bytes("bf16[2,3,4]{2,1,0}") == 48
+    assert H._shape_bytes("(f32[10], s32[2])") == 48
+    assert H._shape_bytes("pred[]") == 1
+
+
+# --------------------------------------------------------------- sharding
+def test_param_rules_megatron_convention():
+    from repro.sharding.rules import param_spec
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    m = FakeMesh()
+    # mlp up: (R, d, d_ff) -> d_ff model-sharded, d data-sharded
+    spec = tuple(param_spec("segments/s/wu/w", (80, 8192, 29568), m))
+    assert spec[0] is None and spec[2] == "model"
+    assert spec[1] in ("data", ("data",))
+    # stacked leading axis untouched
+    assert tuple(param_spec("segments/s/wd/w", (80, 29568, 8192), m))[0] is None
+    # indivisible dims replicate
+    assert tuple(param_spec("w", (7, 13), m)) == (None, None)
+
+
+def test_cache_rules_long_context():
+    from repro.sharding.rules import cache_spec
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    m = FakeMesh()
+    # decode_32k: batch shards, kv-heads replicate (8<16), head_dim shards
+    spec = tuple(cache_spec("segments/s0/k", (80, 128, 32768, 8, 128), m))
+    assert spec[1] in ("data", ("data",)) and spec[4] == "model"
+    # long_500k: batch=1 -> sequence dim shards instead
+    spec = tuple(cache_spec("segments/s0/k", (72, 1, 524288, 8, 128), m))
+    assert spec[1] is None and spec[2] in ("data", ("data",))

@@ -1,0 +1,93 @@
+"""End-to-end behaviour tests: the full drivers (train / serve / SURF) run
+and produce learning/decoding behaviour, not just shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+def test_train_driver_end_to_end():
+    from repro.launch.train import main
+    losses = main(["--arch", "qwen3-4b", "--steps", "30", "--batch", "4",
+                   "--seq", "32", "--lr", "3e-3", "--log-every", "10"])
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+def test_serve_driver_end_to_end():
+    from repro.launch.serve import main
+    gen = main(["--arch", "rwkv6-1.6b", "--batch", "2", "--prompt-len", "8",
+                "--tokens", "6"])
+    assert gen.shape == (2, 6)
+
+
+def test_serve_driver_enc_dec():
+    from repro.launch.serve import main
+    gen = main(["--arch", "whisper-small", "--batch", "2",
+                "--prompt-len", "4", "--tokens", "4"])
+    assert gen.shape == (2, 4)
+
+
+def test_surf_end_to_end_beats_paper_configured_dgd():
+    """The paper's headline claim at smoke scale: a trained U-DGD reaches in
+    K·L communication rounds what DGD at the paper's step size (1e-3) does
+    not reach in 10x the rounds; against a generously LR-tuned DGD it must
+    still be competitive (≥ 95% of its equal-round accuracy) — see
+    EXPERIMENTS.md for the honest discussion of baseline tuning."""
+    from repro.configs.surf_paper import SMOKE
+    from repro.core import baselines as BL
+    from repro.core import surf, unroll as U
+    from repro.data import synthetic
+
+    cfg = SMOKE
+    mds = synthetic.make_meta_dataset(cfg, 6, seed=0)
+    state, hist, S = surf.train_surf(cfg, mds, steps=150, log_every=0)
+    test = synthetic.make_meta_dataset(cfg, 3, seed=77)
+    res = surf.evaluate_surf(cfg, state, S, test)
+    udgd_acc = float(res["final_acc"])
+
+    rounds = cfg.n_layers * cfg.filter_taps
+
+    def dgd_acc(lr, r):
+        accs = []
+        for d in test:
+            batch = {k: jnp.asarray(v) for k, v in d.items()}
+            W0 = U.sample_w0(jax.random.PRNGKey(0), cfg)
+            out = BL.run_dgd(S, W0, batch, jax.random.PRNGKey(1), cfg,
+                             rounds=r, lr=lr)
+            accs.append(float(np.asarray(out["acc"])[-1]))
+        return float(np.mean(accs))
+
+    paper_lr = dgd_acc(1e-3, 10 * rounds)
+    tuned = dgd_acc(0.5, rounds)
+    assert udgd_acc > paper_lr + 0.05, (udgd_acc, paper_lr)
+    assert udgd_acc >= 0.95 * tuned, (udgd_acc, tuned)
+
+
+def test_checkpoint_resume_training():
+    """Save -> restore -> losses continue from the same point."""
+    import os
+    import tempfile
+    from repro import checkpoint as CKPT
+    from repro.configs import get_config
+    from repro.launch.steps import make_train_step
+    from repro.models import model as M
+
+    cfg = get_config("qwen3-4b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = M.init_lm(cfg, key)
+    tok = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+    batch = {"tokens": tok, "labels": tok}
+    step, opt = make_train_step(cfg, lr=1e-3, remat=False)
+    opt_state = opt.init(params)
+    step = jax.jit(step)
+    params, opt_state, m1 = step(params, opt_state, batch)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ck")
+        CKPT.save(path, params)
+        like = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+        params2 = CKPT.restore(path, like)
+    _, _, m2a = step(params, opt_state, batch)
+    _, _, m2b = step(params2, opt_state, batch)
+    np.testing.assert_allclose(float(m2a["loss"]), float(m2b["loss"]),
+                               rtol=1e-6)
