@@ -1,0 +1,17 @@
+# Entry points for the tier-1 verification commands (see ROADMAP.md).
+#   make test       — the tier-1 gate: full suite, stop at first failure
+#   make test-fast  — the <1 min lane: deselects @pytest.mark.slow tests
+#   make bench      — SURF paper-figure benchmark battery (slow)
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test test-fast bench
+
+test:
+	$(PY) -m pytest -x -q
+
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
+bench:
+	$(PY) -m benchmarks.run

@@ -28,8 +28,11 @@ ROUNDS_STAR = 25
 def eval_udgd(cfg, topology, seed=0):
     cfg = dataclasses.replace(cfg, topology=topology)
     mds = synthetic.make_meta_dataset(cfg, META_TRAIN_Q, seed=0)
+    # fully-jitted engine: one compiled scan per meta-training run; the
+    # regular and er runs share one executable (S is a jit argument; only
+    # the star path traces a different computation)
     state, hist, S = surf.train_surf(cfg, mds, steps=META_STEPS, seed=seed,
-                                     log_every=0)
+                                     log_every=0, engine="scan")
     test = synthetic.make_meta_dataset(cfg, META_TEST_Q, seed=999)
     res = surf.evaluate_surf(cfg, state, S, test)
     # per-layer accuracy -> per-communication-round (K rounds per layer)

@@ -21,7 +21,8 @@ ROUNDS = 200
 
 def main():
     mds = synthetic.make_meta_dataset(CFG, META_TRAIN_Q, seed=0)
-    state, _, S = surf.train_surf(CFG, mds, steps=META_STEPS, log_every=0)
+    state, _, S = surf.train_surf(CFG, mds, steps=META_STEPS, log_every=0,
+                                  engine="scan")
     rows = []
     for alpha in ALPHAS:
         test = synthetic.make_meta_dataset(CFG, META_TEST_Q, seed=555,

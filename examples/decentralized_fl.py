@@ -24,7 +24,8 @@ def main():
                      n_classes=10, batch_per_agent=8, topology="regular",
                      degree=3)
     meta_train = synthetic.make_meta_dataset(cfg, 60, seed=0)
-    state, _, S = surf.train_surf(cfg, meta_train, steps=800, log_every=0)
+    state, _, S = surf.train_surf(cfg, meta_train, steps=800, log_every=0,
+                                  engine="scan")
     test = synthetic.make_meta_dataset(cfg, 5, seed=42)
 
     res = surf.evaluate_surf(cfg, state, S, test)

@@ -1,0 +1,13 @@
+#!/usr/bin/env sh
+# Tier-1 verification entry point (ROADMAP.md). Usage:
+#   scripts/test.sh          # full suite (the tier-1 gate)
+#   scripts/test.sh fast     # "not slow" lane, finishes in <1 min
+#   scripts/test.sh <args>   # forwarded verbatim to pytest
+set -e
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [ "$1" = "fast" ]; then
+    shift
+    exec python -m pytest -x -q -m "not slow" "$@"
+fi
+exec python -m pytest -x -q "$@"

@@ -15,11 +15,26 @@ ring_graph(n, hops)) @ W`` exactly (unit-tested against the dense path).
 """
 from __future__ import annotations
 
+import contextlib
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+try:                                   # jax >= 0.5: public top-level API
+    _shard_map = jax.shard_map
+except AttributeError:                 # pinned jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def mesh_context(mesh):
+    """Version-compatible mesh scope: ``jax.set_mesh`` where it exists,
+    else the ``Mesh`` context manager (jax 0.4.x)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh if hasattr(mesh, "__enter__") else contextlib.nullcontext()
 
 
 def make_ring_mix(mesh, axis: str, n: int, hops: int):
@@ -53,8 +68,8 @@ def make_ring_mix(mesh, axis: str, n: int, hops: int):
             Y = one_hop(Y) + h[k] * W_local
         return Y
 
-    mix_fn = jax.shard_map(filter_local, mesh=mesh,
-                           in_specs=(P(axis), P()), out_specs=P(axis))
+    mix_fn = _shard_map(filter_local, mesh=mesh,
+                        in_specs=(P(axis), P()), out_specs=P(axis))
     return mix_fn
 
 

@@ -1,5 +1,10 @@
 """Public SURF API: build the FL problem, meta-train U-DGD, evaluate, and
 the asynchronous-agent perturbation study (paper App. D).
+
+Meta-training defaults to the fully-jitted ``train_scan`` engine (one
+compiled scan per experiment); ``engine="python"`` keeps the step-wise
+loop. Evaluation over downstream datasets is a single vmapped+jitted
+computation instead of a Python loop per dataset.
 """
 from __future__ import annotations
 
@@ -12,6 +17,7 @@ from repro.core import graph as G
 from repro.core import task as T
 from repro.core import trainer as TR
 from repro.core import unroll as U
+from repro.data.pipeline import stack_meta_datasets
 
 
 def make_problem(cfg: SURFConfig, seed=0):
@@ -23,38 +29,56 @@ def make_problem(cfg: SURFConfig, seed=0):
 
 def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
                constrained=True, activation="relu", log_every=10,
-               init="dgd"):
+               init="dgd", engine="scan"):
+    if engine not in ("scan", "python"):
+        raise ValueError(f"engine must be 'scan' or 'python', got {engine!r}")
     _, S = make_problem(cfg, seed)
     key = jax.random.PRNGKey(seed)
-    state, hist = TR.train(cfg, S, meta_datasets, steps, key,
-                           constrained=constrained, activation=activation,
-                           log_every=log_every, init=init)
+    driver = TR.train_scan if engine == "scan" else TR.train
+    state, hist = driver(cfg, S, meta_datasets, steps, key,
+                         constrained=constrained, activation=activation,
+                         log_every=log_every, init=init)
     return state, hist, S
+
+
+def _eval_keys(base_key, n):
+    return jax.vmap(lambda i: jax.random.fold_in(base_key, i))(jnp.arange(n))
+
+
+# Jitted vmapped evaluators cached with S as a jit argument — benchmark
+# loops evaluate many times with identical shapes and must not re-trace per
+# call. Keys share trainer._engine_cache_key's normalization so non-star
+# topology variants (which only differ in how S was built) reuse one
+# executable.
+_EVAL_CACHE: dict = {}
+_ASYNC_CACHE: dict = {}
+
+
+def _batched_eval(cfg: SURFConfig, activation):
+    key = TR._engine_cache_key(cfg, "eval", activation, None)
+    if key not in _EVAL_CACHE:
+        ev_s = TR._eval_core(cfg, activation, None)
+        _EVAL_CACHE[key] = jax.jit(
+            jax.vmap(ev_s, in_axes=(None, None, 0, 0)))
+    return _EVAL_CACHE[key]
 
 
 def evaluate_surf(cfg: SURFConfig, state, S, datasets, seed=0,
                   activation="relu"):
-    """Average per-layer loss/acc trajectories over downstream datasets."""
-    ev = TR.make_eval(cfg, S, activation=activation)
-    key = jax.random.PRNGKey(1000 + seed)
-    outs = []
-    for i, d in enumerate(datasets):
-        key, sub = jax.random.split(key)
-        outs.append(ev(state.theta, d, sub))
-    stack = {k: np.stack([np.asarray(o[k]) for o in outs]) for k in outs[0]}
-    return {k: v.mean(0) for k, v in stack.items()}
+    """Average per-layer loss/acc trajectories over downstream datasets —
+    one vmapped computation over the stacked dataset axis."""
+    stacked = stack_meta_datasets(datasets)
+    n_q = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    keys = _eval_keys(jax.random.PRNGKey(1000 + seed), n_q)
+    outs = _batched_eval(cfg, activation)(S, state.theta, stacked, keys)
+    return {k: np.asarray(v).mean(0) for k, v in outs.items()}
 
 
-def evaluate_async(cfg: SURFConfig, state, S, datasets, n_async, seed=0,
-                   activation="relu"):
-    """Asynchronous communications (paper Fig. 8): ``n_async`` randomly
-    chosen agents fail to update in sync — their neighbours consume the
-    estimate communicated at the previous layer (one-layer-stale rows in
-    the graph filter input)."""
+def _async_core(cfg: SURFConfig, activation):
+    """S-as-argument async-inference body (see ``make_async_run``)."""
     layer_fn = U.udgd_layer_star if cfg.topology == "star" else U.udgd_layer
 
-    @jax.jit
-    def run(theta, batch, key, async_mask):
+    def run_s(S, theta, batch, key, async_mask):
         kw, kb = jax.random.split(key)
         W0 = U.sample_w0(kw, cfg)
         Xl, Yl = U.sample_layer_batches(kb, batch["Xtr"], batch["Ytr"], cfg)
@@ -75,16 +99,53 @@ def evaluate_async(cfg: SURFConfig, state, S, datasets, n_async, seed=0,
                                                 (theta, Xl, Yl))
         return losses, accs
 
+    return run_s
+
+
+def make_async_run(cfg: SURFConfig, S, activation="relu"):
+    """Single-dataset async-inference body (paper Fig. 8): agents flagged in
+    ``async_mask`` fail to update in sync — their neighbours consume the
+    estimate communicated at the previous layer (one-layer-stale rows in
+    the graph filter input). Unjitted; the batched path is
+    ``evaluate_async``."""
+    run_s = _async_core(cfg, activation)
+
+    def run(theta, batch, key, async_mask):
+        return run_s(S, theta, batch, key, async_mask)
+
+    return run
+
+
+def async_masks(cfg: SURFConfig, n_datasets, n_async, seed=0):
+    """Per-dataset async-agent masks, (Q, n_agents) bool: each dataset gets
+    its own uniformly-drawn set of ``n_async`` stale agents."""
     rng = np.random.default_rng(seed)
-    key = jax.random.PRNGKey(2000 + seed)
-    outs = []
-    for d in datasets:
-        mask = np.zeros(cfg.n_agents, bool)
-        mask[rng.choice(cfg.n_agents, n_async, replace=False)] = True
-        key, sub = jax.random.split(key)
-        losses, accs = run(state.theta, d, sub, jnp.asarray(mask))
-        outs.append((np.asarray(losses), np.asarray(accs)))
-    losses = np.mean([o[0] for o in outs], axis=0)
-    accs = np.mean([o[1] for o in outs], axis=0)
+    masks = np.zeros((n_datasets, cfg.n_agents), bool)
+    for q in range(n_datasets):
+        masks[q, rng.choice(cfg.n_agents, n_async, replace=False)] = True
+    return masks
+
+
+def _batched_async(cfg: SURFConfig, activation):
+    key = TR._engine_cache_key(cfg, "async", activation, None)
+    if key not in _ASYNC_CACHE:
+        run_s = _async_core(cfg, activation)
+        _ASYNC_CACHE[key] = jax.jit(
+            jax.vmap(run_s, in_axes=(None, None, 0, 0, 0)))
+    return _ASYNC_CACHE[key]
+
+
+def evaluate_async(cfg: SURFConfig, state, S, datasets, n_async, seed=0,
+                   activation="relu"):
+    """Asynchronous communications (paper Fig. 8) over all downstream
+    datasets in one vmapped computation, each dataset with its own mask."""
+    stacked = stack_meta_datasets(datasets)
+    n_q = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    masks = jnp.asarray(async_masks(cfg, n_q, n_async, seed=seed))
+    keys = _eval_keys(jax.random.PRNGKey(2000 + seed), n_q)
+    losses, accs = _batched_async(cfg, activation)(
+        S, state.theta, stacked, keys, masks)
+    losses = np.asarray(losses).mean(0)
+    accs = np.asarray(accs).mean(0)
     return {"loss_per_layer": losses, "acc_per_layer": accs,
             "final_loss": losses[-1], "final_acc": accs[-1]}

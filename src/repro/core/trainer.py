@@ -5,19 +5,38 @@ and L per-layer mini-batches from D_q's training examples, run the unrolled
 network, evaluate the test loss f(W_L) on D_q's held-out examples, add the
 λ-weighted descending-constraint slacks, take an ADAM step on θ (eq. 6) and
 a projected ascent step on λ (eq. 7).
+
+Two drivers share the same ``meta_step``:
+
+  * ``train_scan`` — the default engine: the WHOLE meta-loop is a single
+    ``lax.scan`` over meta-steps inside one jit (donated ``TrainState``,
+    RNG via ``jax.random.fold_in``, datasets pre-stacked on device and
+    cycled with a dynamic index). One compile + one dispatch per
+    experiment instead of ``steps`` dispatches with host syncs.
+  * ``train`` — the step-wise Python loop over the SAME jitted
+    ``meta_step`` and the SAME fold_in RNG stream, for interactive /
+    per-step-logging use. Both produce identical results.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import SURFConfig
 from repro.core import constraints as C
 from repro.core import task as T
 from repro.core import unroll as U
+from repro.data.pipeline import stack_meta_datasets
 from repro.optim import adam, apply_updates, clip_by_global_norm
+
+# Incremented each time a meta_step body is TRACED (not executed) — the
+# scan engine's contract is that an entire training run traces it at most
+# twice (once for the scan, possibly once for a standalone jit).
+TRACE_COUNTS = {"meta_step": 0}
 
 
 class TrainState(NamedTuple):
@@ -34,19 +53,15 @@ def init_state(key, cfg: SURFConfig, init="dgd"):
                       opt_state=opt.init(theta), step=jnp.zeros((), jnp.int32))
 
 
-def make_meta_step(cfg: SURFConfig, S, *, constrained=True,
-                   activation="relu", star=None, mix_fn=None):
-    """Build the jitted meta-training step.
-
-    ``constrained=False`` gives the ablation of Appendix D (λ frozen at 0).
-    ``star``: override star-topology handling (defaults to cfg.topology).
-    ``mix_fn``: override the dense graph filter (ring ppermute path).
-    """
+def _meta_step_core(cfg: SURFConfig, constrained, activation, star, mix_fn):
+    """S-as-argument meta step: ``meta_step_s(S, state, batch, key)`` and
+    ``forward_s(S, theta, W0, Xl, Yl)``. Keeping S out of the closure lets
+    one jitted engine serve every topology/seed of the same config."""
     opt = adam(cfg.lr_theta)
     use_star = cfg.topology == "star" if star is None else star
     layer_fn = U.udgd_layer_star if use_star else U.udgd_layer
 
-    def forward(theta, W0, Xl, Yl):
+    def forward_s(S, theta, W0, Xl, Yl):
         def body(W, xs):
             p_l, Xb, Yb = xs
             Wn = layer_fn(p_l, S, W, Xb, Yb, cfg, activation, mix_fn=mix_fn)
@@ -54,23 +69,23 @@ def make_meta_step(cfg: SURFConfig, S, *, constrained=True,
         W_L, Ws = jax.lax.scan(body, W0, (theta, Xl, Yl))
         return W_L, jnp.concatenate([W0[None], Ws], axis=0)
 
-    def lagrangian_fn(theta, lam, W0, Xl, Yl, Xte, Yte):
-        W_L, W_all = forward(theta, W0, Xl, Yl)
+    def lagrangian_fn(theta, lam, S, W0, Xl, Yl, Xte, Yte):
+        W_L, W_all = forward_s(S, theta, W0, Xl, Yl)
         test_loss = T.fl_loss(W_L, Xte, Yte, cfg.feature_dim, cfg.n_classes)
         gnorms = C.layer_grad_norms(W_all, Xl, Yl, cfg)
         slack = C.slacks(gnorms, cfg.eps)
         lag = C.lagrangian(test_loss, lam, slack) if constrained else test_loss
         return lag, (test_loss, slack, gnorms, W_L)
 
-    @jax.jit
-    def meta_step(state: TrainState, batch, key):
+    def meta_step_s(S, state: TrainState, batch, key):
         """batch: dict with Xtr (n,m,F), Ytr (n,m), Xte (n,t,F), Yte (n,t)."""
+        TRACE_COUNTS["meta_step"] += 1
         kw, kb = jax.random.split(key)
         W0 = U.sample_w0(kw, cfg)
         Xl, Yl = U.sample_layer_batches(kb, batch["Xtr"], batch["Ytr"], cfg)
         (lag, (tl, slack, gnorms, W_L)), grads = jax.value_and_grad(
-            lagrangian_fn, has_aux=True)(state.theta, state.lam, W0, Xl, Yl,
-                                         batch["Xte"], batch["Yte"])
+            lagrangian_fn, has_aux=True)(state.theta, state.lam, S, W0, Xl,
+                                         Yl, batch["Xte"], batch["Yte"])
         grads, gn = clip_by_global_norm(grads, 10.0)
         upd, opt_state = opt.update(grads, state.opt_state)
         theta = apply_updates(state.theta, upd)
@@ -84,17 +99,38 @@ def make_meta_step(cfg: SURFConfig, S, *, constrained=True,
                    "grad_norm": gn, "lam_sum": jnp.sum(lam)}
         return TrainState(theta, lam, opt_state, state.step + 1), metrics
 
-    return meta_step, forward
+    return meta_step_s, forward_s
 
 
-def make_eval(cfg: SURFConfig, S, *, activation="relu", star=None):
-    """Per-layer loss/accuracy trajectory on a downstream dataset — the
-    evaluation used for every paper figure."""
+def make_meta_step(cfg: SURFConfig, S, *, constrained=True,
+                   activation="relu", star=None, mix_fn=None, jit=True):
+    """Build the meta-training step (jitted unless ``jit=False`` — the scan
+    engine embeds the raw body in its own jit).
+
+    ``constrained=False`` gives the ablation of Appendix D (λ frozen at 0).
+    ``star``: override star-topology handling (defaults to cfg.topology).
+    ``mix_fn``: override the dense graph filter (ring ppermute path).
+    """
+    meta_step_s, forward_s = _meta_step_core(cfg, constrained, activation,
+                                             star, mix_fn)
+
+    def meta_step(state, batch, key):
+        return meta_step_s(S, state, batch, key)
+
+    def forward(theta, W0, Xl, Yl):
+        return forward_s(S, theta, W0, Xl, Yl)
+
+    return (jax.jit(meta_step) if jit else meta_step), forward
+
+
+def _eval_core(cfg: SURFConfig, activation, star):
+    """S-as-argument evaluation body ``evaluate_s(S, theta, batch, key)`` —
+    keeping S out of the closure lets ``core.surf`` cache one jitted vmapped
+    evaluator per config across topologies/seeds."""
     use_star = cfg.topology == "star" if star is None else star
     layer_fn = U.udgd_layer_star if use_star else U.udgd_layer
 
-    @jax.jit
-    def evaluate(theta, batch, key):
+    def evaluate_s(S, theta, batch, key):
         kw, kb = jax.random.split(key)
         W0 = U.sample_w0(kw, cfg)
         Xl, Yl = U.sample_layer_batches(kb, batch["Xtr"], batch["Ytr"], cfg)
@@ -111,22 +147,127 @@ def make_eval(cfg: SURFConfig, S, *, activation="relu", star=None):
         return {"loss_per_layer": losses, "acc_per_layer": accs,
                 "final_loss": losses[-1], "final_acc": accs[-1]}
 
-    return evaluate
+    return evaluate_s
+
+
+def make_eval(cfg: SURFConfig, S, *, activation="relu", star=None, jit=True):
+    """Per-layer loss/accuracy trajectory on a downstream dataset — the
+    evaluation used for every paper figure. ``jit=False`` returns the raw
+    body for embedding under vmap (see ``core.surf.evaluate_surf``)."""
+    evaluate_s = _eval_core(cfg, activation, star)
+
+    def evaluate(theta, batch, key):
+        return evaluate_s(S, theta, batch, key)
+
+    return jax.jit(evaluate) if jit else evaluate
+
+
+# One compiled scan engine per distinct traced computation — the benchmarks
+# call train_surf repeatedly with the same config and must not pay a
+# re-trace/re-compile per experiment. S is a jit ARGUMENT, so every
+# topology/seed of a config reuses the same executable.
+_ENGINE_CACHE: dict = {}
+
+
+def _engine_cache_key(cfg: SURFConfig, variant, activation, star):
+    """Normalize cfg to the fields that shape the traced computation: on the
+    non-star path the topology/degree/er_p fields only affect how S was
+    BUILT (S itself is a jit argument), so 'regular' and 'er' experiments
+    share one executable. The star path reads cfg.topology inside
+    ``star_filter_mask`` and keeps the full config. ``variant`` is an
+    arbitrary hashable tag distinguishing computations the other fields
+    don't ("train"/constrained, "eval", "async")."""
+    import dataclasses
+    use_star = cfg.topology == "star" if star is None else star
+    if not use_star:
+        cfg = dataclasses.replace(cfg, topology="regular", degree=0,
+                                  er_p=0.0)
+    return (cfg, variant, activation, use_star)
+
+
+def make_train_scan(cfg: SURFConfig, S, *, constrained=True,
+                    activation="relu", star=None, mix_fn=None):
+    """Build the device-resident meta-training engine: one jitted
+    ``lax.scan`` over meta-steps.
+
+    Returns ``run(state, stacked, key, steps) -> (state, metrics)`` where
+    ``stacked`` is the pytree from ``stack_meta_datasets`` (leading Q axis,
+    cycled round-robin on device), the incoming ``state`` buffers are
+    DONATED, per-step RNG is ``fold_in(key, t)``, and ``metrics`` is the
+    full history as stacked device arrays of shape (steps,).
+    """
+    cache_key = (_engine_cache_key(cfg, ("train", constrained), activation,
+                                   star)
+                 if mix_fn is None else None)
+    if cache_key is not None and cache_key in _ENGINE_CACHE:
+        run_s = _ENGINE_CACHE[cache_key]
+        return lambda state, stacked, key, steps: run_s(state, stacked, key,
+                                                        steps, S)
+
+    meta_step_s, _ = _meta_step_core(cfg, constrained, activation, star,
+                                     mix_fn)
+
+    @partial(jax.jit, static_argnames=("steps",), donate_argnums=(0,))
+    def run_s(state: TrainState, stacked, key, steps: int, S):
+        n_q = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+
+        def body(st, t):
+            batch = jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, t % n_q, 0, keepdims=False), stacked)
+            return meta_step_s(S, st, batch, jax.random.fold_in(key, t))
+
+        return jax.lax.scan(body, state, jnp.arange(steps))
+
+    if cache_key is not None:
+        _ENGINE_CACHE[cache_key] = run_s
+    return lambda state, stacked, key, steps: run_s(state, stacked, key,
+                                                    steps, S)
+
+
+def _decimate_history(metrics, steps, log_every):
+    """Device-array history (steps,) per key -> the step-wise ``train``
+    hist format, keeping every ``log_every``-th step plus the last."""
+    if not log_every or steps == 0:
+        return []
+    host = {k: np.asarray(v) for k, v in metrics.items()}
+    idx = [t for t in range(steps) if t % log_every == 0 or t == steps - 1]
+    return [{k: float(host[k][t]) for k in host} | {"step": t} for t in idx]
+
+
+def train_scan(cfg: SURFConfig, S, meta_datasets, steps, key,
+               constrained=True, activation="relu", log_every=0, init="dgd"):
+    """Run Algorithm 1 as ONE compiled scan over ``steps`` meta-iterations,
+    cycling the meta-training datasets on device. Returns (state, history)
+    with history decimated to ``log_every`` on host — same contract as the
+    step-wise ``train``."""
+    state = init_state(key, cfg, init=init)
+    stacked = stack_meta_datasets(meta_datasets)
+    run = make_train_scan(cfg, S, constrained=constrained,
+                          activation=activation)
+    state, metrics = run(state, stacked, key, int(steps))
+    return state, _decimate_history(metrics, int(steps), log_every)
 
 
 def train(cfg: SURFConfig, S, meta_datasets, steps, key,
           constrained=True, activation="relu", log_every=0, init="dgd"):
-    """Run Algorithm 1 for ``steps`` meta-iterations, cycling the
-    meta-training datasets. Returns (state, history)."""
+    """Step-wise Algorithm 1: a thin Python loop over the same jitted
+    ``meta_step`` and fold_in RNG stream as ``train_scan`` — use when you
+    need host access to metrics every iteration (interactive logging,
+    early stopping). Returns (state, history)."""
     state = init_state(key, cfg, init=init)
     meta_step, _ = make_meta_step(cfg, S, constrained=constrained,
                                   activation=activation)
     hist = []
-    n_q = len(meta_datasets)
+    if isinstance(meta_datasets, dict):     # pre-stacked pytree (Q, ...)
+        n_q = jax.tree_util.tree_leaves(meta_datasets)[0].shape[0]
+        get_batch = lambda q: {k: v[q] for k, v in meta_datasets.items()}
+    else:
+        n_q = len(meta_datasets)
+        get_batch = lambda q: meta_datasets[q]
     for t in range(steps):
-        key, sub = jax.random.split(key)
-        batch = meta_datasets[t % n_q]
-        state, m = meta_step(state, batch, sub)
+        state, m = meta_step(state, get_batch(t % n_q),
+                             jax.random.fold_in(key, t))
         if log_every and (t % log_every == 0 or t == steps - 1):
             hist.append({k: float(v) for k, v in m.items()} | {"step": t})
     return state, hist

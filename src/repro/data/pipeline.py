@@ -7,7 +7,25 @@ gives constant log V loss and hides optimizer bugs).
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
+
+
+def stack_meta_datasets(datasets):
+    """Stack a list of downstream-dataset dicts (same keys/shapes) into one
+    device-resident pytree with a leading dataset axis: {k: (Q, ...)}.
+
+    This is the input format of the fully-jitted engines in ``core.trainer``
+    (``train_scan`` indexes the Q axis per meta-step) and ``core.surf``
+    (vmapped evaluation maps over it). A dict passes through unchanged so
+    callers can pre-stack once and reuse.
+    """
+    if isinstance(datasets, dict):
+        return {k: jnp.asarray(v) for k, v in datasets.items()}
+    if not datasets:
+        raise ValueError("stack_meta_datasets: empty dataset list")
+    keys = datasets[0].keys()
+    return {k: jnp.stack([jnp.asarray(d[k]) for d in datasets]) for k in keys}
 
 
 class TokenPipeline:

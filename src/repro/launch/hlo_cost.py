@@ -32,7 +32,8 @@ DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
                "f8e4m3fn": 1, "f8e5m2": 1, "token": 0, "opaque": 0}
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_NAME_RE = re.compile(r"^[\w.\-]+$")
 _OP_RE = re.compile(r"^(\([^)]*\)|\S+)\s+([\w\-]+)\((.*)$")
 _PARAM_RE = re.compile(r"%?([\w.\-]+):\s*(\([^)]*\)|[\w\[\],{}\s]+?)(?:,|\)\s*->)")
 _GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
@@ -136,9 +137,13 @@ def parse_module(text: str) -> dict[str, Computation]:
         if not line:
             continue
         if not line.startswith(" "):
-            m = re.match(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*(\(.*)$", line)
-            if m and line.rstrip().endswith("{"):
-                cur = Computation(m.group(1), m.group(2))
+            # header with or without a signature: '%name (sig) -> T {',
+            # 'ENTRY name {' (unoptimized dumps omit the signature; the
+            # param types then come from parameter(N) defs in the body)
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(\(.*)?\s*\{?\s*$",
+                         line)
+            if m and line.rstrip().endswith("{") and m.group(1) != "HloModule":
+                cur = Computation(m.group(1), m.group(2) or "(")
                 comps[cur.name] = cur
                 if line.startswith("ENTRY"):
                     comps["__entry__"] = cur
@@ -161,22 +166,38 @@ def parse_module(text: str) -> dict[str, Computation]:
 
 
 def _operands(op: Op):
-    """Names of value operands (up to the closing paren of the op)."""
-    depth, out, cur_tok = 1, [], []
+    """Names of value operands (up to the closing paren of the op).
+
+    Operands look like ``f32[32,64]{1,0} %Arg_0.1`` (the ``%`` and the
+    leading type are both optional depending on the XLA version), so the
+    comma split must not recurse into ``[dims]``/``{layout}`` brackets and
+    the operand name is the LAST whitespace token of each segment."""
+    depth_p, depth_b, segs, cur = 0, 0, [], []
     for ch in op.rest:
         if ch == "(":
-            depth += 1
+            depth_p += 1
         elif ch == ")":
-            depth -= 1
-            if depth == 0:
+            if depth_p == 0:
                 break
-        if depth >= 1 and ch not in "(),":
-            cur_tok.append(ch)
-        if ch == "," and depth == 1:
-            out.append("".join(cur_tok).strip())
-            cur_tok = []
-    out.append("".join(cur_tok).strip())
-    return [t.lstrip("%") for t in out if t.strip().startswith("%")]
+            depth_p -= 1
+        elif ch in "[{":
+            depth_b += 1
+        elif ch in "]}":
+            depth_b -= 1
+        if ch == "," and depth_p == 0 and depth_b == 0:
+            segs.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    segs.append("".join(cur).strip())
+    out = []
+    for seg in segs:
+        if not seg:
+            continue
+        name = seg.split()[-1].lstrip("%")
+        if _NAME_RE.match(name):
+            out.append(name)
+    return out
 
 
 def _called(op: Op):
@@ -184,7 +205,7 @@ def _called(op: Op):
     branch_computations=."""
     names = []
     for key in ("calls=", "to_apply=", "body=", "condition="):
-        m = re.search(re.escape(key) + r"%([\w.\-]+)", op.rest)
+        m = re.search(re.escape(key) + r"%?([\w.\-]+)", op.rest)
         if m:
             names.append((key[:-1], m.group(1)))
     m = re.search(r"branch_computations=\{([^}]*)\}", op.rest)
@@ -236,8 +257,7 @@ def _trip_count(op: Op, comps, default=1):
     if cname and cname in comps:
         consts = []
         for o in comps[cname].ops:
-            cm = re.match(r"\s*constant\((\d+)\)", o.opcode + "(" + o.rest)
-            mm = re.search(r"constant\((\d+)\)", o.opcode + " " + o.rest)
+            mm = re.search(r"constant\((\d+)\)", o.opcode + "(" + o.rest)
             if mm:
                 consts.append(int(mm.group(1)))
         if consts:

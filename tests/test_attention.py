@@ -45,6 +45,7 @@ def test_window_mask_limits_reach(key):
     np.testing.assert_allclose(y1[:, 8:], y2[:, 8:], atol=1e-5)
 
 
+@pytest.mark.slow
 def test_decode_matches_full(key):
     a, p = mk(key)
     S = 9

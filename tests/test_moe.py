@@ -31,6 +31,7 @@ def dense_oracle(p, x2, m, act):
 
 @pytest.mark.parametrize("act", ["swiglu", "gelu"])
 @pytest.mark.parametrize("shared", [0, 1])
+@pytest.mark.slow
 def test_matches_dense_oracle(key, act, shared):
     m = no_drop(shared=shared)
     p = MO.init_moe(key, 16, m, 32, act, jnp.float32)
@@ -40,6 +41,7 @@ def test_matches_dense_oracle(key, act, shared):
     np.testing.assert_allclose(y.reshape(-1, 16), yo, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_capacity_drops_tokens(key):
     """With tiny capacity, overflow tokens get zero routed output."""
     m = MoEConfig(n_experts=4, top_k=1, capacity_factor=0.25)
@@ -77,6 +79,7 @@ def test_dispatch_capacity_bound(key):
                 assert e in idn[t], (e, t)
 
 
+@pytest.mark.slow
 def test_router_grad_flows(key):
     m = no_drop()
     p = MO.init_moe(key, 16, m, 32, "swiglu", jnp.float32)

@@ -30,6 +30,7 @@ def test_blockwise_sdpa_equals_naive(S, W, qc, key):
     np.testing.assert_allclose(y1, y2, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_blockwise_flag_preserves_model_output(key):
     """Full model forward with blockwise on/off must agree (Sq >= 2048
     triggers the flag path)."""
@@ -48,7 +49,7 @@ def test_blockwise_flag_preserves_model_output(key):
 def test_ring_mix_equals_dense_metropolis():
     """The ppermute ring filter == dense metropolis circulant (1-device
     mesh wraps locally, same math as the P-shard halo exchange)."""
-    from repro.core.ring import dense_equivalent, make_ring_mix
+    from repro.core.ring import dense_equivalent, make_ring_mix, mesh_context
     from repro.core.unroll import graph_filter
     n, d, hops = 16, 12, 2
     mesh = jax.make_mesh((1, 1), ("data", "model"))
@@ -56,7 +57,7 @@ def test_ring_mix_equals_dense_metropolis():
     S = jnp.asarray(dense_equivalent(n, hops), jnp.float32)
     W = jax.random.normal(jax.random.PRNGKey(0), (n, d))
     h = jnp.array([0.25, 0.6, 0.15])
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         y_ring = mix(W, h)
     y_dense = graph_filter(S, W, h)
     np.testing.assert_allclose(np.asarray(y_ring), np.asarray(y_dense),
@@ -90,6 +91,7 @@ def test_microbatch_flag_changes_accumulation():
     assert auto_microbatches(TRAIN_4K, m) == 2
 
 
+@pytest.mark.slow
 def test_microbatched_train_step_matches_single(key):
     """Gradient accumulation must reproduce the single-batch step."""
     from repro.configs import get_config

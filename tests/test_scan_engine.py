@@ -1,0 +1,146 @@
+"""Parity of the fully-jitted scan/vmap engines with their step-wise
+references: train_scan == train, vmapped evaluate == per-dataset loop,
+vmapped evaluate_async preserves per-dataset masks, and the scan engine
+traces meta_step at most twice per run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.surf_paper import SMOKE
+from repro.core import surf
+from repro.core import trainer as TR
+from repro.data import synthetic
+from repro.data.pipeline import stack_meta_datasets
+
+CFG = SMOKE
+STEPS = 30
+
+
+@pytest.fixture(scope="module")
+def problem():
+    _, S = surf.make_problem(CFG, seed=0)
+    mds = synthetic.make_meta_dataset(CFG, 4, seed=0)
+    return S, mds
+
+
+def test_train_scan_matches_stepwise_train(problem):
+    S, mds = problem
+    key = jax.random.PRNGKey(7)
+    st_loop, hist_loop = TR.train(CFG, S, mds, STEPS, key, log_every=10)
+    st_scan, hist_scan = TR.train_scan(CFG, S, mds, STEPS, key, log_every=10)
+    for a, b in zip(jax.tree_util.tree_leaves(st_loop.theta),
+                    jax.tree_util.tree_leaves(st_scan.theta)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(st_loop.lam),
+                               np.asarray(st_scan.lam), atol=1e-6)
+    assert int(st_scan.step) == STEPS
+    # history decimation matches the step-wise logging contract
+    assert [h["step"] for h in hist_loop] == [h["step"] for h in hist_scan]
+    for hl, hs in zip(hist_loop, hist_scan):
+        assert hl.keys() == hs.keys()
+        for k in hl:
+            np.testing.assert_allclose(hl[k], hs[k], atol=1e-4, rtol=1e-3)
+
+
+def test_train_scan_traces_meta_step_at_most_twice(problem):
+    S, mds = problem
+    TR.TRACE_COUNTS["meta_step"] = 0
+    TR.train_scan(CFG, S, mds, 50, jax.random.PRNGKey(0))
+    assert TR.TRACE_COUNTS["meta_step"] <= 2
+
+
+def test_stack_meta_datasets_shapes_and_passthrough(problem):
+    _, mds = problem
+    stacked = stack_meta_datasets(mds)
+    assert stacked["Xtr"].shape == (len(mds),) + mds[0]["Xtr"].shape
+    np.testing.assert_array_equal(np.asarray(stacked["Ytr"][2]),
+                                  mds[2]["Ytr"])
+    again = stack_meta_datasets(stacked)          # dict passes through
+    assert again["Xtr"].shape == stacked["Xtr"].shape
+    with pytest.raises(ValueError):
+        stack_meta_datasets([])
+
+
+def test_vmapped_evaluate_matches_per_dataset_loop(problem):
+    S, mds = problem
+    state = TR.init_state(jax.random.PRNGKey(3), CFG)
+    res = surf.evaluate_surf(CFG, state, S, mds, seed=0)
+    # reference: the old per-dataset Python loop over the jitted evaluator
+    ev = TR.make_eval(CFG, S)
+    base = jax.random.PRNGKey(1000)
+    outs = [ev(state.theta, d, jax.random.fold_in(base, i))
+            for i, d in enumerate(mds)]
+    for k in res:
+        ref = np.mean([np.asarray(o[k]) for o in outs], axis=0)
+        np.testing.assert_allclose(res[k], ref, atol=1e-5, rtol=1e-5)
+
+
+def test_vmapped_async_preserves_per_dataset_masks(problem):
+    S, mds = problem
+    state = TR.init_state(jax.random.PRNGKey(5), CFG)
+    n_async, seed = 3, 11
+    masks = surf.async_masks(CFG, len(mds), n_async, seed=seed)
+    assert (masks.sum(1) == n_async).all()
+    # each dataset draws its own mask — they must not be broadcast copies
+    assert not all((masks[0] == masks[q]).all() for q in range(1, len(mds)))
+    res = surf.evaluate_async(CFG, state, S, mds, n_async, seed=seed)
+    # reference: one dataset at a time through the same body, same masks
+    run = jax.jit(surf.make_async_run(CFG, S))
+    base = jax.random.PRNGKey(2000 + seed)
+    losses, accs = [], []
+    for q, d in enumerate(mds):
+        batch = {k: jnp.asarray(v) for k, v in d.items()}
+        lo, ac = run(state.theta, batch, jax.random.fold_in(base, q),
+                     jnp.asarray(masks[q]))
+        losses.append(np.asarray(lo))
+        accs.append(np.asarray(ac))
+    np.testing.assert_allclose(res["loss_per_layer"],
+                               np.mean(losses, axis=0), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(res["acc_per_layer"],
+                               np.mean(accs, axis=0), atol=1e-5, rtol=1e-5)
+    # masked agents matter: a different seed (different masks) changes runs
+    res2 = surf.evaluate_async(CFG, state, S, mds, n_async, seed=seed + 1)
+    assert not np.allclose(res["loss_per_layer"], res2["loss_per_layer"])
+
+
+def test_stepwise_train_accepts_prestacked_dict(problem):
+    S, mds = problem
+    key = jax.random.PRNGKey(2)
+    st_list, _ = TR.train(CFG, S, mds, 8, key)
+    st_dict, _ = TR.train(CFG, S, stack_meta_datasets(mds), 8, key)
+    for a, b in zip(jax.tree_util.tree_leaves(st_list.theta),
+                    jax.tree_util.tree_leaves(st_dict.theta)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_train_surf_rejects_unknown_engine(problem):
+    _, mds = problem
+    with pytest.raises(ValueError, match="engine"):
+        surf.train_surf(CFG, mds, steps=1, engine="scna")
+
+
+def test_eval_cache_shared_across_nonstar_topologies():
+    import dataclasses
+    a = TR._engine_cache_key(CFG, "eval", "relu", None)
+    b = TR._engine_cache_key(dataclasses.replace(CFG, topology="er",
+                                                 degree=5), "eval", "relu",
+                             None)
+    c = TR._engine_cache_key(dataclasses.replace(CFG, topology="star"),
+                             "eval", "relu", None)
+    assert a == b and a != c
+
+
+def test_train_surf_engines_agree(problem):
+    _, mds = problem
+    st_a, hist_a, S_a = surf.train_surf(CFG, mds, steps=STEPS, seed=1,
+                                        log_every=15, engine="scan")
+    st_b, hist_b, S_b = surf.train_surf(CFG, mds, steps=STEPS, seed=1,
+                                        log_every=15, engine="python")
+    np.testing.assert_array_equal(np.asarray(S_a), np.asarray(S_b))
+    for a, b in zip(jax.tree_util.tree_leaves(st_a.theta),
+                    jax.tree_util.tree_leaves(st_b.theta)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+    assert [h["step"] for h in hist_a] == [h["step"] for h in hist_b]

@@ -7,7 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCH_IDS, get_config
+pytestmark = pytest.mark.slow
+
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
 from repro.launch.steps import make_train_step
 from repro.models import model as M
 from repro.utils import has_nan

@@ -25,6 +25,7 @@ def test_pick_chunk():
 
 
 # ----------------------------------------------------------------- mamba
+@pytest.mark.slow
 def test_mamba_decode_matches_full(key):
     cfg = SSMConfig(kind="mamba", d_state=8, d_conv=4, expand=2)
     p = S.init_mamba(key, 16, cfg, jnp.float32)
@@ -50,6 +51,7 @@ def test_mamba_state_carries_context(key):
 
 
 # ----------------------------------------------------------------- rwkv6
+@pytest.mark.slow
 def test_rwkv6_decode_matches_full(key):
     cfg = SSMConfig(kind="rwkv6", n_heads=4)
     p = S.init_rwkv6(key, 32, cfg, jnp.float32)

@@ -115,6 +115,23 @@ def test_hlo_cost_dot_flops_exact():
     assert abs(s["flops"] - 2 * 32 * 64 * 16) / (2 * 32 * 64 * 16) < 0.05
 
 
+def test_hlo_cost_parses_unoptimized_dump():
+    """The pre-SPMD dump has no '%' prefixes, no computation signatures and
+    no known_trip_count backend config — the parser must still resolve
+    operand shapes, called computations and the loop trip count."""
+    def scanned(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        return jax.lax.scan(body, x, w)[0]
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+    txt = jax.jit(scanned).lower(x, w).compiler_ir("hlo").as_hlo_text()
+    analytic = 8 * 2 * 64 * 128 * 128
+    s = H.summarize(txt)
+    assert abs(s["flops"] - analytic) / analytic < 0.15
+
+
 def test_shape_bytes_parser():
     assert H._shape_bytes("bf16[2,3,4]{2,1,0}") == 48
     assert H._shape_bytes("(f32[10], s32[2])") == 48

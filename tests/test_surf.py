@@ -126,6 +126,7 @@ def test_meta_training_learns(problem):
     assert np.mean(accs[-10:]) > np.mean(accs[:10]) + 0.2
 
 
+@pytest.mark.slow
 def test_constraints_make_trajectory_descend(problem):
     """Appendix D ablation: with constraints the per-layer loss decreases
     monotonically-ish; without, intermediate layers are unconstrained."""

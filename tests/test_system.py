@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 
 def test_train_driver_end_to_end():
     from repro.launch.train import main
