@@ -1,11 +1,15 @@
 # Entry points for the tier-1 verification commands (see ROADMAP.md).
-#   make test       — the tier-1 gate: full suite, stop at first failure
-#   make test-fast  — the <1 min lane: deselects @pytest.mark.slow tests
-#   make bench      — SURF paper-figure benchmark battery (slow)
+#   make test         — the tier-1 gate: full suite, stop at first failure
+#   make test-fast    — the <1 min lane: deselects @pytest.mark.slow tests
+#   make test-sharded — the fast lane on 8 SIMULATED host devices: the ring
+#                       ppermute / agent-axis-sharded engine paths run with
+#                       nshards > 1 (they skip on a 1-device run)
+#   make bench        — SURF paper-figure benchmark battery (slow)
+#   make bench-scan   — scan-engine perf tracking: BENCH_scan_engine.json
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast bench
+.PHONY: test test-fast test-sharded bench bench-scan
 
 test:
 	$(PY) -m pytest -x -q
@@ -13,5 +17,12 @@ test:
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
 
+test-sharded:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	REPRO_SHARDED_LANE=1 $(PY) -m pytest -x -q -m "not slow"
+
 bench:
 	$(PY) -m benchmarks.run
+
+bench-scan:
+	sh scripts/bench.sh scan

@@ -23,6 +23,11 @@ CFG = BENCH
 META_TRAIN_Q = 60     # paper: 600 (CPU budget: 60, cycled)
 META_TEST_Q = 10      # paper: 30
 META_STEPS = 700
+# Robustness protocol: every figure evaluates over a batch of seeds in ONE
+# vmapped computation (surf.evaluate_surf(..., seeds=EVAL_SEEDS)) and
+# reports the seed mean — matching the many-seeds-per-config evaluation of
+# Hadou et al. 2023 without re-dispatching per seed.
+EVAL_SEEDS = (0, 1, 2, 3)
 
 
 def write_csv(name, header, rows):

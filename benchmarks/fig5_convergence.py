@@ -15,8 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (CFG, META_STEPS, META_TEST_Q, META_TRAIN_Q,
-                               star_cfg, write_csv)
+from benchmarks.common import (CFG, EVAL_SEEDS, META_STEPS, META_TEST_Q,
+                               META_TRAIN_Q, star_cfg, write_csv)
 from repro.core import baselines as BL
 from repro.core import surf, unroll as U
 from repro.data import synthetic
@@ -34,10 +34,12 @@ def eval_udgd(cfg, topology, seed=0):
     state, hist, S = surf.train_surf(cfg, mds, steps=META_STEPS, seed=seed,
                                      log_every=0, engine="scan")
     test = synthetic.make_meta_dataset(cfg, META_TEST_Q, seed=999)
-    res = surf.evaluate_surf(cfg, state, S, test)
+    # multi-seed evaluation layer: one compiled evaluator over EVAL_SEEDS
+    # keys, (n_seeds, L) accuracy stack -> seed mean
+    res = surf.evaluate_surf(cfg, state, S, test, seeds=EVAL_SEEDS)
     # per-layer accuracy -> per-communication-round (K rounds per layer)
     rounds = (np.arange(cfg.n_layers) + 1) * cfg.filter_taps
-    return rounds, np.asarray(res["acc_per_layer"]), S, test
+    return rounds, np.asarray(res["acc_per_layer"]).mean(0), S, test
 
 
 def eval_baselines(cfg, S, test, which, rounds, seed=1):

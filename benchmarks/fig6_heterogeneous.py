@@ -9,8 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (CFG, META_STEPS, META_TEST_Q, META_TRAIN_Q,
-                               write_csv)
+from benchmarks.common import (CFG, EVAL_SEEDS, META_STEPS, META_TEST_Q,
+                               META_TRAIN_Q, write_csv)
 from repro.core import baselines as BL
 from repro.core import surf, unroll as U
 from repro.data import synthetic
@@ -27,8 +27,8 @@ def main():
     for alpha in ALPHAS:
         test = synthetic.make_meta_dataset(CFG, META_TEST_Q, seed=555,
                                            alpha=alpha)
-        res = surf.evaluate_surf(CFG, state, S, test)
-        acc_u = float(res["final_acc"])
+        res = surf.evaluate_surf(CFG, state, S, test, seeds=EVAL_SEEDS)
+        acc_u = float(np.mean(res["final_acc"]))
         rows.append([alpha, "u-dgd(surf)",
                      int(CFG.n_layers * CFG.filter_taps), acc_u])
         for name, fn in BL.DECENTRALIZED.items():

@@ -7,8 +7,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (CFG, META_STEPS, META_TEST_Q, META_TRAIN_Q,
-                               write_csv)
+from benchmarks.common import (CFG, EVAL_SEEDS, META_STEPS, META_TEST_Q,
+                               META_TRAIN_Q, write_csv)
 from repro.core import surf
 from repro.data import synthetic
 from repro.data.pipeline import stack_meta_datasets
@@ -33,12 +33,14 @@ def main():
                                           constrained=constrained,
                                           log_every=0, init=init,
                                           engine="scan")
-            res = surf.evaluate_surf(CFG, state, S, test)
+            # (n_seeds, L) stacks from the multi-seed evaluator -> seed mean
+            res = surf.evaluate_surf(CFG, state, S, test, seeds=EVAL_SEEDS)
+            loss_l = np.asarray(res["loss_per_layer"]).mean(0)
+            acc_l = np.asarray(res["acc_per_layer"]).mean(0)
             tag = ("surf" if constrained else "no-constraints") + f"+{init}"
-            for l, (lo, ac) in enumerate(zip(res["loss_per_layer"],
-                                             res["acc_per_layer"])):
+            for l, (lo, ac) in enumerate(zip(loss_l, acc_l)):
                 rows.append([tag, l + 1, float(lo), float(ac)])
-            summary[tag] = np.asarray(res["acc_per_layer"])
+            summary[tag] = acc_l
     write_csv("fig7_ablation.csv", ["method", "layer", "loss", "accuracy"],
               rows)
     for tag, acc in summary.items():

@@ -1,0 +1,116 @@
+"""Scan-engine perf tracking: dense vs ring mix through ``train_scan`` on
+an agent-axis-sharded mesh, emitted as machine-readable JSON so the perf
+trajectory is comparable across PRs.
+
+Measures, per engine variant (dense graph filter / ring ppermute):
+  * first-call seconds (compile + one run of the whole scan),
+  * warm whole-run seconds and derived per-meta-step microseconds,
+  * per-meta-step collective bytes from ``launch.hlo_cost`` on the
+    post-SPMD HLO of the sharded meta step (the quantity the ring path
+    exists to shrink).
+
+Run via ``scripts/bench.sh scan`` (sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the ppermute
+path executes with nshards > 1 even on a laptop/CI CPU). Writes
+``bench_out/BENCH_scan_engine.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+
+from benchmarks.common import OUT_DIR
+from repro.configs.base import SURFConfig
+from repro.core import surf, trainer as TR
+from repro.core.ring import make_ring_mix
+from repro.data import synthetic
+from repro.data.pipeline import stack_meta_datasets
+from repro.launch.mesh import host_device_count, make_agent_mesh
+from repro.launch.surf_dryrun import meta_step_collective_bytes
+
+# Circulant-ring config at CPU-tractable scale; n_agents must divide the
+# shard count so both the 1-device and the 8-device simulated mesh run it.
+CFG = SURFConfig(n_agents=32, n_layers=4, filter_taps=2, feature_dim=16,
+                 n_classes=8, batch_per_agent=6, train_per_agent=12,
+                 test_per_agent=6, eps=0.05, topology="ring", degree=2)
+STEPS = 50
+META_Q = 8
+
+
+def bench_variant(cfg, S, mds, mesh, mix_fn, name):
+    """Both variants run the SHARDED engine (explicit agent-axis
+    in_shardings on the same mesh) so warm-step timing and collective
+    bytes describe one and the same executable — dense vs ring differ
+    only in the mixing filter."""
+    key = jax.random.PRNGKey(0)
+    stacked = stack_meta_datasets(mds)
+    run = TR.make_train_scan(cfg, S, mix_fn=mix_fn, mesh=mesh,
+                             stacked=stacked)
+
+    t0 = time.perf_counter()
+    state = TR.init_state(key, cfg)
+    state, metrics = run(state, stacked, key, STEPS)
+    jax.block_until_ready(metrics["test_loss"])
+    first_call_s = time.perf_counter() - t0
+
+    iters = 3
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        state = TR.init_state(key, cfg)
+        state, metrics = run(state, stacked, key, STEPS)
+    jax.block_until_ready(metrics["test_loss"])
+    warm_run_s = (time.perf_counter() - t0) / iters
+
+    coll, by_kind = meta_step_collective_bytes(cfg, S, mesh, mix_fn=mix_fn)
+    rec = {"first_call_s": round(first_call_s, 3),
+           "warm_run_s": round(warm_run_s, 4),
+           "warm_step_us": round(warm_run_s / STEPS * 1e6, 1),
+           "collective_bytes_per_meta_step": coll,
+           "collectives_by_kind": by_kind,
+           "final_test_loss": float(metrics["test_loss"][-1])}
+    print(f"{name:6s} first={rec['first_call_s']:7.3f}s "
+          f"warm_step={rec['warm_step_us']:9.1f}us "
+          f"coll_bytes/step={coll:12.0f}")
+    return rec
+
+
+def main():
+    ndev = host_device_count()
+    nshards = max(d for d in (1, 2, 4, 8) if d <= ndev
+                  and CFG.n_agents % d == 0)
+    mesh = make_agent_mesh(nshards)
+    cfg = CFG
+    _, S = surf.make_problem(cfg, seed=0)
+    mds = synthetic.make_meta_dataset(cfg, META_Q, seed=0)
+    hops = max(1, cfg.degree // 2)
+    mix = make_ring_mix(mesh, "data", cfg.n_agents, hops)
+
+    print(f"scan-engine bench: {ndev} devices, {nshards} agent shards, "
+          f"n={cfg.n_agents} L={cfg.n_layers} K={cfg.filter_taps} "
+          f"steps={STEPS}")
+    dense = bench_variant(cfg, S, mds, mesh, None, "dense")
+    ring = bench_variant(cfg, S, mds, mesh, mix, "ring")
+
+    out = {"devices": ndev, "agent_shards": nshards,
+           "config": dataclasses.asdict(cfg), "steps": STEPS,
+           "meta_datasets": META_Q, "dense": dense, "ring": ring,
+           "ring_vs_dense": {
+               "collective_bytes_ratio": (
+                   ring["collective_bytes_per_meta_step"]
+                   / dense["collective_bytes_per_meta_step"]
+                   if dense["collective_bytes_per_meta_step"] else None),
+               "warm_step_speedup": round(
+                   dense["warm_step_us"] / ring["warm_step_us"], 3)}}
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "BENCH_scan_engine.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+#!/usr/bin/env sh
+# Perf-tracking entry points (machine-readable output under bench_out/).
+#   scripts/bench.sh scan   # scan-engine bench (dense vs ring mix) on an
+#                           # 8-way SIMULATED mesh ->
+#                           # bench_out/BENCH_scan_engine.json
+#   scripts/bench.sh all    # full paper-figure battery (benchmarks.run)
+set -e
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+case "${1:-scan}" in
+  scan)
+    export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+    exec python -m benchmarks.scan_engine_bench ;;
+  all)
+    exec python -m benchmarks.run ;;
+  *)
+    echo "usage: scripts/bench.sh [scan|all]" >&2
+    exit 2 ;;
+esac

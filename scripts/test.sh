@@ -2,12 +2,20 @@
 # Tier-1 verification entry point (ROADMAP.md). Usage:
 #   scripts/test.sh          # full suite (the tier-1 gate)
 #   scripts/test.sh fast     # "not slow" lane, finishes in <1 min
+#   scripts/test.sh sharded  # "not slow" lane on 8 simulated devices —
+#                            # exercises ppermute with nshards > 1
 #   scripts/test.sh <args>   # forwarded verbatim to pytest
 set -e
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [ "$1" = "fast" ]; then
     shift
+    exec python -m pytest -x -q -m "not slow" "$@"
+fi
+if [ "$1" = "sharded" ]; then
+    shift
+    export XLA_FLAGS="--xla_force_host_platform_device_count=8"
+    export REPRO_SHARDED_LANE=1
     exec python -m pytest -x -q -m "not slow" "$@"
 fi
 exec python -m pytest -x -q "$@"

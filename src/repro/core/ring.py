@@ -38,8 +38,13 @@ def mesh_context(mesh):
 
 
 def make_ring_mix(mesh, axis: str, n: int, hops: int):
-    """Returns mix_one_hop(W_local) usable under shard_map, plus the
-    shard-mapped Horner graph filter mix_fn(W, h)."""
+    """Returns the shard-mapped Horner graph filter ``mix_fn(W, h)``.
+
+    The returned function carries a hashable ``.tag`` attribute —
+    ``("ring", axis, n, hops, mesh-fingerprint)`` — which the engine
+    caches in ``core.trainer`` / ``core.surf`` fold into their keys so two
+    ``make_ring_mix`` calls with identical geometry share one compiled
+    engine (an untagged ``mix_fn`` disables caching instead)."""
     nshards = mesh.shape[axis]
     assert n % nshards == 0
     nl = n // nshards
@@ -68,8 +73,14 @@ def make_ring_mix(mesh, axis: str, n: int, hops: int):
             Y = one_hop(Y) + h[k] * W_local
         return Y
 
-    mix_fn = _shard_map(filter_local, mesh=mesh,
-                        in_specs=(P(axis), P()), out_specs=P(axis))
+    smapped = _shard_map(filter_local, mesh=mesh,
+                         in_specs=(P(axis), P()), out_specs=P(axis))
+
+    def mix_fn(W, h):
+        return smapped(W, h)
+
+    from repro.sharding.surf_rules import mesh_fingerprint
+    mix_fn.tag = ("ring", axis, n, hops, mesh_fingerprint(mesh))
     return mix_fn
 
 

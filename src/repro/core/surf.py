@@ -3,8 +3,12 @@ the asynchronous-agent perturbation study (paper App. D).
 
 Meta-training defaults to the fully-jitted ``train_scan`` engine (one
 compiled scan per experiment); ``engine="python"`` keeps the step-wise
-loop. Evaluation over downstream datasets is a single vmapped+jitted
-computation instead of a Python loop per dataset.
+loop, and ``mix_fn``/``mesh`` route mixing through the ring ppermute path
+on an agent-axis-sharded mesh. Evaluation over downstream datasets is a
+single vmapped+jitted computation — a batch of seeds adds an OUTER vmap
+over evaluation keys, so robustness protocols that need many seeds per
+config (Hadou et al. 2023) compile once and return (n_seeds, ...) metric
+stacks instead of re-dispatching per seed.
 """
 from __future__ import annotations
 
@@ -29,15 +33,20 @@ def make_problem(cfg: SURFConfig, seed=0):
 
 def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
                constrained=True, activation="relu", log_every=10,
-               init="dgd", engine="scan"):
+               init="dgd", engine="scan", mix_fn=None, mesh=None):
     if engine not in ("scan", "python"):
         raise ValueError(f"engine must be 'scan' or 'python', got {engine!r}")
+    if mesh is not None and engine != "scan":
+        raise ValueError("mesh shardings require engine='scan' (the "
+                         "step-wise python driver is unsharded)")
     _, S = make_problem(cfg, seed)
     key = jax.random.PRNGKey(seed)
+    kw = {"mix_fn": mix_fn, "mesh": mesh} if engine == "scan" else \
+        {"mix_fn": mix_fn}
     driver = TR.train_scan if engine == "scan" else TR.train
     state, hist = driver(cfg, S, meta_datasets, steps, key,
                          constrained=constrained, activation=activation,
-                         log_every=log_every, init=init)
+                         log_every=log_every, init=init, **kw)
     return state, hist, S
 
 
@@ -49,29 +58,68 @@ def _eval_keys(base_key, n):
 # loops evaluate many times with identical shapes and must not re-trace per
 # call. Keys share trainer._engine_cache_key's normalization so non-star
 # topology variants (which only differ in how S was built) reuse one
-# executable.
+# executable; the key also carries the mesh fingerprint and mix tag (see
+# trainer._engine_cache_key), so ring-mix evaluators don't collide with
+# dense ones. An untagged custom mix_fn is uncacheable and rebuilt per
+# call.
 _EVAL_CACHE: dict = {}
 _ASYNC_CACHE: dict = {}
 
 
-def _batched_eval(cfg: SURFConfig, activation):
-    key = TR._engine_cache_key(cfg, "eval", activation, None)
+def _batched_eval(cfg: SURFConfig, activation, mix_fn=None):
+    """One compiled evaluator per config: inner vmap over the stacked
+    dataset axis Q, OUTER vmap over a batch of evaluation keys — called
+    with keys (n_seeds, Q, 2), returns (n_seeds, Q, ...) metric stacks."""
+    def build():
+        ev_s = TR._eval_core(cfg, activation, None, mix_fn)
+        per_q = jax.vmap(ev_s, in_axes=(None, None, 0, 0))
+        return jax.jit(jax.vmap(per_q, in_axes=(None, None, None, 0)))
+    key = TR._engine_cache_key(cfg, "eval", activation, None, mix_fn=mix_fn)
+    if key is None:
+        return build()
     if key not in _EVAL_CACHE:
-        ev_s = TR._eval_core(cfg, activation, None)
-        _EVAL_CACHE[key] = jax.jit(
-            jax.vmap(ev_s, in_axes=(None, None, 0, 0)))
+        _EVAL_CACHE[key] = build()
     return _EVAL_CACHE[key]
 
 
+def _seed_batch(seed, seeds):
+    """Normalize the (seed, seeds) pair: returns (array of seeds, whether
+    the caller asked for a single unbatched seed)."""
+    if seeds is None:
+        return np.asarray([seed], np.int64), True
+    arr = np.asarray(list(seeds), np.int64).reshape(-1)
+    if arr.size == 0:
+        raise ValueError("seeds must be non-empty")
+    return arr, False
+
+
 def evaluate_surf(cfg: SURFConfig, state, S, datasets, seed=0,
-                  activation="relu"):
-    """Average per-layer loss/acc trajectories over downstream datasets —
-    one vmapped computation over the stacked dataset axis."""
+                  activation="relu", seeds=None, mix_fn=None, mesh=None):
+    """Per-layer loss/acc trajectories averaged over downstream datasets —
+    one vmapped computation over the stacked dataset axis.
+
+    ``seeds``: optional batch of evaluation seeds. When given, a single
+    compiled evaluator runs all seeds via an outer vmap over keys and
+    every returned metric gains a leading (n_seeds,) axis — row i matches
+    ``evaluate_surf(..., seed=seeds[i])`` exactly (same fold_in stream).
+    ``mix_fn`` evaluates with the ring ppermute filter instead of S;
+    ``mesh`` places the stacked pool with its Q axis sharded over 'data'
+    (``sharding.surf_rules.stacked_q_sharding``) — data-parallel
+    evaluation over downstream datasets."""
     stacked = stack_meta_datasets(datasets)
     n_q = jax.tree_util.tree_leaves(stacked)[0].shape[0]
-    keys = _eval_keys(jax.random.PRNGKey(1000 + seed), n_q)
-    outs = _batched_eval(cfg, activation)(S, state.theta, stacked, keys)
-    return {k: np.asarray(v).mean(0) for k, v in outs.items()}
+    if mesh is not None:
+        from repro.sharding.surf_rules import stacked_q_sharding
+        q_sh = stacked_q_sharding(mesh, n_q)
+        stacked = jax.device_put(
+            stacked, jax.tree_util.tree_map(lambda _: q_sh, stacked))
+    seed_arr, single = _seed_batch(seed, seeds)
+    keys = jnp.stack([_eval_keys(jax.random.PRNGKey(1000 + int(s)), n_q)
+                      for s in seed_arr])
+    outs = _batched_eval(cfg, activation, mix_fn)(S, state.theta, stacked,
+                                                  keys)
+    res = {k: np.asarray(v).mean(1) for k, v in outs.items()}
+    return {k: v[0] for k, v in res.items()} if single else res
 
 
 def _async_core(cfg: SURFConfig, activation):
@@ -127,25 +175,40 @@ def async_masks(cfg: SURFConfig, n_datasets, n_async, seed=0):
 
 
 def _batched_async(cfg: SURFConfig, activation):
+    """One compiled async evaluator per config: inner vmap over datasets
+    (per-dataset masks preserved), outer vmap over seed keys+masks —
+    called with keys (n_seeds, Q, 2) and masks (n_seeds, Q, n)."""
     key = TR._engine_cache_key(cfg, "async", activation, None)
     if key not in _ASYNC_CACHE:
         run_s = _async_core(cfg, activation)
+        per_q = jax.vmap(run_s, in_axes=(None, None, 0, 0, 0))
         _ASYNC_CACHE[key] = jax.jit(
-            jax.vmap(run_s, in_axes=(None, None, 0, 0, 0)))
+            jax.vmap(per_q, in_axes=(None, None, None, 0, 0)))
     return _ASYNC_CACHE[key]
 
 
 def evaluate_async(cfg: SURFConfig, state, S, datasets, n_async, seed=0,
-                   activation="relu"):
+                   activation="relu", seeds=None):
     """Asynchronous communications (paper Fig. 8) over all downstream
-    datasets in one vmapped computation, each dataset with its own mask."""
+    datasets in one vmapped computation, each dataset with its own mask.
+
+    ``seeds``: optional batch of evaluation seeds — one outer-vmapped
+    computation over (keys, masks); each seed draws its own per-dataset
+    async masks and every returned metric gains a leading (n_seeds,)
+    axis, row i matching ``evaluate_async(..., seed=seeds[i])``."""
     stacked = stack_meta_datasets(datasets)
     n_q = jax.tree_util.tree_leaves(stacked)[0].shape[0]
-    masks = jnp.asarray(async_masks(cfg, n_q, n_async, seed=seed))
-    keys = _eval_keys(jax.random.PRNGKey(2000 + seed), n_q)
+    seed_arr, single = _seed_batch(seed, seeds)
+    masks = jnp.stack([jnp.asarray(async_masks(cfg, n_q, n_async,
+                                               seed=int(s)))
+                       for s in seed_arr])
+    keys = jnp.stack([_eval_keys(jax.random.PRNGKey(2000 + int(s)), n_q)
+                      for s in seed_arr])
     losses, accs = _batched_async(cfg, activation)(
         S, state.theta, stacked, keys, masks)
-    losses = np.asarray(losses).mean(0)
-    accs = np.asarray(accs).mean(0)
+    losses = np.asarray(losses).mean(1)      # (n_seeds, L)
+    accs = np.asarray(accs).mean(1)
+    if single:
+        losses, accs = losses[0], accs[0]
     return {"loss_per_layer": losses, "acc_per_layer": accs,
-            "final_loss": losses[-1], "final_acc": accs[-1]}
+            "final_loss": losses[..., -1], "final_acc": accs[..., -1]}

@@ -16,6 +16,13 @@ Two drivers share the same ``meta_step``:
   * ``train`` — the step-wise Python loop over the SAME jitted
     ``meta_step`` and the SAME fold_in RNG stream, for interactive /
     per-step-logging use. Both produce identical results.
+
+The scan engine is mesh-aware: ``mix_fn``/``mesh`` replace the dense
+graph filter with the ring ``ppermute`` halo exchange of ``core.ring`` on
+an agent-axis-sharded mesh (specs in ``sharding.surf_rules``), and the
+compiled-engine cache is keyed on (normalized cfg, variant, activation,
+star, mesh-fingerprint, mix-tag) so sharded/ring engines never collide
+with dense ones while identical ring geometries share one executable.
 """
 from __future__ import annotations
 
@@ -33,10 +40,12 @@ from repro.core import unroll as U
 from repro.data.pipeline import stack_meta_datasets
 from repro.optim import adam, apply_updates, clip_by_global_norm
 
-# Incremented each time a meta_step body is TRACED (not executed) — the
-# scan engine's contract is that an entire training run traces it at most
-# twice (once for the scan, possibly once for a standalone jit).
-TRACE_COUNTS = {"meta_step": 0}
+# Incremented each time a meta_step / eval body is TRACED (not executed) —
+# the scan engine's contract is that an entire training run traces
+# meta_step at most twice (once for the scan, possibly once for a
+# standalone jit), and the multi-seed evaluator's is that one batched
+# evaluate call traces the body exactly once regardless of seed count.
+TRACE_COUNTS = {"meta_step": 0, "eval": 0}
 
 
 class TrainState(NamedTuple):
@@ -123,21 +132,23 @@ def make_meta_step(cfg: SURFConfig, S, *, constrained=True,
     return (jax.jit(meta_step) if jit else meta_step), forward
 
 
-def _eval_core(cfg: SURFConfig, activation, star):
+def _eval_core(cfg: SURFConfig, activation, star, mix_fn=None):
     """S-as-argument evaluation body ``evaluate_s(S, theta, batch, key)`` —
     keeping S out of the closure lets ``core.surf`` cache one jitted vmapped
-    evaluator per config across topologies/seeds."""
+    evaluator per config across topologies/seeds. ``mix_fn`` replaces the
+    dense graph filter (ring ppermute path), same contract as the trainer."""
     use_star = cfg.topology == "star" if star is None else star
     layer_fn = U.udgd_layer_star if use_star else U.udgd_layer
 
     def evaluate_s(S, theta, batch, key):
+        TRACE_COUNTS["eval"] += 1
         kw, kb = jax.random.split(key)
         W0 = U.sample_w0(kw, cfg)
         Xl, Yl = U.sample_layer_batches(kb, batch["Xtr"], batch["Ytr"], cfg)
 
         def body(W, xs):
             p_l, Xb, Yb = xs
-            Wn = layer_fn(p_l, S, W, Xb, Yb, cfg, activation)
+            Wn = layer_fn(p_l, S, W, Xb, Yb, cfg, activation, mix_fn=mix_fn)
             loss = T.fl_loss(Wn, batch["Xte"], batch["Yte"],
                              cfg.feature_dim, cfg.n_classes)
             acc = T.fl_accuracy(Wn, batch["Xte"], batch["Yte"],
@@ -150,11 +161,13 @@ def _eval_core(cfg: SURFConfig, activation, star):
     return evaluate_s
 
 
-def make_eval(cfg: SURFConfig, S, *, activation="relu", star=None, jit=True):
+def make_eval(cfg: SURFConfig, S, *, activation="relu", star=None, jit=True,
+              mix_fn=None):
     """Per-layer loss/accuracy trajectory on a downstream dataset — the
     evaluation used for every paper figure. ``jit=False`` returns the raw
-    body for embedding under vmap (see ``core.surf.evaluate_surf``)."""
-    evaluate_s = _eval_core(cfg, activation, star)
+    body for embedding under vmap (see ``core.surf.evaluate_surf``);
+    ``mix_fn`` routes mixing through the ring ppermute filter."""
+    evaluate_s = _eval_core(cfg, activation, star, mix_fn)
 
     def evaluate(theta, batch, key):
         return evaluate_s(S, theta, batch, key)
@@ -169,24 +182,43 @@ def make_eval(cfg: SURFConfig, S, *, activation="relu", star=None, jit=True):
 _ENGINE_CACHE: dict = {}
 
 
-def _engine_cache_key(cfg: SURFConfig, variant, activation, star):
+def _mix_tag(mix_fn):
+    """Hashable identity of a mix_fn for engine-cache keys. Tagged mixers
+    (``core.ring.make_ring_mix`` sets ``.tag``) cache normally; an
+    untagged custom mix_fn returns None, which the engine builders treat
+    as "don't cache" (the closure could compute anything)."""
+    return getattr(mix_fn, "tag", None) if mix_fn is not None else ()
+
+
+def _engine_cache_key(cfg: SURFConfig, variant, activation, star,
+                      mesh=None, mix_fn=None):
     """Normalize cfg to the fields that shape the traced computation: on the
     non-star path the topology/degree/er_p fields only affect how S was
     BUILT (S itself is a jit argument), so 'regular' and 'er' experiments
     share one executable. The star path reads cfg.topology inside
     ``star_filter_mask`` and keeps the full config. ``variant`` is an
     arbitrary hashable tag distinguishing computations the other fields
-    don't ("train"/constrained, "eval", "async")."""
+    don't ("train"/constrained, "eval", "async").
+
+    The full key is (cfg, variant, activation, star, mesh-fingerprint,
+    mix-tag): engines lowered with different explicit shardings or a
+    different ring geometry are different executables. Returns None
+    (uncacheable) for an untagged custom ``mix_fn``."""
     import dataclasses
+    from repro.sharding.surf_rules import mesh_fingerprint
+    mt = _mix_tag(mix_fn)
+    if mt is None:
+        return None
     use_star = cfg.topology == "star" if star is None else star
     if not use_star:
         cfg = dataclasses.replace(cfg, topology="regular", degree=0,
                                   er_p=0.0)
-    return (cfg, variant, activation, use_star)
+    return (cfg, variant, activation, use_star, mesh_fingerprint(mesh), mt)
 
 
 def make_train_scan(cfg: SURFConfig, S, *, constrained=True,
-                    activation="relu", star=None, mix_fn=None):
+                    activation="relu", star=None, mix_fn=None, mesh=None,
+                    stacked=None):
     """Build the device-resident meta-training engine: one jitted
     ``lax.scan`` over meta-steps.
 
@@ -195,10 +227,26 @@ def make_train_scan(cfg: SURFConfig, S, *, constrained=True,
     cycled round-robin on device), the incoming ``state`` buffers are
     DONATED, per-step RNG is ``fold_in(key, t)``, and ``metrics`` is the
     full history as stacked device arrays of shape (steps,).
+
+    ``mix_fn`` replaces the dense graph filter inside the jitted scan with
+    e.g. the ring ppermute path (``core.ring.make_ring_mix``); ``mesh``
+    additionally pins explicit in/out shardings on the engine (state, key,
+    S replicated; the stacked dataset's AGENT axis over 'data' — see
+    ``sharding.surf_rules``). Pass the ``stacked`` pytree along with
+    ``mesh`` so the dataset shardings are leaf-aware (aux leaves without
+    an agent axis replicate); without it a pytree-prefix spec is used,
+    which only flat Xtr/Ytr/Xte/Yte dicts satisfy. Engines are cached per
+    (normalized cfg, variant, activation, star, mesh-fingerprint,
+    mix-tag[, stacked structure]); an untagged custom ``mix_fn`` is never
+    cached.
     """
-    cache_key = (_engine_cache_key(cfg, ("train", constrained), activation,
-                                   star)
-                 if mix_fn is None else None)
+    cache_key = _engine_cache_key(cfg, ("train", constrained), activation,
+                                  star, mesh=mesh, mix_fn=mix_fn)
+    if cache_key is not None and mesh is not None and stacked is not None:
+        from repro.sharding.surf_rules import stacked_sharded_flags
+        cache_key = cache_key + (
+            jax.tree_util.tree_structure(stacked),
+            stacked_sharded_flags(stacked, cfg.n_agents))
     if cache_key is not None and cache_key in _ENGINE_CACHE:
         run_s = _ENGINE_CACHE[cache_key]
         return lambda state, stacked, key, steps: run_s(state, stacked, key,
@@ -207,7 +255,17 @@ def make_train_scan(cfg: SURFConfig, S, *, constrained=True,
     meta_step_s, _ = _meta_step_core(cfg, constrained, activation, star,
                                      mix_fn)
 
-    @partial(jax.jit, static_argnames=("steps",), donate_argnums=(0,))
+    jit_kwargs = {}
+    if mesh is not None:
+        from repro.sharding.surf_rules import train_scan_shardings
+        in_sh, out_sh = train_scan_shardings(mesh, cfg.n_agents,
+                                             stacked=stacked)
+        # dynamic-arg order is (state, stacked, key, S) — ``steps`` is
+        # static and takes no sharding
+        jit_kwargs = {"in_shardings": in_sh, "out_shardings": out_sh}
+
+    @partial(jax.jit, static_argnames=("steps",), donate_argnums=(0,),
+             **jit_kwargs)
     def run_s(state: TrainState, stacked, key, steps: int, S):
         n_q = jax.tree_util.tree_leaves(stacked)[0].shape[0]
 
@@ -236,35 +294,40 @@ def _decimate_history(metrics, steps, log_every):
 
 
 def train_scan(cfg: SURFConfig, S, meta_datasets, steps, key,
-               constrained=True, activation="relu", log_every=0, init="dgd"):
+               constrained=True, activation="relu", log_every=0, init="dgd",
+               mix_fn=None, mesh=None):
     """Run Algorithm 1 as ONE compiled scan over ``steps`` meta-iterations,
     cycling the meta-training datasets on device. Returns (state, history)
     with history decimated to ``log_every`` on host — same contract as the
-    step-wise ``train``."""
+    step-wise ``train``. ``mix_fn``/``mesh`` route mixing through the ring
+    ppermute path on an agent-axis-sharded mesh (see ``make_train_scan``)."""
     state = init_state(key, cfg, init=init)
     stacked = stack_meta_datasets(meta_datasets)
     run = make_train_scan(cfg, S, constrained=constrained,
-                          activation=activation)
+                          activation=activation, mix_fn=mix_fn, mesh=mesh,
+                          stacked=stacked)
     state, metrics = run(state, stacked, key, int(steps))
     return state, _decimate_history(metrics, int(steps), log_every)
 
 
 def train(cfg: SURFConfig, S, meta_datasets, steps, key,
-          constrained=True, activation="relu", log_every=0, init="dgd"):
+          constrained=True, activation="relu", log_every=0, init="dgd",
+          mix_fn=None):
     """Step-wise Algorithm 1: a thin Python loop over the same jitted
     ``meta_step`` and fold_in RNG stream as ``train_scan`` — use when you
     need host access to metrics every iteration (interactive logging,
     early stopping). Returns (state, history)."""
     state = init_state(key, cfg, init=init)
     meta_step, _ = make_meta_step(cfg, S, constrained=constrained,
-                                  activation=activation)
+                                  activation=activation, mix_fn=mix_fn)
     hist = []
-    if isinstance(meta_datasets, dict):     # pre-stacked pytree (Q, ...)
-        n_q = jax.tree_util.tree_leaves(meta_datasets)[0].shape[0]
-        get_batch = lambda q: {k: v[q] for k, v in meta_datasets.items()}
-    else:
+    if isinstance(meta_datasets, (list, tuple)):
         n_q = len(meta_datasets)
         get_batch = lambda q: meta_datasets[q]
+    else:                                   # pre-stacked pytree (Q, ...)
+        n_q = jax.tree_util.tree_leaves(meta_datasets)[0].shape[0]
+        get_batch = lambda q: jax.tree_util.tree_map(
+            lambda a: a[q], meta_datasets)
     for t in range(steps):
         state, m = meta_step(state, get_batch(t % n_q),
                              jax.random.fold_in(key, t))

@@ -80,12 +80,14 @@ def udgd_layer(params_l, S, W, Xb, Yb, cfg: SURFConfig, activation="relu",
     return mixed - act(z)
 
 
-def udgd_forward(params, S, W0, Xl, Yl, cfg: SURFConfig, activation="relu"):
+def udgd_forward(params, S, W0, Xl, Yl, cfg: SURFConfig, activation="relu",
+                 mix_fn=None):
     """Run L layers. Xl (L,n,b,F), Yl (L,n,b).
-    Returns (W_L, W_all (L+1,n,d) including W0)."""
+    Returns (W_L, W_all (L+1,n,d) including W0). ``mix_fn`` overrides the
+    dense graph filter in every layer (ring ppermute path)."""
     def body(W, xs):
         p_l, Xb, Yb = xs
-        Wn = udgd_layer(p_l, S, W, Xb, Yb, cfg, activation)
+        Wn = udgd_layer(p_l, S, W, Xb, Yb, cfg, activation, mix_fn=mix_fn)
         return Wn, Wn
     W_L, Ws = jax.lax.scan(body, W0, (params, Xl, Yl))
     W_all = jnp.concatenate([W0[None], Ws], axis=0)

@@ -7,25 +7,30 @@ gives constant log V loss and hides optimizer bugs).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 
 def stack_meta_datasets(datasets):
-    """Stack a list of downstream-dataset dicts (same keys/shapes) into one
-    device-resident pytree with a leading dataset axis: {k: (Q, ...)}.
+    """Stack a list of downstream-dataset pytrees (same structure/shapes)
+    into one device-resident pytree with a leading dataset axis — for flat
+    dicts, {k: (Q, ...)}.
 
     This is the input format of the fully-jitted engines in ``core.trainer``
     (``train_scan`` indexes the Q axis per meta-step) and ``core.surf``
-    (vmapped evaluation maps over it). A dict passes through unchanged so
-    callers can pre-stack once and reuse.
+    (vmapped evaluation maps over it). Nested pytrees (e.g. datasets
+    carrying auxiliary sub-dicts) stack leaf-wise; a non-list input is
+    treated as already stacked and passes through (leaves coerced to
+    device arrays) so callers can pre-stack once and reuse.
     """
-    if isinstance(datasets, dict):
-        return {k: jnp.asarray(v) for k, v in datasets.items()}
+    if not isinstance(datasets, (list, tuple)):
+        return jax.tree_util.tree_map(jnp.asarray, datasets)
     if not datasets:
         raise ValueError("stack_meta_datasets: empty dataset list")
-    keys = datasets[0].keys()
-    return {k: jnp.stack([jnp.asarray(d[k]) for d in datasets]) for k in keys}
+    return jax.tree_util.tree_map(
+        lambda *leaves: jnp.stack([jnp.asarray(l) for l in leaves]),
+        *datasets)
 
 
 class TokenPipeline:

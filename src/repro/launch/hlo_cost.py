@@ -36,7 +36,14 @@ _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
 _NAME_RE = re.compile(r"^[\w.\-]+$")
 _OP_RE = re.compile(r"^(\([^)]*\)|\S+)\s+([\w\-]+)\((.*)$")
 _PARAM_RE = re.compile(r"%?([\w.\-]+):\s*(\([^)]*\)|[\w\[\],{}\s]+?)(?:,|\)\s*->)")
-_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+# replica_groups appears in three layouts across XLA versions:
+#   dims form          replica_groups=[n,m]            (n groups of m)
+#   iota form          replica_groups=[n,m]<=[k] / <=[a,b]T(1,0)  (newer XLA)
+#   explicit-ids form  replica_groups={{0,1,2,3},{4,5,6,7}}
+# The dims regex matches the first two (the iota suffix follows the same
+# [n,m] shape prefix); the braces form counts ids in the first group.
+_GROUPS_DIMS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_IDS_RE = re.compile(r"replica_groups=\{\{([\d,\s]*)\}")
 _TRIP_RE = re.compile(r'"known_trip_count":\s*\{"n":\s*"(\d+)"')
 
 ELEMENTWISE = {
@@ -249,6 +256,21 @@ def _conv_flops(op: Op, comp: Computation):
     return 2.0 * out_elems * k
 
 
+def _group_size(rest: str, default=2) -> int:
+    """Participant count per replica group of a collective op — the ``n``
+    in the ring multipliers. Handles the dims/iota/explicit-ids layouts
+    (see the regex comment above)."""
+    m = _GROUPS_DIMS_RE.search(rest)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_IDS_RE.search(rest)
+    if m:
+        ids = [t for t in m.group(1).split(",") if t.strip()]
+        if ids:
+            return max(len(ids), 1)
+    return default
+
+
 def _trip_count(op: Op, comps, default=1):
     m = _TRIP_RE.search(op.rest)
     if m:
@@ -391,10 +413,7 @@ def analyze(text: str) -> Cost:
                         worst = max(sub, key=lambda c: c.flops)
                         total.add(worst)
             elif any(oc.startswith(c) for c in COLLECTIVES):
-                n = 2
-                gm = _GROUPS_RE.search(op.rest)
-                if gm:
-                    n = max(int(gm.group(2)), 1)
+                n = _group_size(op.rest)
                 ring = (n - 1) / n if n > 1 else 0.0
                 res_b = _shape_bytes(op.result_type)
                 opnd_b = sum(_shape_bytes(comp.symbols.get(o, ""))

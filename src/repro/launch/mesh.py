@@ -1,6 +1,14 @@
 """Production meshes (task spec: single pod 16×16 = 256 chips; multi-pod
-2×16×16 = 512 chips). A FUNCTION, not a module constant — importing this
-module never touches jax device state."""
+2×16×16 = 512 chips) plus the agent-axis mesh the sharded SURF engine
+trains on. FUNCTIONS, not module constants — importing this module never
+touches jax device state.
+
+CI runs the sharded path on simulated host devices:
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the
+``make test-sharded`` lane) makes ``host_device_count()`` report 8 and
+``make_agent_mesh()`` build a real 8-shard mesh whose ``ppermute``
+collectives execute with nshards > 1.
+"""
 from __future__ import annotations
 
 import jax
@@ -15,3 +23,24 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_cpu_mesh():
     """1-device mesh for smoke tests / benches (no XLA_FLAGS needed)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def host_device_count() -> int:
+    """Number of addressable devices on this host — 1 on a plain-CPU CI
+    run, N under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``,
+    the real chip count on hardware."""
+    return len(jax.devices())
+
+
+def make_agent_mesh(n_shards: int | None = None):
+    """Mesh for agent-axis-sharded SURF training: ``n_shards`` devices on
+    'data' (the axis ``core.ring.make_ring_mix`` permutes over), a trivial
+    'model' axis so the same P('data', ...) specs work on every mesh in
+    this repo. Defaults to all addressable devices."""
+    n = host_device_count() if n_shards is None else int(n_shards)
+    if n > host_device_count():
+        raise ValueError(
+            f"make_agent_mesh: {n} shards requested but only "
+            f"{host_device_count()} devices visible (CI: set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n})")
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -25,6 +25,43 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
 
 
+def surf_batch_specs(cfg):
+    """ShapeDtypeStructs of one meta-training batch (the Xtr/Ytr/Xte/Yte
+    dict every SURF lowering harness needs) — single source of truth for
+    the dry-run, the sharded-engine tests and the scan-engine bench."""
+    n, m, t, F_ = (cfg.n_agents, cfg.train_per_agent, cfg.test_per_agent,
+                   cfg.feature_dim)
+    return {
+        "Xtr": jax.ShapeDtypeStruct((n, m, F_), jnp.float32),
+        "Ytr": jax.ShapeDtypeStruct((n, m), jnp.int32),
+        "Xte": jax.ShapeDtypeStruct((n, t, F_), jnp.float32),
+        "Yte": jax.ShapeDtypeStruct((n, t), jnp.int32),
+    }
+
+
+def meta_step_collective_bytes(cfg, S, mesh, mix_fn=None):
+    """Per-META-STEP collective traffic of the agent-axis-sharded engine:
+    lower ONE meta step (state/key replicated, batch agent-sharded) and
+    parse its post-SPMD HLO. Returns (total collective bytes, per-kind
+    dict) — independent of the scan trip count; the quantity the ring
+    ``mix_fn`` path exists to shrink."""
+    from repro.core import trainer as TR
+    from repro.sharding.surf_rules import (agent_sharding, replicated,
+                                           train_state_shardings)
+    rep = replicated(mesh)
+    agent_sh = agent_sharding(mesh, cfg.n_agents)
+    state_spec = jax.eval_shape(lambda k: TR.init_state(k, cfg),
+                                jax.random.PRNGKey(0))
+    state_sh = train_state_shardings(state_spec, mesh)
+    step, _ = TR.make_meta_step(cfg, S, mix_fn=mix_fn, jit=False)
+    fn = jax.jit(step, in_shardings=(state_sh, agent_sh, rep),
+                 out_shardings=(state_sh, rep))
+    txt = fn.lower(state_spec, surf_batch_specs(cfg),
+                   jax.ShapeDtypeStruct((2,), jnp.uint32)).compile().as_text()
+    parsed = hlo_cost.summarize(txt)
+    return parsed["collective_bytes"], parsed["collectives"]
+
+
 def lower_surf_step(multi_pod: bool = False, cfg=DRYRUN, ring: bool = False,
                     infer: bool = False):
     """``infer=True`` lowers the deployed unrolled optimizer (forward only,
@@ -69,14 +106,7 @@ def lower_surf_step(multi_pod: bool = False, cfg=DRYRUN, ring: bool = False,
 
         state_spec = jax.eval_shape(
             lambda k: TR.init_state(k, cfg), jax.random.PRNGKey(0))
-        n, m, t, F_ = (cfg.n_agents, cfg.train_per_agent,
-                       cfg.test_per_agent, cfg.feature_dim)
-        batch_spec = {
-            "Xtr": jax.ShapeDtypeStruct((n, m, F_), jnp.float32),
-            "Ytr": jax.ShapeDtypeStruct((n, m), jnp.int32),
-            "Xte": jax.ShapeDtypeStruct((n, t, F_), jnp.float32),
-            "Yte": jax.ShapeDtypeStruct((n, t), jnp.int32),
-        }
+        batch_spec = surf_batch_specs(cfg)
         key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
         rep = NamedSharding(mesh, P())
         agent_sh = NamedSharding(mesh, P(dp))

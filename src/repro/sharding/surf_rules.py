@@ -1,0 +1,140 @@
+"""NamedSharding rules for the SURF meta-training/evaluation engines.
+
+The scan engine (``core.trainer.make_train_scan``) is one jitted
+computation, so the whole sharding story is three input specs:
+
+  * ``TrainState`` (θ / λ / opt state) — REPLICATED. θ is the shared
+    per-layer perceptron+filter-tap stack (Θ(d²), tiny next to the data)
+    and every agent shard needs all of it, so replication is both correct
+    and collective-free on the backward all-reduce path.
+  * stacked meta-dataset pytree ``{k: (Q, n, ...)}`` — two regimes:
+    - TRAIN (``stacked_agent_sharding``): the AGENT axis (dim 1) shards
+      over 'data' so the per-step indexed batch arrives already
+      agent-partitioned and the ring ``mix_fn`` halo exchange never sees
+      a gather. Q stays replicated (one dataset is indexed per meta-step;
+      sharding Q would turn every index into a cross-device fetch).
+    - EVAL (``stacked_q_sharding``): the vmapped evaluator maps over Q,
+      so the Q axis (dim 0) shards over 'data' — data-parallel
+      evaluation over downstream datasets.
+  * the agent axis of ``W`` / per-step batches (``agent_sharding``) —
+    dim 0 over 'data', matching ``core.ring.make_ring_mix``'s
+    ``in_specs=P('data')``.
+
+Every rule degrades to replication when the dim doesn't divide the axis
+(the same policy as ``sharding.rules``), so a 1-device CI mesh and an
+indivisible Q both lower without error.
+
+``mesh_fingerprint`` is the hashable mesh identity used by the engine
+caches in ``core.trainer`` / ``core.surf`` — two jitted engines may only
+share an executable when (axis names, axis sizes, device ids, platform)
+all agree.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def mesh_fingerprint(mesh: Mesh | None):
+    """Hashable identity of a mesh for engine-cache keys (None passes
+    through so unsharded engines keep their old keys)."""
+    if mesh is None:
+        return None
+    devs = tuple(int(d.id) for d in np.asarray(mesh.devices).flat)
+    platform = np.asarray(mesh.devices).flat[0].platform
+    return (tuple(mesh.axis_names),
+            tuple(int(mesh.shape[a]) for a in mesh.axis_names),
+            devs, platform)
+
+
+def _axis_size(mesh: Mesh, axis: str) -> int:
+    return int(mesh.shape[axis]) if axis in mesh.axis_names else 1
+
+
+def _dim_spec(dim_size: int | None, mesh: Mesh, axis: str, position: int,
+              ndim_hint: int | None = None) -> P:
+    """P with ``axis`` at ``position`` when the dim divides the axis size,
+    else fully replicated. ``dim_size=None`` skips the divisibility check
+    (caller guarantees it, e.g. the ring path asserts n % nshards == 0)."""
+    size = _axis_size(mesh, axis)
+    if size <= 1:
+        return P()
+    if dim_size is not None and dim_size % size != 0:
+        return P()
+    spec = [None] * (position + 1)
+    spec[position] = axis
+    return P(*spec)
+
+
+def agent_sharding(mesh: Mesh, n_agents: int | None = None,
+                   axis: str = "data") -> NamedSharding:
+    """W / per-step batch leaves: agent axis (dim 0) over ``axis``."""
+    return NamedSharding(mesh, _dim_spec(n_agents, mesh, axis, 0))
+
+
+def stacked_agent_sharding(mesh: Mesh, n_agents: int | None = None,
+                           axis: str = "data") -> NamedSharding:
+    """Stacked meta-dataset leaves (Q, n, ...): agent axis (dim 1) over
+    ``axis`` — the TRAIN-engine input spec (usable as a pytree prefix:
+    trailing dims replicate)."""
+    return NamedSharding(mesh, _dim_spec(n_agents, mesh, axis, 1))
+
+
+def stacked_q_sharding(mesh: Mesh, n_q: int | None = None,
+                       axis: str = "data") -> NamedSharding:
+    """Stacked meta-dataset leaves (Q, ...): Q axis (dim 0) over ``axis``
+    — the vmapped-EVAL input spec."""
+    return NamedSharding(mesh, _dim_spec(n_q, mesh, axis, 0))
+
+
+def train_state_shardings(state, mesh: Mesh):
+    """Replicated sharding for every TrainState leaf (θ, λ, opt state,
+    step). Accepts the state pytree or a ShapeDtypeStruct tree."""
+    rep = replicated(mesh)
+    return jax.tree_util.tree_map(lambda _: rep, state)
+
+
+def stacked_shardings_tree(stacked, mesh: Mesh, n_agents: int,
+                           axis: str = "data"):
+    """Per-leaf shardings for a stacked meta-dataset pytree: leaves whose
+    dim 1 IS the agent axis get ``stacked_agent_sharding``; anything else
+    (auxiliary leaves without an agent axis, indivisible shapes)
+    replicates. Leaf-aware on purpose — a pytree-prefix spec would reject
+    nested aux entries riding along in the dataset dicts."""
+    agent = stacked_agent_sharding(mesh, n_agents, axis)
+    rep = replicated(mesh)
+
+    def one(leaf):
+        is_agent_leaf = leaf.ndim >= 2 and leaf.shape[1] == n_agents
+        return agent if is_agent_leaf else rep
+    return jax.tree_util.tree_map(one, stacked)
+
+
+def stacked_sharded_flags(stacked, n_agents: int):
+    """Hashable per-leaf summary of which stacked leaves carry the agent
+    axis at dim 1 — combined with the treedef this keys compiled engines
+    whose in_shardings differ only by dataset structure."""
+    return tuple(bool(l.ndim >= 2 and l.shape[1] == n_agents)
+                 for l in jax.tree_util.tree_leaves(stacked))
+
+
+def train_scan_shardings(mesh: Mesh, n_agents: int | None = None,
+                         axis: str = "data", stacked=None):
+    """(in_shardings, out_shardings) for the scan engine's
+    ``run_s(state, stacked, key, S)`` dynamic arguments (``steps`` is
+    static): state/key/S replicated, stacked agent-axis-sharded; outputs
+    (state, metrics) replicated. With ``stacked`` given, the dataset
+    entry is the leaf-aware tree from ``stacked_shardings_tree``;
+    otherwise a pytree-prefix spec (only safe for flat Xtr/Ytr/Xte/Yte
+    dicts whose every leaf has the agent axis at dim 1)."""
+    rep = replicated(mesh)
+    if stacked is None:
+        stacked_sh = stacked_agent_sharding(mesh, n_agents, axis)
+    else:
+        stacked_sh = stacked_shardings_tree(stacked, mesh, n_agents, axis)
+    return (rep, stacked_sh, rep, rep), (rep, rep)

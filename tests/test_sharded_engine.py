@@ -1,0 +1,273 @@
+"""Mesh-sharded SURF engine: ring-vs-dense parity on a >1-shard mesh, the
+agent-axis-sharded ``train_scan`` trajectory, collective-bytes savings of
+the ring path, engine-cache keying on (mesh, mix-tag), and the multi-seed
+evaluation layer.
+
+Multi-device tests need ``XLA_FLAGS=--xla_force_host_platform_device_count
+=8`` (the ``make test-sharded`` lane) and skip on a plain 1-device run;
+the multi-seed evaluation tests run in every lane.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SURFConfig
+from repro.configs.surf_paper import SMOKE
+from repro.core import surf
+from repro.core import trainer as TR
+from repro.core.ring import dense_equivalent, make_ring_mix
+from repro.core.unroll import graph_filter
+from repro.data import synthetic
+from repro.launch.mesh import host_device_count, make_agent_mesh
+
+NDEV = host_device_count()
+multi_device = pytest.mark.skipif(
+    NDEV < 8, reason="needs 8 devices: run via `make test-sharded` "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+# 16 agents on a 1-hop circulant ring (degree=2) — divisible by 8 shards.
+RING_CFG = SURFConfig(n_agents=16, n_layers=3, filter_taps=2, feature_dim=8,
+                      n_classes=4, batch_per_agent=4, train_per_agent=8,
+                      test_per_agent=4, eps=0.05, topology="ring", degree=2)
+STEPS = 20
+
+
+@pytest.fixture(scope="module")
+def ring_problem():
+    _, S = surf.make_problem(RING_CFG, seed=0)
+    mds = synthetic.make_meta_dataset(RING_CFG, 4, seed=0)
+    return S, mds
+
+
+# ------------------------------------------------- ring-vs-dense parity
+@multi_device
+@pytest.mark.parametrize("n,hops,K", [(16, 1, 2), (16, 2, 1), (24, 3, 2),
+                                      (32, 2, 3)])
+def test_ring_mix_matches_dense_on_8_shards(n, hops, K):
+    """make_ring_mix on 8 simulated devices == dense_equivalent(n,hops) @ W
+    through the full K-tap Horner filter, to fp32 tolerance."""
+    mesh = make_agent_mesh(8)
+    mix = make_ring_mix(mesh, "data", n, hops)
+    S = jnp.asarray(dense_equivalent(n, hops), jnp.float32)
+    W = jax.random.normal(jax.random.PRNGKey(n + hops), (n, 12))
+    h = 0.3 * jax.random.normal(jax.random.PRNGKey(K), (K + 1,))
+    y_ring = jax.jit(mix)(W, h)
+    y_dense = graph_filter(S, W, h)
+    np.testing.assert_allclose(np.asarray(y_ring), np.asarray(y_dense),
+                               atol=1e-5)
+
+
+@multi_device
+def test_train_scan_ring_matches_dense_trajectory(ring_problem):
+    """End-to-end: the agent-axis-sharded scan engine with the ring
+    ppermute mix_fn reproduces the dense single-device engine's
+    loss/accuracy trajectory and final state to fp32 tolerance."""
+    S, mds = ring_problem
+    key = jax.random.PRNGKey(3)
+    mesh = make_agent_mesh(8)
+    mix = make_ring_mix(mesh, "data", RING_CFG.n_agents,
+                        max(1, RING_CFG.degree // 2))
+    st_d, h_d = TR.train_scan(RING_CFG, S, mds, STEPS, key, log_every=5)
+    st_r, h_r = TR.train_scan(RING_CFG, S, mds, STEPS, key, log_every=5,
+                              mix_fn=mix, mesh=mesh)
+    for a, b in zip(jax.tree_util.tree_leaves(st_d.theta),
+                    jax.tree_util.tree_leaves(st_r.theta)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(st_d.lam), np.asarray(st_r.lam),
+                               atol=1e-5)
+    assert [h["step"] for h in h_d] == [h["step"] for h in h_r]
+    for hd, hr in zip(h_d, h_r):
+        for k in hd:
+            np.testing.assert_allclose(hd[k], hr[k], atol=1e-4, rtol=1e-3)
+
+
+@multi_device
+def test_sharded_eval_ring_matches_dense(ring_problem):
+    """make_eval with the ring mix_fn == dense evaluation, and the
+    multi-seed evaluator accepts a ring mix_fn too."""
+    S, mds = ring_problem
+    state = TR.init_state(jax.random.PRNGKey(1), RING_CFG)
+    mesh = make_agent_mesh(8)
+    mix = make_ring_mix(mesh, "data", RING_CFG.n_agents, 1)
+    res_d = surf.evaluate_surf(RING_CFG, state, S, mds, seeds=[0, 1])
+    res_r = surf.evaluate_surf(RING_CFG, state, S, mds, seeds=[0, 1],
+                               mix_fn=mix)
+    for k in res_d:
+        np.testing.assert_allclose(res_r[k], res_d[k], atol=1e-5, rtol=1e-5)
+
+
+@multi_device
+def test_q_sharded_eval_matches_replicated(ring_problem):
+    """evaluate_surf(mesh=...) places the stacked pool Q-sharded over
+    'data' (8 datasets over 8 shards) and must match the replicated run."""
+    S, _ = ring_problem
+    mds = synthetic.make_meta_dataset(RING_CFG, 8, seed=1)
+    state = TR.init_state(jax.random.PRNGKey(1), RING_CFG)
+    mesh = make_agent_mesh(8)
+    res_rep = surf.evaluate_surf(RING_CFG, state, S, mds, seeds=[0, 1])
+    res_q = surf.evaluate_surf(RING_CFG, state, S, mds, seeds=[0, 1],
+                               mesh=mesh)
+    for k in res_rep:
+        np.testing.assert_allclose(res_q[k], res_rep[k], atol=1e-5,
+                                   rtol=1e-5)
+
+
+@multi_device
+def test_train_scan_mesh_accepts_nested_aux_pytree(ring_problem):
+    """Regression: leaf-aware stacked shardings — a nested aux leaf with
+    no agent axis must replicate instead of crashing the pjit shardings
+    (a pytree-prefix P(None,'data') spec would reject it)."""
+    from repro.data.pipeline import stack_meta_datasets
+    S, mds = ring_problem
+    key = jax.random.PRNGKey(9)
+    mesh = make_agent_mesh(8)
+    mix = make_ring_mix(mesh, "data", RING_CFG.n_agents, 1)
+    nested = [dict(d, aux={"weight": np.full((3,), float(q))})
+              for q, d in enumerate(mds)]
+    stacked = stack_meta_datasets(nested)
+    st_plain, _ = TR.train_scan(RING_CFG, S, mds, 8, key)
+    st_shard, _ = TR.train_scan(RING_CFG, S, stacked, 8, key, mix_fn=mix,
+                                mesh=mesh)
+    for a, b in zip(jax.tree_util.tree_leaves(st_plain.theta),
+                    jax.tree_util.tree_leaves(st_shard.theta)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------- collective efficiency
+@multi_device
+def test_ring_engine_collective_bytes_drop(ring_problem):
+    """Per-meta-step collective bytes of the agent-axis-sharded engine:
+    the ring ppermute filter must move strictly fewer bytes than the
+    dense S @ W path (which all-gathers the full W per mixing round)."""
+    from repro.launch.surf_dryrun import meta_step_collective_bytes
+
+    S, _ = ring_problem
+    mesh = make_agent_mesh(8)
+    dense, _ = meta_step_collective_bytes(RING_CFG, S, mesh)
+    ring, by_kind = meta_step_collective_bytes(
+        RING_CFG, S, mesh, mix_fn=make_ring_mix(mesh, "data",
+                                                RING_CFG.n_agents, 1))
+    assert ring < dense, f"ring {ring} !< dense {dense}"
+    assert by_kind.get("collective-permute", 0) > 0
+
+
+# ------------------------------------------------------- engine caching
+@multi_device
+def test_engine_cache_hits_for_identical_ring_geometry(ring_problem):
+    """Two make_ring_mix calls with the same geometry produce the same
+    mix tag, so the second train_scan reuses the compiled engine (zero
+    new meta_step traces)."""
+    S, mds = ring_problem
+    mesh = make_agent_mesh(8)
+    key = jax.random.PRNGKey(0)
+    mix_a = make_ring_mix(mesh, "data", RING_CFG.n_agents, 1)
+    mix_b = make_ring_mix(mesh, "data", RING_CFG.n_agents, 1)
+    assert mix_a.tag == mix_b.tag
+    TR.train_scan(RING_CFG, S, mds, STEPS, key, mix_fn=mix_a, mesh=mesh)
+    before = TR.TRACE_COUNTS["meta_step"]
+    TR.train_scan(RING_CFG, S, mds, STEPS, key, mix_fn=mix_b, mesh=mesh)
+    assert TR.TRACE_COUNTS["meta_step"] == before
+
+
+def test_engine_cache_key_separates_mesh_and_mix():
+    """(cfg, variant, mesh-fingerprint, mix-tag) keying: dense/unsharded,
+    meshed, and ring-mixed engines must not collide; an untagged custom
+    mix_fn is uncacheable."""
+    mesh = make_agent_mesh(NDEV)
+    base = TR._engine_cache_key(SMOKE, "eval", "relu", None)
+    meshed = TR._engine_cache_key(SMOKE, "eval", "relu", None, mesh=mesh)
+    mix = make_ring_mix(mesh, "data", 8, 1)
+    mixed = TR._engine_cache_key(SMOKE, "eval", "relu", None, mesh=mesh,
+                                 mix_fn=mix)
+    assert len({base, meshed, mixed}) == 3
+    untagged = TR._engine_cache_key(SMOKE, "eval", "relu", None,
+                                    mix_fn=lambda W, h: W)
+    assert untagged is None
+
+
+def test_make_agent_mesh_and_host_device_count():
+    assert host_device_count() == NDEV
+    mesh = make_agent_mesh()
+    assert mesh.shape["data"] == NDEV and mesh.shape["model"] == 1
+    with pytest.raises(ValueError, match="shards"):
+        make_agent_mesh(NDEV + 1)
+
+
+# ------------------------------------------------- multi-seed evaluation
+def test_multi_seed_eval_matches_sequential():
+    """evaluate_surf over a batch of seeds compiles ONE evaluator (a
+    single trace) and row i matches the sequential single-seed call."""
+    _, S = surf.make_problem(SMOKE, seed=0)
+    mds = synthetic.make_meta_dataset(SMOKE, 4, seed=0)
+    state = TR.init_state(jax.random.PRNGKey(2), SMOKE)
+    seeds = [0, 1, 2, 3]
+    # drop any evaluator compiled earlier in this process — the trace
+    # count below must measure a fresh compile, not a cache hit
+    surf._EVAL_CACHE.clear()
+    TR.TRACE_COUNTS["eval"] = 0
+    res = surf.evaluate_surf(SMOKE, state, S, mds, seeds=seeds)
+    assert TR.TRACE_COUNTS["eval"] == 1
+    assert res["acc_per_layer"].shape == (len(seeds), SMOKE.n_layers)
+    assert res["final_acc"].shape == (len(seeds),)
+    for i, s in enumerate(seeds):
+        one = surf.evaluate_surf(SMOKE, state, S, mds, seed=s)
+        for k in one:
+            np.testing.assert_allclose(res[k][i], one[k], atol=1e-5,
+                                       rtol=1e-5)
+    # different seeds actually differ (fold_in stream is seed-dependent)
+    assert not np.allclose(res["final_acc"][0], res["final_acc"][1])
+
+
+def test_multi_seed_async_matches_sequential():
+    """evaluate_async over a batch of seeds: per-seed masks AND keys both
+    vary; each row matches the sequential call with that seed."""
+    _, S = surf.make_problem(SMOKE, seed=0)
+    mds = synthetic.make_meta_dataset(SMOKE, 4, seed=0)
+    state = TR.init_state(jax.random.PRNGKey(4), SMOKE)
+    seeds = [7, 8, 9]
+    res = surf.evaluate_async(SMOKE, state, S, mds, n_async=3, seeds=seeds)
+    assert res["loss_per_layer"].shape == (len(seeds), SMOKE.n_layers)
+    for i, s in enumerate(seeds):
+        one = surf.evaluate_async(SMOKE, state, S, mds, n_async=3, seed=s)
+        np.testing.assert_allclose(res["loss_per_layer"][i],
+                                   one["loss_per_layer"], atol=1e-5,
+                                   rtol=1e-5)
+        np.testing.assert_allclose(res["final_acc"][i], one["final_acc"],
+                                   atol=1e-5)
+
+
+def test_multi_seed_eval_rejects_empty_seed_batch():
+    _, S = surf.make_problem(SMOKE, seed=0)
+    mds = synthetic.make_meta_dataset(SMOKE, 2, seed=0)
+    state = TR.init_state(jax.random.PRNGKey(0), SMOKE)
+    with pytest.raises(ValueError, match="seeds"):
+        surf.evaluate_surf(SMOKE, state, S, mds, seeds=[])
+
+
+# ------------------------------------------- pre-stacked pytree drivers
+def test_train_drivers_accept_nested_prestacked_pytree():
+    """Regression (trainer.py pre-stacked branch): nested pytrees from
+    stack_meta_datasets must slice correctly in BOTH drivers — the old
+    ``meta_datasets.items()`` flat-dict slicing broke on nesting."""
+    from repro.data.pipeline import stack_meta_datasets
+    _, S = surf.make_problem(SMOKE, seed=0)
+    mds = synthetic.make_meta_dataset(SMOKE, 3, seed=0)
+    nested = [dict(d, aux={"weight": np.full((2,), float(q))})
+              for q, d in enumerate(mds)]
+    stacked = stack_meta_datasets(nested)
+    assert stacked["aux"]["weight"].shape == (3, 2)
+    key = jax.random.PRNGKey(6)
+    st_list, _ = TR.train(SMOKE, S, mds, 8, key)
+    st_nest, _ = TR.train(SMOKE, S, stacked, 8, key)
+    st_scan, _ = TR.train_scan(SMOKE, S, stacked, 8, key)
+    for a, b, c in zip(jax.tree_util.tree_leaves(st_list.theta),
+                       jax.tree_util.tree_leaves(st_nest.theta),
+                       jax.tree_util.tree_leaves(st_scan.theta)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-5,
+                                   rtol=1e-5)

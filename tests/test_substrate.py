@@ -138,6 +138,104 @@ def test_shape_bytes_parser():
     assert H._shape_bytes("pred[]") == 1
 
 
+# Golden-text fixtures for the replica_groups layouts XLA has shipped —
+# the dims form this image emits, the [n,m]<=[k] iota form of newer XLA
+# (optionally with a T(...) transposed-iota suffix and the newer
+# channel_id/use_global_device_ids attribute layout), and the explicit
+# {{ids},...} form of older dumps. Expected bytes use the ring
+# multipliers documented in hlo_cost's module docstring.
+GOLDEN_DIMS = """HloModule m
+
+ENTRY main {
+  p0 = f32[16,8]{1,0} parameter(0)
+  ag = f32[128,8]{1,0} all-gather(p0), replica_groups=[1,8], dimensions={0}
+  ROOT r = f32[128,8]{1,0} copy(ag)
+}
+"""
+
+GOLDEN_IOTA = """HloModule m
+
+ENTRY main {
+  p0 = f32[16,8]{1,0} parameter(0)
+  ag = f32[128,8]{1,0} all-gather(p0), channel_id=1, replica_groups=[1,8]<=[8], dimensions={0}, use_global_device_ids=true
+  ROOT r = f32[128,8]{1,0} copy(ag)
+}
+"""
+
+GOLDEN_IOTA_TRANSPOSED = """HloModule m
+
+add {
+  a = f32[] parameter(0)
+  b = f32[] parameter(1)
+  ROOT s = f32[] add(a, b)
+}
+
+ENTRY main {
+  p0 = f32[32]{0} parameter(0)
+  ROOT ar = f32[32]{0} all-reduce(p0), channel_id=2, replica_groups=[2,4]<=[4,2]T(1,0), use_global_device_ids=true, to_apply=add
+}
+"""
+
+GOLDEN_IDS = """HloModule m
+
+add {
+  a = f32[] parameter(0)
+  b = f32[] parameter(1)
+  ROOT s = f32[] add(a, b)
+}
+
+ENTRY main {
+  p0 = f32[32]{0} parameter(0)
+  ROOT ar = f32[32]{0} all-reduce(p0), channel_id=3, replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=add
+}
+"""
+
+GOLDEN_PERMUTE = """HloModule m
+
+ENTRY main {
+  p0 = f32[4,8]{1,0} parameter(0)
+  ROOT cp = f32[4,8]{1,0} collective-permute(p0), channel_id=4, source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+}
+"""
+
+
+def test_hlo_cost_replica_groups_dims_and_iota_forms():
+    """[n,m] and [n,m]<=[k] must parse to the same group size: all-gather
+    ring bytes = result * (n-1)/n with n=8 participants."""
+    expect = 128 * 8 * 4 * (8 - 1) / 8
+    for txt in (GOLDEN_DIMS, GOLDEN_IOTA):
+        s = H.summarize(txt)
+        assert s["collectives"] == {"all-gather": expect}
+
+
+def test_hlo_cost_replica_groups_transposed_iota():
+    """[2,4]<=[4,2]T(1,0): 2 groups of 4 — all-reduce = 2*operand*(n-1)/n
+    with n=4, regardless of the iota permutation suffix."""
+    s = H.summarize(GOLDEN_IOTA_TRANSPOSED)
+    assert s["collectives"] == {"all-reduce": 2.0 * 32 * 4 * (4 - 1) / 4}
+
+
+def test_hlo_cost_replica_groups_explicit_ids():
+    """{{0,1,2,3},{4,5,6,7}} explicit-ids form: group size 4 from the
+    first group's id count."""
+    s = H.summarize(GOLDEN_IDS)
+    assert s["collectives"] == {"all-reduce": 2.0 * 32 * 4 * (4 - 1) / 4}
+
+
+def test_hlo_cost_collective_permute_counts_result_bytes():
+    """collective-permute carries source_target_pairs (no replica_groups
+    at all) and counts result bytes once, no ring multiplier."""
+    s = H.summarize(GOLDEN_PERMUTE)
+    assert s["collectives"] == {"collective-permute": 4 * 8 * 4.0}
+
+
+def test_hlo_cost_group_size_fallbacks():
+    assert H._group_size("replica_groups=[4,16]<=[64] foo") == 16
+    assert H._group_size("replica_groups=[2,8]") == 8
+    assert H._group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+    assert H._group_size("no groups attribute at all") == 2
+
+
 # --------------------------------------------------------------- sharding
 def test_param_rules_megatron_convention():
     from repro.sharding.rules import param_spec
