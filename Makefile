@@ -6,10 +6,12 @@
 #                       nshards > 1 (they skip on a 1-device run)
 #   make bench        — SURF paper-figure benchmark battery (slow)
 #   make bench-scan   — scan-engine perf tracking: BENCH_scan_engine.json
+#   make bench-topology — dense/ring/halo mixing across graph families:
+#                       BENCH_topology.json
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast test-sharded bench bench-scan
+.PHONY: test test-fast test-sharded bench bench-scan bench-topology
 
 test:
 	$(PY) -m pytest -x -q
@@ -26,3 +28,6 @@ bench:
 
 bench-scan:
 	sh scripts/bench.sh scan
+
+bench-topology:
+	sh scripts/bench.sh topology

@@ -1,6 +1,11 @@
 """Paper Figure 8 / Appendix D: robustness to asynchronous communications —
 n_async agents serve one-layer-stale estimates to their neighbours during
 inference. Compares constrained (SURF) vs unconstrained U-DGD degradation.
+
+Beyond-paper method: "surf+dropout-sched" meta-trains the constrained
+model under an AGENT-DROPOUT topology schedule (n/10 agents isolated per
+meta-step — ``topology.schedule.dropout_schedule``), the training-time
+analogue of the async perturbation it is then evaluated under.
 """
 from __future__ import annotations
 
@@ -22,13 +27,15 @@ def main():
     test = stack_meta_datasets(
         synthetic.make_meta_dataset(CFG, META_TEST_Q, seed=888))
     rows = []
-    for constrained in (True, False):
+    variants = [(True, None, "surf"), (False, None, "no-constraints"),
+                (True, "dropout", "surf+dropout-sched")]
+    for constrained, scenario, tag in variants:
         # random init (paper's generic setting): the constraints must be
         # what produces a noise-robust gradual trajectory — see fig7 note.
         state, _, S = surf.train_surf(CFG, mds, steps=META_STEPS,
                                       constrained=constrained, log_every=0,
-                                      init="random", engine="scan")
-        tag = "surf" if constrained else "no-constraints"
+                                      init="random", engine="scan",
+                                      scenario=scenario)
         for na in N_ASYNC:
             # multi-seed evaluation: each seed draws its own async masks;
             # report the seed mean (final_* are (n_seeds,) stacks)

@@ -1,0 +1,142 @@
+"""Topology-subsystem perf tracking: dense vs ring vs halo mixing across
+graph families on the agent-axis-sharded scan engine, as machine-readable
+JSON (``bench_out/BENCH_topology.json``).
+
+Per (family, mixer) at n=32 agents / P=8 shards — wired like
+``scripts/bench.sh scan``:
+  * warm whole-run seconds and per-meta-step microseconds through
+    ``train_scan`` (one compiled engine per mixer tag),
+  * per-meta-step collective bytes from the post-SPMD HLO of the sharded
+    meta step (``launch.surf_dryrun.meta_step_collective_bytes``) — the
+    quantity the halo exchange exists to shrink,
+  * the halo plan's active shard offsets + exchanged rows per mixing
+    round (the static cost model behind those bytes).
+
+The ring mixer only applies to the circulant family; the halo mixer runs
+on EVERY family (the generalize-beyond-rings ROADMAP item). On simulated
+host devices the collective-bytes column is the meaningful one — host
+ppermute wall-clock is pure overhead; the time win needs real ICI.
+
+Run via ``scripts/bench.sh topology``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import OUT_DIR
+from repro.configs.base import SURFConfig
+from repro.core import trainer as TR
+from repro.core.ring import make_ring_mix
+from repro.data import synthetic
+from repro.data.pipeline import stack_meta_datasets
+from repro.launch.mesh import host_device_count, make_agent_mesh
+from repro.launch.surf_dryrun import meta_step_collective_bytes
+from repro.topology import families as F
+from repro.topology.halo import halo_exchange_rows, halo_plan, make_halo_mix
+
+CFG = SURFConfig(n_agents=32, n_layers=4, filter_taps=2, feature_dim=16,
+                 n_classes=8, batch_per_agent=6, train_per_agent=12,
+                 test_per_agent=6, eps=0.05, topology="ring", degree=2)
+STEPS = 30
+META_Q = 8
+
+FAMILIES = {
+    "ring": dict(kind="ring", degree=2),
+    "regular": dict(kind="regular", degree=3),
+    "smallworld": dict(kind="smallworld", degree=4, beta=0.15),
+    "torus": dict(kind="torus"),
+}
+
+
+def bench_mixer(cfg, S, mds, mesh, mix_fn, name):
+    key = jax.random.PRNGKey(0)
+    stacked = stack_meta_datasets(mds)
+    run = TR.make_train_scan(cfg, S, mix_fn=mix_fn, mesh=mesh,
+                             stacked=stacked)
+    state = TR.init_state(key, cfg)
+    state, metrics = run(state, stacked, key, STEPS)      # compile + run
+    jax.block_until_ready(metrics["test_loss"])
+
+    iters = 3
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        state = TR.init_state(key, cfg)
+        state, metrics = run(state, stacked, key, STEPS)
+    jax.block_until_ready(metrics["test_loss"])
+    warm_run_s = (time.perf_counter() - t0) / iters
+
+    coll, by_kind = meta_step_collective_bytes(cfg, S, mesh, mix_fn=mix_fn)
+    return {"warm_run_s": round(warm_run_s, 4),
+            "warm_step_us": round(warm_run_s / STEPS * 1e6, 1),
+            "collective_bytes_per_meta_step": coll,
+            "collectives_by_kind": by_kind,
+            "final_test_loss": float(metrics["test_loss"][-1])}
+
+
+def main():
+    ndev = host_device_count()
+    nshards = max(d for d in (1, 2, 4, 8) if d <= ndev
+                  and CFG.n_agents % d == 0)
+    mesh = make_agent_mesh(nshards)
+    mds = synthetic.make_meta_dataset(CFG, META_Q, seed=0)
+    print(f"topology bench: {ndev} devices, {nshards} agent shards, "
+          f"n={CFG.n_agents} L={CFG.n_layers} K={CFG.filter_taps} "
+          f"steps={STEPS}")
+
+    results = {}
+    for fam, spec in FAMILIES.items():
+        spec = dict(spec)
+        kind = spec.pop("kind")
+        # cfg.topology only matters for the star path; tag it for the record
+        cfg = dataclasses.replace(
+            CFG, topology=kind if kind in ("ring", "regular", "er") else
+            "regular")
+        A, S_np = F.build_topology(kind, CFG.n_agents, seed=0, **spec)
+        S = jnp.asarray(S_np, jnp.float32)
+        _, plans = halo_plan(S_np, nshards)
+        fam_rec = {
+            "degree_mean": float(np.asarray(A).sum(1).mean()),
+            "slem": round(F.second_eigenvalue(S_np), 4),
+            "algebraic_connectivity": round(F.algebraic_connectivity(A), 4),
+            "halo_plan": {"active_offsets": len(plans),
+                          "rows_per_round": int(halo_exchange_rows(plans))},
+            "dense": bench_mixer(cfg, S, mds, mesh, None, f"{fam}/dense"),
+            "halo": bench_mixer(cfg, S, mds, mesh,
+                                make_halo_mix(mesh, "data", S_np),
+                                f"{fam}/halo"),
+        }
+        if kind == "ring":
+            fam_rec["ring"] = bench_mixer(
+                cfg, S, mds, mesh,
+                make_ring_mix(mesh, "data", CFG.n_agents, 1), f"{fam}/ring")
+        for mixer in ("dense", "ring", "halo"):
+            if mixer in fam_rec:
+                r = fam_rec[mixer]
+                print(f"{fam:10s} {mixer:5s} "
+                      f"warm_step={r['warm_step_us']:9.1f}us "
+                      f"coll_bytes/step={r['collective_bytes_per_meta_step']:10.0f}")
+        dense_b = fam_rec["dense"]["collective_bytes_per_meta_step"]
+        halo_b = fam_rec["halo"]["collective_bytes_per_meta_step"]
+        fam_rec["halo_vs_dense_collective_ratio"] = (
+            round(halo_b / dense_b, 4) if dense_b else None)
+        results[fam] = fam_rec
+
+    out = {"devices": ndev, "agent_shards": nshards,
+           "config": dataclasses.asdict(CFG), "steps": STEPS,
+           "meta_datasets": META_Q, "families": results}
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "BENCH_topology.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

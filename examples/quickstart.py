@@ -14,6 +14,7 @@ import numpy as np
 from repro.configs.base import SURFConfig
 from repro.core import surf
 from repro.data import synthetic
+from repro.topology import families as F
 
 
 def main():
@@ -30,6 +31,9 @@ def main():
     print("   one compiled lax.scan over all 250 meta-steps)...")
     state, hist, S = surf.train_surf(cfg, meta_train, steps=250,
                                      log_every=50, engine="scan")
+    print(f"   graph diagnostics: SLEM(S)="
+          f"{F.second_eigenvalue(np.asarray(S)):.3f} "
+          f"(per-round consensus contraction; <1 = mixing)")
     for h in hist:
         print(f"   step {h['step']:4d}  test_acc={h['test_acc']:.3f}  "
               f"slack_mean={h['slack_mean']:+.4f}  λ·1={h['lam_sum']:.4f}")

@@ -1,9 +1,12 @@
 #!/usr/bin/env sh
 # Perf-tracking entry points (machine-readable output under bench_out/).
-#   scripts/bench.sh scan   # scan-engine bench (dense vs ring mix) on an
-#                           # 8-way SIMULATED mesh ->
-#                           # bench_out/BENCH_scan_engine.json
-#   scripts/bench.sh all    # full paper-figure battery (benchmarks.run)
+#   scripts/bench.sh scan      # scan-engine bench (dense vs ring mix) on
+#                              # an 8-way SIMULATED mesh ->
+#                              # bench_out/BENCH_scan_engine.json
+#   scripts/bench.sh topology  # dense vs ring vs halo mixing across graph
+#                              # families (n=32/P=8) ->
+#                              # bench_out/BENCH_topology.json
+#   scripts/bench.sh all       # full paper-figure battery (benchmarks.run)
 set -e
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -11,9 +14,12 @@ case "${1:-scan}" in
   scan)
     export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
     exec python -m benchmarks.scan_engine_bench ;;
+  topology)
+    export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+    exec python -m benchmarks.topology_bench ;;
   all)
     exec python -m benchmarks.run ;;
   *)
-    echo "usage: scripts/bench.sh [scan|all]" >&2
+    echo "usage: scripts/bench.sh [scan|topology|all]" >&2
     exit 2 ;;
 esac

@@ -1,101 +1,20 @@
-"""Agent communication graphs and graph shift operators (paper §3.2, §5).
+"""Compatibility shim: graphs migrated to ``repro.topology.families``.
 
-Topologies: random k-regular, Erdős–Rényi (connected), star (classical FL),
-ring (circulant — used by the ppermute-optimized dry-run path).
-
-The DGD mixing matrix uses Metropolis–Hastings weights — symmetric, doubly
-stochastic, rows sum to 1 (the paper's Σ_j α_ij = 1, α_ij = α_ji condition).
+The topology subsystem (``repro.topology``) now owns graph generation,
+mixing-weight rules, spectral diagnostics and time-varying schedules;
+this module re-exports the original ``core.graph`` surface so existing
+imports keep working. New code should import ``repro.topology.families``
+directly.
 """
 from __future__ import annotations
 
-import numpy as np
-
-
-def regular_graph(n, degree, seed=0):
-    """Random k-regular graph via stub matching (retry until simple+connected)."""
-    rng = np.random.default_rng(seed)
-    assert (n * degree) % 2 == 0, "n*degree must be even"
-    for _ in range(200):
-        stubs = np.repeat(np.arange(n), degree)
-        rng.shuffle(stubs)
-        pairs = stubs.reshape(-1, 2)
-        A = np.zeros((n, n), bool)
-        ok = True
-        for u, v in pairs:
-            if u == v or A[u, v]:
-                ok = False
-                break
-            A[u, v] = A[v, u] = True
-        if ok and is_connected(A):
-            return A
-    raise RuntimeError("could not sample a simple connected regular graph")
-
-
-def er_graph(n, p, seed=0):
-    rng = np.random.default_rng(seed)
-    for _ in range(200):
-        U = rng.random((n, n)) < p
-        A = np.triu(U, 1)
-        A = A | A.T
-        if is_connected(A):
-            return A
-    raise RuntimeError("ER graph disconnected after retries; raise p")
-
-
-def star_graph(n):
-    """Node 0 is the server."""
-    A = np.zeros((n, n), bool)
-    A[0, 1:] = True
-    A[1:, 0] = True
-    return A
-
-
-def ring_graph(n, hops=1):
-    """Circulant ring: node i ~ i±1..i±hops. Degree = 2*hops."""
-    A = np.zeros((n, n), bool)
-    for h in range(1, hops + 1):
-        idx = np.arange(n)
-        A[idx, (idx + h) % n] = True
-        A[(idx + h) % n, idx] = True
-    return A
-
-
-def is_connected(A):
-    n = len(A)
-    seen = np.zeros(n, bool)
-    stack = [0]
-    seen[0] = True
-    while stack:
-        u = stack.pop()
-        for v in np.nonzero(A[u])[0]:
-            if not seen[v]:
-                seen[v] = True
-                stack.append(v)
-    return bool(seen.all())
-
-
-def metropolis_weights(A):
-    """Symmetric doubly-stochastic mixing matrix from adjacency A."""
-    A = np.asarray(A, bool)
-    deg = A.sum(1)
-    n = len(A)
-    W = np.zeros((n, n))
-    for u in range(n):
-        for v in np.nonzero(A[u])[0]:
-            W[u, v] = 1.0 / (1 + max(deg[u], deg[v]))
-        W[u, u] = 1.0 - W[u].sum()
-    return W
-
-
-def build_topology(kind, n, *, degree=3, p=0.1, seed=0):
-    if kind == "regular":
-        A = regular_graph(n, degree, seed)
-    elif kind == "er":
-        A = er_graph(n, p, seed)
-    elif kind == "star":
-        A = star_graph(n)
-    elif kind == "ring":
-        A = ring_graph(n, max(1, degree // 2))
-    else:
-        raise ValueError(kind)
-    return A, metropolis_weights(A)
+from repro.topology.families import (  # noqa: F401
+    build_topology,
+    er_graph,
+    is_connected,
+    metropolis_weights,
+    metropolis_weights_loop,
+    regular_graph,
+    ring_graph,
+    star_graph,
+)

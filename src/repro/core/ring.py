@@ -1,31 +1,21 @@
-"""Beyond-paper optimization (§Perf): ring-topology graph filter as
-nearest-neighbour ``ppermute`` halo exchanges instead of a dense S @ W.
+"""Ring-topology graph filter as nearest-neighbour ``ppermute`` halo
+exchanges instead of a dense S @ W (beyond-paper §Perf optimization).
 
-The paper evaluates circulant-like sparse topologies (3-regular) but
-implements mixing as a dense matmul. On a TPU mesh with the agent axis
-sharded over 'data', XLA lowers S @ W to all-gathers of the full W
-(O(n·d) bytes over ICI per hop). For a circulant ring of ``hops``
-neighbours the same mixing is exactly expressible as 2·hops boundary-row
-exchanges (O(hops·d) bytes) — a (n / (2·hops·P))-fold collective
-reduction at n=256, P=16 shards.
-
-Metropolis weights on a 2h-regular ring are uniform 1/(2h+1) over the
-(2h+1)-band, so the halo mix below reproduces ``metropolis_weights(
-ring_graph(n, hops)) @ W`` exactly (unit-tested against the dense path).
+Now a SPECIAL CASE of the general block-sparse halo mixer
+(``repro.topology.halo``): the Metropolis matrix of a circulant
+2h-regular ring is banded with offsets {0, ±1} at the shard level and
+``hops`` needed boundary rows per direction, so ``make_halo_mix``
+reproduces the original hand-written boundary-row exchange byte-for-
+byte (O(hops·d) per mixing round vs the dense path's O(n·d/P)
+all-gather) while also covering arbitrary banded / partition-local S.
+This module keeps the ring-specific constructor and its stable
+``("ring", ...)`` cache tag.
 """
 from __future__ import annotations
 
 import contextlib
-from functools import partial
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-try:                                   # jax >= 0.5: public top-level API
-    _shard_map = jax.shard_map
-except AttributeError:                 # pinned jax 0.4.x
-    from jax.experimental.shard_map import shard_map as _shard_map
 
 
 def mesh_context(mesh):
@@ -38,53 +28,23 @@ def mesh_context(mesh):
 
 
 def make_ring_mix(mesh, axis: str, n: int, hops: int):
-    """Returns the shard-mapped Horner graph filter ``mix_fn(W, h)``.
+    """Returns the shard-mapped Horner graph filter ``mix_fn(W, h)`` for
+    the 2·hops-regular circulant ring — ``make_halo_mix`` applied to
+    ``metropolis_weights(ring_graph(n, hops))``.
 
     The returned function carries a hashable ``.tag`` attribute —
     ``("ring", axis, n, hops, mesh-fingerprint)`` — which the engine
     caches in ``core.trainer`` / ``core.surf`` fold into their keys so two
     ``make_ring_mix`` calls with identical geometry share one compiled
     engine (an untagged ``mix_fn`` disables caching instead)."""
-    nshards = mesh.shape[axis]
-    assert n % nshards == 0
-    nl = n // nshards
-    assert nl >= hops, "shard must hold at least `hops` rows"
-    a = 1.0 / (2 * hops + 1)
-    fwd = [(i, (i + 1) % nshards) for i in range(nshards)]
-    bwd = [(i, (i - 1) % nshards) for i in range(nshards)]
-
-    def one_hop(Y):
-        if nshards > 1:
-            up = jax.lax.ppermute(Y[-hops:], axis, fwd)   # prev shard tail
-            dn = jax.lax.ppermute(Y[:hops], axis, bwd)    # next shard head
-        else:
-            up, dn = Y[-hops:], Y[:hops]                  # circular wrap
-        ext = jnp.concatenate([up, Y, dn], axis=0)        # (nl + 2h, d)
-        out = a * Y
-        for j in range(1, hops + 1):
-            out = out + a * (ext[hops - j: hops - j + nl]
-                             + ext[hops + j: hops + j + nl])
-        return out
-
-    def filter_local(W_local, h):
-        K = h.shape[0] - 1
-        Y = h[K] * W_local
-        for k in range(K - 1, -1, -1):
-            Y = one_hop(Y) + h[k] * W_local
-        return Y
-
-    smapped = _shard_map(filter_local, mesh=mesh,
-                         in_specs=(P(axis), P()), out_specs=P(axis))
-
-    def mix_fn(W, h):
-        return smapped(W, h)
-
     from repro.sharding.surf_rules import mesh_fingerprint
-    mix_fn.tag = ("ring", axis, n, hops, mesh_fingerprint(mesh))
-    return mix_fn
+    from repro.topology.halo import make_halo_mix
+    return make_halo_mix(mesh, axis, dense_equivalent(n, hops),
+                         tag=("ring", axis, n, hops,
+                              mesh_fingerprint(mesh)))
 
 
 def dense_equivalent(n, hops):
     """The dense Metropolis mixing matrix the ring path must reproduce."""
-    from repro.core.graph import metropolis_weights, ring_graph
+    from repro.topology.families import metropolis_weights, ring_graph
     return metropolis_weights(ring_graph(n, hops))

@@ -31,20 +31,68 @@ def make_problem(cfg: SURFConfig, seed=0):
     return A, jnp.asarray(S, jnp.float32)
 
 
+SCENARIOS = ("static", "link-failure", "dropout", "markov", "anneal")
+
+
+def make_scenario(cfg: SURFConfig, scenario, steps, seed=0, *,
+                  p_fail=0.2, n_drop=None, p_drop=0.05, p_recover=0.5):
+    """Named training scenario → ``TopologySchedule`` over the config's
+    base graph (None for "static"/None — train on the static S).
+
+      * "link-failure": each link down i.i.d. w.p. ``p_fail`` per step,
+      * "dropout": ``n_drop`` agents (default n/10) drop out per step,
+      * "markov": bursty link outages (``p_drop``/``p_recover`` chain),
+      * "anneal": ring→random Watts–Strogatz rewiring curriculum.
+
+    The schedule length is ``steps`` (one S_t per meta-step; the engine
+    cycles mod T if trained longer)."""
+    from repro.topology import schedule as SCH
+    if scenario in (None, "static"):
+        return None
+    A, _ = G.build_topology(cfg.topology, cfg.n_agents, degree=cfg.degree,
+                            p=cfg.er_p, seed=seed)
+    if scenario == "link-failure":
+        return SCH.link_failure_schedule(A, steps, p_fail=p_fail, seed=seed)
+    if scenario == "dropout":
+        nd = n_drop if n_drop is not None else max(1, cfg.n_agents // 10)
+        return SCH.dropout_schedule(A, steps, n_drop=nd, seed=seed)
+    if scenario == "markov":
+        return SCH.markov_link_schedule(A, steps, p_drop=p_drop,
+                                        p_recover=p_recover, seed=seed)
+    if scenario == "anneal":
+        return SCH.ring_to_random_anneal(cfg.n_agents, steps,
+                                         k=max(2, 2 * (cfg.degree // 2)),
+                                         seed=seed)
+    raise ValueError(f"unknown scenario {scenario!r}; one of {SCENARIOS}")
+
+
 def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
                constrained=True, activation="relu", log_every=10,
-               init="dgd", engine="scan", mix_fn=None, mesh=None):
+               init="dgd", engine="scan", mix_fn=None, mesh=None,
+               scenario=None, schedule=None):
+    """Meta-train U-DGD on the config's topology. ``scenario`` (a name
+    from ``SCENARIOS``) or ``schedule`` (an explicit
+    ``TopologySchedule``) trains under TIME-VARYING graphs — the
+    returned S stays the static base mixing matrix, which evaluation
+    uses (robustness protocols train on perturbed topologies and test
+    on the nominal one)."""
     if engine not in ("scan", "python"):
         raise ValueError(f"engine must be 'scan' or 'python', got {engine!r}")
     if mesh is not None and engine != "scan":
         raise ValueError("mesh shardings require engine='scan' (the "
                          "step-wise python driver is unsharded)")
+    if scenario is not None and schedule is not None:
+        raise ValueError("pass either scenario= (a name) or schedule= "
+                         "(an explicit TopologySchedule), not both")
     _, S = make_problem(cfg, seed)
+    if schedule is None:
+        schedule = make_scenario(cfg, scenario, steps, seed)
+    S_train = schedule if schedule is not None else S
     key = jax.random.PRNGKey(seed)
     kw = {"mix_fn": mix_fn, "mesh": mesh} if engine == "scan" else \
         {"mix_fn": mix_fn}
     driver = TR.train_scan if engine == "scan" else TR.train
-    state, hist = driver(cfg, S, meta_datasets, steps, key,
+    state, hist = driver(cfg, S_train, meta_datasets, steps, key,
                          constrained=constrained, activation=activation,
                          log_every=log_every, init=init, **kw)
     return state, hist, S
@@ -106,6 +154,7 @@ def evaluate_surf(cfg: SURFConfig, state, S, datasets, seed=0,
     ``mesh`` places the stacked pool with its Q axis sharded over 'data'
     (``sharding.surf_rules.stacked_q_sharding``) — data-parallel
     evaluation over downstream datasets."""
+    TR._check_static_s(S, "evaluate_surf")
     stacked = stack_meta_datasets(datasets)
     n_q = jax.tree_util.tree_leaves(stacked)[0].shape[0]
     if mesh is not None:
@@ -196,6 +245,7 @@ def evaluate_async(cfg: SURFConfig, state, S, datasets, n_async, seed=0,
     computation over (keys, masks); each seed draws its own per-dataset
     async masks and every returned metric gains a leading (n_seeds,)
     axis, row i matching ``evaluate_async(..., seed=seeds[i])``."""
+    TR._check_static_s(S, "evaluate_async")
     stacked = stack_meta_datasets(datasets)
     n_q = jax.tree_util.tree_leaves(stacked)[0].shape[0]
     seed_arr, single = _seed_batch(seed, seeds)

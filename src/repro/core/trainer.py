@@ -18,11 +18,22 @@ Two drivers share the same ``meta_step``:
     per-step-logging use. Both produce identical results.
 
 The scan engine is mesh-aware: ``mix_fn``/``mesh`` replace the dense
-graph filter with the ring ``ppermute`` halo exchange of ``core.ring`` on
-an agent-axis-sharded mesh (specs in ``sharding.surf_rules``), and the
-compiled-engine cache is keyed on (normalized cfg, variant, activation,
-star, mesh-fingerprint, mix-tag) so sharded/ring engines never collide
-with dense ones while identical ring geometries share one executable.
+graph filter with the ring/halo ``ppermute`` exchange of
+``topology.halo`` on an agent-axis-sharded mesh (specs in
+``sharding.surf_rules``), and the compiled-engine cache is keyed on
+(normalized cfg, variant, activation, star, mesh-fingerprint, mix-tag)
+so sharded/ring engines never collide with dense ones while identical
+ring geometries share one executable.
+
+The scan engine is also TOPOLOGY-SCHEDULE-aware: pass a
+``topology.schedule.TopologySchedule`` wherever a static ``S`` is
+accepted and the stacked (T, n, n) matrices ride through the jit as a
+device argument, the scan body selecting ``S[state.step % T]`` every
+meta-step — time-varying graphs (link failures, dropout, anneals)
+train inside ONE compiled engine with zero retraces, and because the
+index is the CARRIED step counter a checkpoint-restored state resumes
+at the correct ``S_t``. Schedules use the dense mixing path; combining
+one with a static-S ``mix_fn`` is rejected.
 """
 from __future__ import annotations
 
@@ -39,6 +50,7 @@ from repro.core import task as T
 from repro.core import unroll as U
 from repro.data.pipeline import stack_meta_datasets
 from repro.optim import adam, apply_updates, clip_by_global_norm
+from repro.topology.schedule import TopologySchedule
 
 # Incremented each time a meta_step / eval body is TRACED (not executed) —
 # the scan engine's contract is that an entire training run traces
@@ -111,6 +123,16 @@ def _meta_step_core(cfg: SURFConfig, constrained, activation, star, mix_fn):
     return meta_step_s, forward_s
 
 
+def _check_static_s(S, where):
+    """The static-S builders can't consume a time-varying schedule —
+    point the caller at the schedule-aware drivers instead."""
+    if isinstance(S, TopologySchedule):
+        raise TypeError(
+            f"{where} needs a static (n, n) mixing matrix, got a "
+            "TopologySchedule — pass a schedule to train_scan/train "
+            "(and evaluate on a static S, e.g. schedule.S[t])")
+
+
 def make_meta_step(cfg: SURFConfig, S, *, constrained=True,
                    activation="relu", star=None, mix_fn=None, jit=True):
     """Build the meta-training step (jitted unless ``jit=False`` — the scan
@@ -120,6 +142,7 @@ def make_meta_step(cfg: SURFConfig, S, *, constrained=True,
     ``star``: override star-topology handling (defaults to cfg.topology).
     ``mix_fn``: override the dense graph filter (ring ppermute path).
     """
+    _check_static_s(S, "make_meta_step")
     meta_step_s, forward_s = _meta_step_core(cfg, constrained, activation,
                                              star, mix_fn)
 
@@ -167,6 +190,7 @@ def make_eval(cfg: SURFConfig, S, *, activation="relu", star=None, jit=True,
     evaluation used for every paper figure. ``jit=False`` returns the raw
     body for embedding under vmap (see ``core.surf.evaluate_surf``);
     ``mix_fn`` routes mixing through the ring ppermute filter."""
+    _check_static_s(S, "make_eval")
     evaluate_s = _eval_core(cfg, activation, star, mix_fn)
 
     def evaluate(theta, batch, key):
@@ -237,20 +261,36 @@ def make_train_scan(cfg: SURFConfig, S, *, constrained=True,
     an agent axis replicate); without it a pytree-prefix spec is used,
     which only flat Xtr/Ytr/Xte/Yte dicts satisfy. Engines are cached per
     (normalized cfg, variant, activation, star, mesh-fingerprint,
-    mix-tag[, stacked structure]); an untagged custom ``mix_fn`` is never
-    cached.
+    mix-tag[, schedule cache-tag][, stacked structure]); an untagged
+    custom ``mix_fn`` is never cached.
+
+    ``S`` may be a ``topology.schedule.TopologySchedule``: its stacked
+    (T, n, n) matrices become the jit argument and the body mixes with
+    ``S[state.step % T]`` — a different topology every meta-step, one
+    compile. Per-step batch/RNG/schedule selection all index the CARRIED
+    ``state.step`` (not a scan counter), so running ``k`` then
+    ``steps−k`` meta-steps — with a checkpoint save/restore in between —
+    reproduces the single ``steps``-long run exactly.
     """
-    cache_key = _engine_cache_key(cfg, ("train", constrained), activation,
+    sched = isinstance(S, TopologySchedule)
+    if sched and mix_fn is not None:
+        raise ValueError(
+            "a TopologySchedule requires the dense mixing path: the "
+            "static halo/ring mix_fn bakes one S and would silently "
+            "ignore the schedule")
+    variant = ("train", constrained) + ((S.cache_tag,) if sched else ())
+    cache_key = _engine_cache_key(cfg, variant, activation,
                                   star, mesh=mesh, mix_fn=mix_fn)
     if cache_key is not None and mesh is not None and stacked is not None:
         from repro.sharding.surf_rules import stacked_sharded_flags
         cache_key = cache_key + (
             jax.tree_util.tree_structure(stacked),
             stacked_sharded_flags(stacked, cfg.n_agents))
+    S_arr = S.S if sched else S
     if cache_key is not None and cache_key in _ENGINE_CACHE:
         run_s = _ENGINE_CACHE[cache_key]
         return lambda state, stacked, key, steps: run_s(state, stacked, key,
-                                                        steps, S)
+                                                        steps, S_arr)
 
     meta_step_s, _ = _meta_step_core(cfg, constrained, activation, star,
                                      mix_fn)
@@ -269,18 +309,25 @@ def make_train_scan(cfg: SURFConfig, S, *, constrained=True,
     def run_s(state: TrainState, stacked, key, steps: int, S):
         n_q = jax.tree_util.tree_leaves(stacked)[0].shape[0]
 
-        def body(st, t):
+        def body(st, _):
+            # index by the CARRIED step counter, not a scan-local t: a
+            # restored mid-run state picks up its batch / RNG / S_t
+            # stream exactly where the interrupted run left off
+            t = st.step
             batch = jax.tree_util.tree_map(
                 lambda a: jax.lax.dynamic_index_in_dim(
                     a, t % n_q, 0, keepdims=False), stacked)
-            return meta_step_s(S, st, batch, jax.random.fold_in(key, t))
+            S_t = (jax.lax.dynamic_index_in_dim(S, t % S.shape[0], 0,
+                                                keepdims=False)
+                   if sched else S)
+            return meta_step_s(S_t, st, batch, jax.random.fold_in(key, t))
 
-        return jax.lax.scan(body, state, jnp.arange(steps))
+        return jax.lax.scan(body, state, None, length=steps)
 
     if cache_key is not None:
         _ENGINE_CACHE[cache_key] = run_s
     return lambda state, stacked, key, steps: run_s(state, stacked, key,
-                                                    steps, S)
+                                                    steps, S_arr)
 
 
 def _decimate_history(metrics, steps, log_every):
@@ -300,7 +347,8 @@ def train_scan(cfg: SURFConfig, S, meta_datasets, steps, key,
     cycling the meta-training datasets on device. Returns (state, history)
     with history decimated to ``log_every`` on host — same contract as the
     step-wise ``train``. ``mix_fn``/``mesh`` route mixing through the ring
-    ppermute path on an agent-axis-sharded mesh (see ``make_train_scan``)."""
+    ppermute path on an agent-axis-sharded mesh (see ``make_train_scan``);
+    ``S`` may be a ``TopologySchedule`` for time-varying graphs."""
     state = init_state(key, cfg, init=init)
     stacked = stack_meta_datasets(meta_datasets)
     run = make_train_scan(cfg, S, constrained=constrained,
@@ -316,10 +364,27 @@ def train(cfg: SURFConfig, S, meta_datasets, steps, key,
     """Step-wise Algorithm 1: a thin Python loop over the same jitted
     ``meta_step`` and fold_in RNG stream as ``train_scan`` — use when you
     need host access to metrics every iteration (interactive logging,
-    early stopping). Returns (state, history)."""
+    early stopping). Returns (state, history). A ``TopologySchedule`` S
+    jits the S-as-argument body once and indexes ``S_t`` on host — the
+    exact reference stream for the schedule-aware scan engine."""
     state = init_state(key, cfg, init=init)
-    meta_step, _ = make_meta_step(cfg, S, constrained=constrained,
-                                  activation=activation, mix_fn=mix_fn)
+    if isinstance(S, TopologySchedule):
+        if mix_fn is not None:
+            raise ValueError("a TopologySchedule requires the dense "
+                             "mixing path (no static mix_fn)")
+        meta_step_s, _ = _meta_step_core(cfg, constrained, activation,
+                                         None, None)
+        jit_step = jax.jit(meta_step_s)
+        T_s, S_stack = S.steps, S.S
+
+        def meta_step(st, batch, k, t):
+            return jit_step(S_stack[t % T_s], st, batch, k)
+    else:
+        step_fn, _ = make_meta_step(cfg, S, constrained=constrained,
+                                    activation=activation, mix_fn=mix_fn)
+
+        def meta_step(st, batch, k, t):
+            return step_fn(st, batch, k)
     hist = []
     if isinstance(meta_datasets, (list, tuple)):
         n_q = len(meta_datasets)
@@ -330,7 +395,7 @@ def train(cfg: SURFConfig, S, meta_datasets, steps, key,
             lambda a: a[q], meta_datasets)
     for t in range(steps):
         state, m = meta_step(state, get_batch(t % n_q),
-                             jax.random.fold_in(key, t))
+                             jax.random.fold_in(key, t), t)
         if log_every and (t % log_every == 0 or t == steps - 1):
             hist.append({k: float(v) for k, v in m.items()} | {"step": t})
     return state, hist

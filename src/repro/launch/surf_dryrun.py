@@ -63,15 +63,22 @@ def meta_step_collective_bytes(cfg, S, mesh, mix_fn=None):
 
 
 def lower_surf_step(multi_pod: bool = False, cfg=DRYRUN, ring: bool = False,
-                    infer: bool = False):
+                    infer: bool = False, mix: str | None = None):
     """``infer=True`` lowers the deployed unrolled optimizer (forward only,
     the paper's inference regime) instead of the meta-training step — this
     isolates the graph-mixing collectives the ring path optimizes from the
-    θ-gradient all-reduces that dominate meta-training."""
+    θ-gradient all-reduces that dominate meta-training.
+
+    ``mix``: None (dense S @ W), "ring" (circulant ``ppermute`` filter,
+    ring topologies only; ``ring=True`` is the legacy spelling) or
+    "halo" (``topology.halo`` block-sparse exchange — works for ANY
+    topology in the config, the scenario the ring path could not cover).
+    """
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "2x16x16" if multi_pod else "16x16"
     dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    rec = {"arch": "surf-udgd" + ("-ring" if ring else ""),
+    mix = mix or ("ring" if ring else None)
+    rec = {"arch": "surf-udgd" + (f"-{mix}" if mix else ""),
            "shape": f"n{cfg.n_agents}_L{cfg.n_layers}"
                     + ("_infer" if infer else ""),
            "mesh": mesh_name, "chips": mesh.size, "tag": ""}
@@ -80,11 +87,16 @@ def lower_surf_step(multi_pod: bool = False, cfg=DRYRUN, ring: bool = False,
                                 degree=cfg.degree, seed=0)
         S = jnp.asarray(S, jnp.float32)
         mix_fn = None
-        if ring:
+        if mix == "ring":
             from repro.core.ring import make_ring_mix
             assert cfg.topology == "ring"
             mix_fn = make_ring_mix(mesh, "data", cfg.n_agents,
                                    max(1, cfg.degree // 2))
+        elif mix == "halo":
+            from repro.topology.halo import make_halo_mix
+            mix_fn = make_halo_mix(mesh, "data", np.asarray(S))
+        elif mix is not None:
+            raise ValueError(f"mix must be None|'ring'|'halo', got {mix!r}")
         if infer:
             from repro.core import unroll as U
 

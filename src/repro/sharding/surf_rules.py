@@ -92,6 +92,16 @@ def stacked_q_sharding(mesh: Mesh, n_q: int | None = None,
     return NamedSharding(mesh, _dim_spec(n_q, mesh, axis, 0))
 
 
+def schedule_sharding(mesh: Mesh) -> NamedSharding:
+    """The stacked (T, n, n) mixing-matrix schedule
+    (``topology.schedule.TopologySchedule.S``): REPLICATED. Every agent
+    shard reads the full S_t row block each meta-step and the stack is
+    tiny next to the meta-dataset pool (40 MB at the paper's n=100,
+    T=1000); sharding T would turn the per-step ``S[step % T]`` select
+    into a cross-device fetch inside the scan body."""
+    return replicated(mesh)
+
+
 def train_state_shardings(state, mesh: Mesh):
     """Replicated sharding for every TrainState leaf (θ, λ, opt state,
     step). Accepts the state pytree or a ShapeDtypeStruct tree."""
@@ -128,7 +138,9 @@ def train_scan_shardings(mesh: Mesh, n_agents: int | None = None,
     """(in_shardings, out_shardings) for the scan engine's
     ``run_s(state, stacked, key, S)`` dynamic arguments (``steps`` is
     static): state/key/S replicated, stacked agent-axis-sharded; outputs
-    (state, metrics) replicated. With ``stacked`` given, the dataset
+    (state, metrics) replicated. The S slot covers both a static (n, n)
+    matrix and a stacked (T, n, n) ``TopologySchedule`` array — both
+    replicate (``schedule_sharding``). With ``stacked`` given, the dataset
     entry is the leaf-aware tree from ``stacked_shardings_tree``;
     otherwise a pytree-prefix spec (only safe for flat Xtr/Ytr/Xte/Yte
     dicts whose every leaf has the agent axis at dim 1)."""

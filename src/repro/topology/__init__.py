@@ -1,0 +1,22 @@
+"""Communication-topology subsystem: graph families, time-varying mixing
+schedules, and collective-efficient block-sparse halo mixing.
+
+Three pillars (ISSUE 3 / ROADMAP "generalize the collective-efficient
+mix beyond circulant rings"):
+
+  * ``families`` — graph generators (regular, ER, star, ring, random
+    geometric, Watts–Strogatz small-world, preferential attachment, 2-D
+    torus), mixing-weight rules (Metropolis, lazy Metropolis, Laplacian
+    ``I − εL``) and spectral diagnostics (algebraic connectivity, SLEM).
+  * ``schedule`` — time-varying ``S_t`` sequences materialized as a
+    stacked ``(T, n, n)`` array (``TopologySchedule``) that the jitted
+    scan engine consumes per meta-step with NO retrace: i.i.d. link
+    failures, Markov link switching, agent dropout, ring→random anneals.
+  * ``halo`` — a ``shard_map`` block-sparse ``mix_fn`` generalizing the
+    circulant-ring ``ppermute`` filter of ``core.ring`` to ANY mixing
+    matrix via per-shard-offset neighbor halo exchanges.
+"""
+from repro.topology import families, halo, schedule  # noqa: F401
+from repro.topology.families import build_topology  # noqa: F401
+from repro.topology.halo import make_halo_mix  # noqa: F401
+from repro.topology.schedule import TopologySchedule  # noqa: F401

@@ -1,0 +1,180 @@
+"""Time-varying mixing-matrix schedules: the ``S_t`` pillar of the
+topology subsystem.
+
+A ``TopologySchedule`` is a stacked ``(T, n, n)`` float32 array of
+mixing matrices plus a hashable ``tag``. The scan engine
+(``core.trainer.make_train_scan``) accepts a schedule wherever it
+accepts a static ``S``: the stack is threaded through the jitted scan
+as a device argument and the body selects ``S[state.step % T]`` every
+meta-step — the topology changes each iteration inside ONE compiled
+engine (no retrace; the engine cache is keyed on the schedule's
+structural ``cache_tag``, and because indexing uses the CARRIED step
+counter a checkpoint-restored ``TrainState`` resumes at the correct
+``S_t``). ``schedule[t]``'s semantics: meta-step ``t`` (0-based,
+cycling mod T) mixes with ``S_t`` in every unrolled layer of that step.
+
+Builders (all deterministic under ``seed``; per-step matrices are
+rebuilt with the chosen weight rule, so every ``S_t`` stays symmetric
+and doubly stochastic — an agent isolated by failures/dropout gets
+self-weight 1 and simply holds its value):
+
+  * ``static_schedule``       — a (1, n, n) constant (cycles to any T),
+  * ``link_failure_schedule`` — each base edge drops i.i.d. per step
+    with probability ``p_fail`` (Hadou et al.'s link-failure stress),
+  * ``markov_link_schedule``  — each edge is an independent up/down
+    2-state Markov chain (bursty outages: ``p_drop`` up→down,
+    ``p_recover`` down→up),
+  * ``dropout_schedule``      — ``n_drop`` agents drop out per step
+    (all their links removed; stragglers hold their last iterate),
+  * ``ring_to_random_anneal`` — Watts–Strogatz rewiring probability
+    annealed 0 → ``beta_max`` over ``stages`` waypoints: training that
+    starts on a clean circulant ring and ends on a random graph.
+
+Memory: T=1000 at the paper's n=100 is a 40 MB stack — fine device-side.
+Schedules compose with the DENSE mixing path (S_t @ W inside the jitted
+scan, sharded or not); the static halo/ring ``mix_fn`` path bakes one S
+and is rejected in combination with a schedule (see ``core.trainer``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.topology import families as F
+
+
+class TopologySchedule(NamedTuple):
+    """Stacked time-varying mixing matrices + provenance tag.
+
+    ``S``: (T, n, n) float32 device array, ``tag``: hashable identity of
+    the builder + parameters + seed (provenance; also the python-driver
+    memo key). ``cache_tag`` is the STRUCTURAL part used by the compiled
+    -engine caches: schedules with the same shape share one executable
+    (S is a jit argument — values never force a retrace).
+    """
+    S: jnp.ndarray
+    tag: tuple
+
+    @property
+    def steps(self) -> int:
+        return int(self.S.shape[0])
+
+    @property
+    def n_agents(self) -> int:
+        return int(self.S.shape[1])
+
+    @property
+    def cache_tag(self) -> tuple:
+        return ("schedule", tuple(int(d) for d in self.S.shape))
+
+
+def _as_schedule(A_stack, tag, weights, **kw):
+    S = weights_batch(A_stack, weights=weights, **kw)
+    return TopologySchedule(S=jnp.asarray(S, jnp.float32), tag=tag)
+
+
+def weights_batch(A_stack, weights="metropolis", **kw):
+    """Apply a ``families.WEIGHT_RULES`` rule over a (T, n, n) adjacency
+    batch. Metropolis is fully vectorized (slice-exact vs the per-step
+    call); other rules loop over T."""
+    A = np.asarray(A_stack, bool)
+    T, n, _ = A.shape
+    if weights == "metropolis" and not kw:
+        deg = A.sum(-1)
+        pair = np.maximum(deg[:, :, None], deg[:, None, :])
+        W = np.where(A, 1.0 / (1.0 + pair), 0.0)
+        idx = np.arange(n)
+        W[:, idx, idx] = 0.0
+        W[:, idx, idx] = 1.0 - W.sum(-1)
+        return W
+    rule = F.WEIGHT_RULES[weights]
+    return np.stack([rule(A[t], **kw) for t in range(T)])
+
+
+def static_schedule(S, tag=None):
+    """Wrap a static mixing matrix as a (1, n, n) schedule — it cycles
+    (t % 1 == 0) to any number of meta-steps, so a static run through
+    the schedule-aware engine is bit-identical to the plain-S engine."""
+    S = jnp.asarray(S, jnp.float32)
+    assert S.ndim == 2 and S.shape[0] == S.shape[1]
+    return TopologySchedule(S=S[None], tag=tag or ("static", int(S.shape[0])))
+
+
+def link_failure_schedule(A, steps, p_fail=0.1, seed=0,
+                          weights="metropolis"):
+    """i.i.d. link failures: every base edge of ``A`` is independently
+    down with probability ``p_fail`` at each of ``steps`` meta-steps."""
+    A = np.asarray(A, bool)
+    n = len(A)
+    rng = np.random.default_rng(seed)
+    iu = np.triu_indices(n, 1)
+    up = (rng.random((steps, iu[0].size)) >= p_fail) & A[iu]
+    At = np.zeros((steps, n, n), bool)
+    At[:, iu[0], iu[1]] = up
+    At |= At.transpose(0, 2, 1)
+    tag = ("linkfail", n, int(steps), float(p_fail), int(seed), weights)
+    return _as_schedule(At, tag, weights)
+
+
+def markov_link_schedule(A, steps, p_drop=0.05, p_recover=0.5, seed=0,
+                         weights="metropolis"):
+    """Markov link switching: each base edge is an independent 2-state
+    chain, starting up, going down w.p. ``p_drop`` and recovering w.p.
+    ``p_recover`` per meta-step — temporally-correlated (bursty) outages
+    rather than i.i.d. flicker."""
+    A = np.asarray(A, bool)
+    n = len(A)
+    rng = np.random.default_rng(seed)
+    iu = np.triu_indices(n, 1)
+    base = A[iu]
+    state = base.copy()
+    ups = np.empty((steps, base.size), bool)
+    for t in range(steps):
+        u = rng.random(base.size)
+        state = np.where(state, u >= p_drop, u < p_recover) & base
+        ups[t] = state
+    At = np.zeros((steps, n, n), bool)
+    At[:, iu[0], iu[1]] = ups
+    At |= At.transpose(0, 2, 1)
+    tag = ("markov", n, int(steps), float(p_drop), float(p_recover),
+           int(seed), weights)
+    return _as_schedule(At, tag, weights)
+
+
+def dropout_schedule(A, steps, n_drop=1, seed=0, weights="metropolis"):
+    """Agent dropout / stragglers: at each meta-step ``n_drop`` agents
+    (fresh uniform draw per step) lose ALL their links — their mixing
+    row becomes e_i (they hold their value) and their neighbours
+    redistribute the lost weight onto themselves."""
+    A = np.asarray(A, bool)
+    n = len(A)
+    assert 0 <= n_drop < n
+    rng = np.random.default_rng(seed)
+    drop = np.zeros((steps, n), bool)
+    for t in range(steps):
+        drop[t, rng.choice(n, n_drop, replace=False)] = True
+    At = A[None] & ~drop[:, :, None] & ~drop[:, None, :]
+    tag = ("dropout", n, int(steps), int(n_drop), int(seed), weights)
+    return _as_schedule(At, tag, weights)
+
+
+def ring_to_random_anneal(n, steps, k=4, beta_max=1.0, stages=8, seed=0,
+                          weights="metropolis"):
+    """Ring→random anneal: ``stages`` Watts–Strogatz graphs with
+    rewiring probability annealed linearly 0 → ``beta_max``, each held
+    for ~steps/stages consecutive meta-steps. Stage 0 is the exact
+    circulant ring; the last stage is (approximately) a random graph —
+    curriculum from local to global communication."""
+    stages = max(1, min(int(stages), int(steps)))
+    graphs = []
+    for s in range(stages):
+        beta = beta_max * (s / (stages - 1) if stages > 1 else 0.0)
+        graphs.append(F.small_world_graph(n, k=k, beta=beta, seed=seed + s))
+    reps = np.array_split(np.arange(steps), stages)
+    At = np.concatenate([np.repeat(graphs[s][None], len(r), axis=0)
+                         for s, r in enumerate(reps) if len(r)])
+    tag = ("anneal", n, int(steps), int(k), float(beta_max), stages,
+           int(seed), weights)
+    return _as_schedule(At, tag, weights)

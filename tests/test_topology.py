@@ -1,0 +1,350 @@
+"""Topology subsystem: graph families + weight rules + diagnostics,
+time-varying mixing schedules through BOTH training engines (one compile,
+correct S_t stream, checkpoint-resume mid-schedule), and the block-sparse
+halo mixer's dense parity on the default 1-device mesh (the >1-shard
+halo/ppermute tests live in tests/test_sharded_engine.py)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt
+from repro.configs.surf_paper import SMOKE
+from repro.core import surf
+from repro.core import trainer as TR
+from repro.core.unroll import graph_filter
+from repro.data import synthetic
+from repro.data.pipeline import stack_meta_datasets
+from repro.launch.mesh import make_agent_mesh
+from repro.topology import families as F
+from repro.topology import schedule as SCH
+from repro.topology.halo import halo_plan, make_halo_mix
+
+FAMILIES = ("regular", "er", "star", "ring", "geometric", "smallworld",
+            "pref", "torus")
+
+
+def _adjacency(kind, n, seed):
+    A, _ = F.build_topology(kind, n, degree=2 if kind == "regular" else 3,
+                            p=0.4, seed=seed)
+    return A
+
+
+# ------------------------------------------------------------- families
+@pytest.mark.parametrize("kind", FAMILIES)
+@pytest.mark.parametrize("seed", (0, 3))
+def test_vectorized_metropolis_exactly_matches_loop(kind, seed):
+    """Satellite: the vectorized metropolis_weights must equal the O(n²)
+    double-loop reference EXACTLY (same float ops, same reductions)."""
+    A = _adjacency(kind, 12, seed)
+    W_vec = F.metropolis_weights(A)
+    W_loop = F.metropolis_weights_loop(A)
+    assert (W_vec == W_loop).all()
+
+
+def test_batch_metropolis_matches_per_step():
+    rng = np.random.default_rng(0)
+    base = F.er_graph(9, 0.5, seed=1)
+    At = np.stack([base & (rng.random((9, 9)) > 0.2) for _ in range(5)])
+    At = np.triu(At, 1) | np.triu(At, 1).transpose(0, 2, 1)
+    W = SCH.weights_batch(At)
+    for t in range(5):
+        assert (W[t] == F.metropolis_weights(At[t])).all()
+
+
+@pytest.mark.parametrize("kind", FAMILIES)
+def test_family_invariants(kind):
+    A = _adjacency(kind, 16, seed=1)
+    assert A.shape == (16, 16) and A.dtype == bool
+    assert (A == A.T).all(), "adjacency must be symmetric"
+    assert not A.diagonal().any(), "no self-loops"
+    assert F.is_connected(A)
+    assert _adjacency(kind, 16, seed=1).tolist() == A.tolist(), \
+        "generator must be deterministic under a fixed seed"
+
+
+def test_torus_degree_and_prime_fallback():
+    A = F.torus_graph(16)                       # 4x4: every node degree 4
+    assert (A.sum(1) == 4).all()
+    A7 = F.torus_graph(7)                       # prime: 1x7 ring, degree 2
+    assert (A7.sum(1) == 2).all() and F.is_connected(A7)
+
+
+@pytest.mark.parametrize("weights", sorted(F.WEIGHT_RULES))
+def test_weight_rules_doubly_stochastic(weights):
+    _, S = F.build_topology("er", 12, p=0.4, seed=2, weights=weights)
+    np.testing.assert_allclose(S.sum(0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(S.sum(1), 1.0, atol=1e-12)
+    np.testing.assert_allclose(S, S.T, atol=1e-12)
+    assert (S >= -1e-12).all()
+    assert F.second_eigenvalue(S) < 1.0
+
+
+def test_lazy_metropolis_eigenvalue_floor():
+    A = F.ring_graph(8, 1)                      # bipartite even ring
+    lam_min = np.linalg.eigvalsh(F.lazy_metropolis_weights(A, 0.5)).min()
+    assert lam_min >= -1e-12                    # γ=1/2 ⇒ PSD, no −1 mode
+
+
+def test_spectral_diagnostics():
+    A = F.ring_graph(10, 1)
+    assert F.algebraic_connectivity(A) > 0
+    two = np.zeros((6, 6), bool)                # two disjoint triangles
+    for block in (slice(0, 3), slice(3, 6)):
+        two[block, block] = True
+    np.fill_diagonal(two, False)
+    assert F.algebraic_connectivity(two) < 1e-9
+    assert F.second_eigenvalue(F.metropolis_weights(two)) > 1 - 1e-9
+    # better-connected graph mixes faster
+    assert (F.second_eigenvalue(F.metropolis_weights(F.ring_graph(16, 4)))
+            < F.second_eigenvalue(F.metropolis_weights(F.ring_graph(16, 1))))
+
+
+def test_build_topology_rejects_unknown():
+    with pytest.raises(ValueError):
+        F.build_topology("hypercube", 8)
+    with pytest.raises(ValueError, match="weight rule"):
+        F.build_topology("ring", 8, weights="uniform")
+
+
+# ----------------------------------------------- hypothesis property tests
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:
+    HAVE_HYP = False
+
+if HAVE_HYP:
+    HSET = dict(max_examples=10, deadline=None)
+
+    @settings(**HSET)
+    @given(st.sampled_from(FAMILIES), st.integers(8, 20),
+           st.integers(0, 10_000))
+    def test_prop_families_symmetric_connected(kind, n, seed):
+        A = _adjacency(kind, n, seed)
+        assert (A == A.T).all() and not A.diagonal().any()
+        assert F.is_connected(A)
+        assert (_adjacency(kind, n, seed) == A).all()     # determinism
+
+    @settings(**HSET)
+    @given(st.sampled_from(FAMILIES), st.integers(8, 20),
+           st.integers(0, 10_000))
+    def test_prop_metropolis_doubly_stochastic_and_mixing(kind, n, seed):
+        A = _adjacency(kind, n, seed)
+        S = F.metropolis_weights(A)
+        np.testing.assert_allclose(S.sum(0), 1.0, atol=1e-9)
+        np.testing.assert_allclose(S.sum(1), 1.0, atol=1e-9)
+        assert (S >= 0).all()
+        assert F.second_eigenvalue(S) < 1.0   # connected ⇒ SLEM < 1
+        assert (F.metropolis_weights(A) == F.metropolis_weights_loop(A)).all()
+
+
+# ------------------------------------------------------------- schedules
+BASE_A = F.regular_graph(SMOKE.n_agents, 3, seed=0)
+
+
+def _builders():
+    return {
+        "linkfail": SCH.link_failure_schedule(BASE_A, 9, p_fail=0.3, seed=4),
+        "markov": SCH.markov_link_schedule(BASE_A, 9, p_drop=0.3,
+                                           p_recover=0.5, seed=4),
+        "dropout": SCH.dropout_schedule(BASE_A, 9, n_drop=2, seed=4),
+        "anneal": SCH.ring_to_random_anneal(SMOKE.n_agents, 9, k=4,
+                                            stages=3, seed=4),
+    }
+
+
+def test_schedules_shapes_stochasticity_determinism():
+    n = SMOKE.n_agents
+    for name, sch in _builders().items():
+        S = np.asarray(sch.S)
+        assert S.shape == (9, n, n), name
+        np.testing.assert_allclose(S.sum(-1), 1.0, atol=1e-6)
+        np.testing.assert_allclose(S, S.transpose(0, 2, 1), atol=1e-6)
+        assert sch.steps == 9 and sch.n_agents == n
+        assert isinstance(hash(sch.tag), int) and isinstance(
+            hash(sch.cache_tag), int)
+    # deterministic under seed, distinct across seeds
+    a = SCH.link_failure_schedule(BASE_A, 9, p_fail=0.3, seed=4)
+    b = SCH.link_failure_schedule(BASE_A, 9, p_fail=0.3, seed=5)
+    assert (np.asarray(a.S) == np.asarray(
+        _builders()["linkfail"].S)).all()
+    assert not (np.asarray(a.S) == np.asarray(b.S)).all()
+
+
+def test_link_failure_p0_and_markov_p0_are_static():
+    S0 = F.metropolis_weights(BASE_A)
+    lf = SCH.link_failure_schedule(BASE_A, 5, p_fail=0.0, seed=1)
+    mk = SCH.markov_link_schedule(BASE_A, 5, p_drop=0.0, seed=1)
+    for sch in (lf, mk):
+        np.testing.assert_allclose(np.asarray(sch.S),
+                                   np.broadcast_to(S0, (5,) + S0.shape),
+                                   atol=1e-12)
+
+
+def test_dropout_schedule_isolates_exactly_n_drop():
+    sch = SCH.dropout_schedule(BASE_A, 6, n_drop=2, seed=3)
+    n = SMOKE.n_agents
+    eye = np.eye(n)
+    for t in range(6):
+        St = np.asarray(sch.S[t])
+        iso = [i for i in range(n) if np.allclose(St[i], eye[i])]
+        assert len(iso) == 2, f"step {t}: {iso}"
+
+
+def test_anneal_starts_on_exact_ring():
+    sch = SCH.ring_to_random_anneal(SMOKE.n_agents, 8, k=4, stages=4,
+                                    seed=0)
+    np.testing.assert_allclose(
+        np.asarray(sch.S[0]),
+        F.metropolis_weights(F.ring_graph(SMOKE.n_agents, 2)), atol=1e-7)
+
+
+def test_static_schedule_matches_plain_s_through_scan():
+    _, S = surf.make_problem(SMOKE, seed=0)
+    mds = synthetic.make_meta_dataset(SMOKE, 3, seed=0)
+    key = jax.random.PRNGKey(1)
+    st_a, _ = TR.train_scan(SMOKE, S, mds, 8, key)
+    st_b, _ = TR.train_scan(SMOKE, SCH.static_schedule(S), mds, 8, key)
+    for a, b in zip(jax.tree_util.tree_leaves(st_a.theta),
+                    jax.tree_util.tree_leaves(st_b.theta)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_schedule_scan_matches_python_driver():
+    """The schedule-aware scan engine reproduces the host-indexed python
+    driver's trajectory — the reference S_t/batch/RNG stream."""
+    mds = synthetic.make_meta_dataset(SMOKE, 4, seed=0)
+    sch = SCH.link_failure_schedule(BASE_A, 12, p_fail=0.3, seed=1)
+    key = jax.random.PRNGKey(7)
+    st_py, h_py = TR.train(SMOKE, sch, mds, 12, key, log_every=4)
+    st_sc, h_sc = TR.train_scan(SMOKE, sch, mds, 12, key, log_every=4)
+    for a, b in zip(jax.tree_util.tree_leaves(st_py.theta),
+                    jax.tree_util.tree_leaves(st_sc.theta)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+    assert [h["step"] for h in h_py] == [h["step"] for h in h_sc]
+    for hp, hs in zip(h_py, h_sc):
+        for k in hp:
+            np.testing.assert_allclose(hp[k], hs[k], atol=1e-4, rtol=1e-3)
+
+
+def test_time_varying_schedule_trains_with_one_compile():
+    """Acceptance: a T=200 link-failure schedule through train_scan
+    compiles the engine EXACTLY once (meta_step traced once)."""
+    cfg = SMOKE
+    A = F.regular_graph(cfg.n_agents, 3, seed=0)
+    sch = SCH.link_failure_schedule(A, 200, p_fail=0.2, seed=2)
+    mds = synthetic.make_meta_dataset(cfg, 4, seed=0)
+    TR.TRACE_COUNTS["meta_step"] = 0
+    state, hist = TR.train_scan(cfg, sch, mds, 200, jax.random.PRNGKey(0),
+                                log_every=50)
+    assert TR.TRACE_COUNTS["meta_step"] == 1, \
+        f"schedule engine re-traced: {TR.TRACE_COUNTS['meta_step']}"
+    assert int(state.step) == 200 and hist[-1]["step"] == 199
+    # same-shape schedule (different values/seed): cache hit, no retrace
+    sch2 = SCH.link_failure_schedule(A, 200, p_fail=0.2, seed=9)
+    TR.train_scan(cfg, sch2, mds, 200, jax.random.PRNGKey(0))
+    assert TR.TRACE_COUNTS["meta_step"] == 1
+
+
+def test_schedule_rejects_static_mix_fn():
+    sch = SCH.dropout_schedule(BASE_A, 4, n_drop=1, seed=0)
+    mix = make_halo_mix(make_agent_mesh(1), "data",
+                        F.metropolis_weights(BASE_A))
+    mds = synthetic.make_meta_dataset(SMOKE, 2, seed=0)
+    with pytest.raises(ValueError, match="dense mixing"):
+        TR.train_scan(SMOKE, sch, mds, 4, jax.random.PRNGKey(0),
+                      mix_fn=mix)
+    with pytest.raises(TypeError, match="static"):
+        TR.make_meta_step(SMOKE, sch)
+
+
+# ----------------------------------------------- checkpoint mid-schedule
+def test_checkpoint_roundtrip_resumes_at_correct_schedule_step(tmp_path):
+    """Satellite: save/restore of the scan engine's TrainState mid-
+    schedule resumes at the correct S_t — the 20-step run equals 10
+    steps + checkpoint + 10 steps, because batch/RNG/S_t selection all
+    index the CARRIED state.step."""
+    cfg = SMOKE
+    sch = SCH.dropout_schedule(BASE_A, 20, n_drop=1, seed=3)
+    mds = synthetic.make_meta_dataset(cfg, 4, seed=0)
+    stacked = stack_meta_datasets(mds)
+    key = jax.random.PRNGKey(5)
+    ref, _ = TR.train_scan(cfg, sch, mds, 20, key)
+    half, _ = TR.train_scan(cfg, sch, mds, 10, key)
+    path = os.path.join(tmp_path, "mid")
+    ckpt.save(path, half, step=int(half.step))
+    template = jax.eval_shape(lambda k: TR.init_state(k, cfg), key)
+    restored = ckpt.restore(path, template)
+    assert int(restored.step) == 10
+    run = TR.make_train_scan(cfg, sch)
+    resumed, _ = run(restored, stacked, key, 10)
+    assert int(resumed.step) == 20
+    for a, b in zip(jax.tree_util.tree_leaves(ref),
+                    jax.tree_util.tree_leaves(resumed)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, rtol=1e-6)
+
+
+# ------------------------------------------------------- halo (1 device)
+@pytest.mark.parametrize("kind", ("ring", "regular", "smallworld", "er"))
+def test_halo_mix_matches_dense_single_device(kind):
+    """make_halo_mix degrades to the local dense filter on 1 shard —
+    parity for every family (the 8-shard ppermute version of this test
+    lives in the sharded lane)."""
+    _, S = F.build_topology(kind, 12, degree=2, p=0.4, seed=0)
+    mesh = make_agent_mesh(1)
+    mix = make_halo_mix(mesh, "data", S)
+    W = jax.random.normal(jax.random.PRNGKey(0), (12, 6))
+    h = jnp.asarray([0.2, 0.5, 0.3])
+    np.testing.assert_allclose(
+        np.asarray(mix(W, h)),
+        np.asarray(graph_filter(jnp.asarray(S, jnp.float32), W, h)),
+        atol=1e-5)
+
+
+def test_halo_plan_block_sparsity():
+    """The plan only pays for offsets with nonzero blocks, and the ring
+    plan carries exactly ``hops`` rows per direction."""
+    n, nshards = 16, 8
+    S = F.metropolis_weights(F.ring_graph(n, 1))
+    S0, plans = halo_plan(S, nshards)
+    assert S0.shape == (nshards, 2, 2)
+    assert sorted(d for d, _, _ in plans) == [1, nshards - 1]
+    assert all(len(rows) == 1 for _, rows, _ in plans)
+    # torus 4x4 on 8 shards: 4 active offsets, not all 7
+    St = F.metropolis_weights(F.torus_graph(16))
+    _, plans_t = halo_plan(St, nshards)
+    assert 0 < len(plans_t) < nshards - 1
+
+
+def test_halo_tag_is_content_hash():
+    S1 = F.metropolis_weights(F.ring_graph(12, 1))
+    S2 = F.metropolis_weights(F.ring_graph(12, 2))
+    mesh = make_agent_mesh(1)
+    a, b = make_halo_mix(mesh, "data", S1), make_halo_mix(mesh, "data", S1)
+    c = make_halo_mix(mesh, "data", S2)
+    assert a.tag == b.tag != c.tag
+    assert TR._engine_cache_key(SMOKE, "eval", "relu", None, mix_fn=a) \
+        == TR._engine_cache_key(SMOKE, "eval", "relu", None, mix_fn=b)
+
+
+# ------------------------------------------------------ scenario frontend
+def test_make_scenario_and_train_surf_scenarios():
+    mds = synthetic.make_meta_dataset(SMOKE, 3, seed=0)
+    assert surf.make_scenario(SMOKE, "static", 5) is None
+    sch = surf.make_scenario(SMOKE, "dropout", 5, seed=1)
+    assert isinstance(sch, SCH.TopologySchedule) and sch.steps == 5
+    state, _, S = surf.train_surf(SMOKE, mds, steps=5,
+                                  scenario="link-failure", log_every=0)
+    assert S.shape == (SMOKE.n_agents, SMOKE.n_agents)  # static S returned
+    res = surf.evaluate_surf(SMOKE, state, S, mds, seed=0)
+    assert np.isfinite(res["final_acc"])
+    with pytest.raises(ValueError, match="scenario"):
+        surf.train_surf(SMOKE, mds, steps=5, scenario="blackout")
+    with pytest.raises(ValueError, match="not both"):
+        surf.train_surf(SMOKE, mds, steps=5, scenario="dropout",
+                        schedule=sch)
