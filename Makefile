@@ -8,10 +8,15 @@
 #   make bench-scan   — scan-engine perf tracking: BENCH_scan_engine.json
 #   make bench-topology — dense/ring/halo mixing across graph families:
 #                       BENCH_topology.json
+#   make bench-engine — unified-engine smoke: ASSERTS a seed-batched
+#                       scheduled run traces meta_step exactly once and
+#                       the scheduled-halo path moves fewer collective
+#                       bytes than dense S_t @ W: BENCH_engine.json
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast test-sharded bench bench-scan bench-topology
+.PHONY: test test-fast test-sharded bench bench-scan bench-topology \
+	bench-engine
 
 test:
 	$(PY) -m pytest -x -q
@@ -31,3 +36,6 @@ bench-scan:
 
 bench-topology:
 	sh scripts/bench.sh topology
+
+bench-engine:
+	sh scripts/bench.sh engine

@@ -28,6 +28,11 @@ META_STEPS = 700
 # reports the seed mean — matching the many-seeds-per-config evaluation of
 # Hadou et al. 2023 without re-dispatching per seed.
 EVAL_SEEDS = (0, 1, 2, 3)
+# ... and meta-TRAINS over a batch of seeds in ONE seed-batched engine
+# (surf.train_surf(..., seeds=TRAIN_SEEDS) — repro.engine.seeds): every figure
+# reports mean±std over training seeds (init + topology + perturbation
+# stream all vary per seed), the paper-grade error-bar protocol.
+TRAIN_SEEDS = (0, 1, 2, 3)
 
 
 def write_csv(name, header, rows):
@@ -55,3 +60,20 @@ def time_us(fn, *args, warmup=1, iters=3):
 def star_cfg():
     return dataclasses.replace(CFG, topology="star", filter_taps=1, eps=0.1,
                                lr_theta=1e-3)
+
+
+def eval_per_train_seed(cfg, states, S_stack, test, eval_seeds=EVAL_SEEDS):
+    """Evaluate every trained seed of a seed-batched ``train_surf`` result
+    over the multi-seed evaluator: returns ``{metric: (train·eval, ...)}``
+    — the flattened train×eval seed stacks the figures take mean/std
+    over. One compiled evaluator serves all rows (identical shapes; S is
+    a jit argument)."""
+    import jax
+    from repro import engine as E
+    from repro.core import surf
+    n = int(jax.tree_util.tree_leaves(states)[0].shape[0])
+    per_seed = [surf.evaluate_surf(cfg, E.state_for_seed(states, i),
+                                   S_stack[i], test, seeds=eval_seeds)
+                for i in range(n)]
+    return {k: np.concatenate([np.asarray(r[k]) for r in per_seed])
+            for k in per_seed[0]}

@@ -5,6 +5,11 @@ SCAFFOLD) on a star graph.
 
 Round accounting matches the paper: each graph mixing (or server
 round-trip) = 1 round; one U-DGD layer = K rounds.
+
+U-DGD rows carry error bars: TRAIN_SEEDS seeds meta-train in ONE
+seed-batched engine (``repro.engine.seeds``) and each trained seed is
+evaluated over the EVAL_SEEDS battery — ``acc_std`` is the std over the
+flattened train×eval seed grid.
 """
 from __future__ import annotations
 
@@ -15,8 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (CFG, EVAL_SEEDS, META_STEPS, META_TEST_Q,
-                               META_TRAIN_Q, star_cfg, write_csv)
+from benchmarks.common import (CFG, META_STEPS, META_TEST_Q, META_TRAIN_Q,
+                               TRAIN_SEEDS, eval_per_train_seed, star_cfg,
+                               write_csv)
 from repro.core import baselines as BL
 from repro.core import surf, unroll as U
 from repro.data import synthetic
@@ -25,21 +31,23 @@ ROUNDS = 200
 ROUNDS_STAR = 25
 
 
-def eval_udgd(cfg, topology, seed=0):
+def eval_udgd(cfg, topology):
     cfg = dataclasses.replace(cfg, topology=topology)
     mds = synthetic.make_meta_dataset(cfg, META_TRAIN_Q, seed=0)
-    # fully-jitted engine: one compiled scan per meta-training run; the
-    # regular and er runs share one executable (S is a jit argument; only
-    # the star path traces a different computation)
-    state, hist, S = surf.train_surf(cfg, mds, steps=META_STEPS, seed=seed,
-                                     log_every=0, engine="scan")
+    # seed-batched engine: ONE compiled scan trains every TRAIN_SEEDS
+    # seed (its own init/topology/RNG stream); the regular and er runs
+    # share one executable (S is a jit argument; only the star path
+    # traces a different computation)
+    states, hist, S_stack = surf.train_surf(cfg, mds, steps=META_STEPS,
+                                            seeds=TRAIN_SEEDS, log_every=0,
+                                            engine="scan")
     test = synthetic.make_meta_dataset(cfg, META_TEST_Q, seed=999)
-    # multi-seed evaluation layer: one compiled evaluator over EVAL_SEEDS
-    # keys, (n_seeds, L) accuracy stack -> seed mean
-    res = surf.evaluate_surf(cfg, state, S, test, seeds=EVAL_SEEDS)
+    # per trained seed, the multi-seed evaluation layer -> flattened
+    # (train_seeds · eval_seeds, L) accuracy stack
+    acc = eval_per_train_seed(cfg, states, S_stack, test)["acc_per_layer"]
     # per-layer accuracy -> per-communication-round (K rounds per layer)
     rounds = (np.arange(cfg.n_layers) + 1) * cfg.filter_taps
-    return rounds, np.asarray(res["acc_per_layer"]).mean(0), S, test
+    return rounds, acc.mean(0), acc.std(0), S_stack[0], test
 
 
 def eval_baselines(cfg, S, test, which, rounds, seed=1):
@@ -66,35 +74,37 @@ def eval_baselines(cfg, S, test, which, rounds, seed=1):
 def main():
     rows = []
     for topo, label in (("regular", "3-regular"), ("er", "random-er")):
-        rounds_u, acc_u, S, test = eval_udgd(CFG, topo)
-        for r, a in zip(rounds_u, acc_u):
-            rows.append([label, "u-dgd(surf)", int(r), float(a)])
+        rounds_u, acc_u, std_u, S, test = eval_udgd(CFG, topo)
+        for r, a, sd in zip(rounds_u, acc_u, std_u):
+            rows.append([label, "u-dgd(surf)", int(r), float(a),
+                         float(sd)])
         base = eval_baselines(CFG, S, test, ("dgd", "dsgd", "dfedavgm"),
                               ROUNDS)
         for name, acc in base.items():
             for r in range(0, ROUNDS, 5):
-                rows.append([label, name, r + 1, float(acc[r])])
+                rows.append([label, name, r + 1, float(acc[r]), ""])
         u_final = float(acc_u[-1])
         for name, acc in base.items():
             at20 = float(acc[min(len(acc) - 1, int(rounds_u[-1]) - 1)])
-            print(f"[{label}] u-dgd@{int(rounds_u[-1])}r={u_final:.3f} vs "
+            print(f"[{label}] u-dgd@{int(rounds_u[-1])}r={u_final:.3f}"
+                  f"±{float(std_u[-1]):.3f} vs "
                   f"{name}@{int(rounds_u[-1])}r={at20:.3f} "
                   f"@{ROUNDS}r={float(acc[-1]):.3f}")
 
     # classical / star
     cfg_s = star_cfg()
-    rounds_u, acc_u, S, test = eval_udgd(cfg_s, "star")
-    for r, a in zip(rounds_u, acc_u):
-        rows.append(["star", "u-dgd(surf)", int(r), float(a)])
+    rounds_u, acc_u, std_u, S, test = eval_udgd(cfg_s, "star")
+    for r, a, sd in zip(rounds_u, acc_u, std_u):
+        rows.append(["star", "u-dgd(surf)", int(r), float(a), float(sd)])
     base = eval_baselines(cfg_s, S, test, ("fedavg", "fedprox", "scaffold"),
                           ROUNDS_STAR)
     for name, acc in base.items():
         for r in range(ROUNDS_STAR):
-            rows.append(["star", name, r + 1, float(acc[r])])
+            rows.append(["star", name, r + 1, float(acc[r]), ""])
         print(f"[star] u-dgd@{int(rounds_u[-1])}r={float(acc_u[-1]):.3f} vs "
               f"{name}@{ROUNDS_STAR}r={float(acc[-1]):.3f}")
     write_csv("fig5_convergence.csv",
-              ["topology", "method", "round", "accuracy"], rows)
+              ["topology", "method", "round", "accuracy", "acc_std"], rows)
 
 
 if __name__ == "__main__":

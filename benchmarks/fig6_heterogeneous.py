@@ -14,8 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (CFG, EVAL_SEEDS, META_STEPS, META_TEST_Q,
-                               META_TRAIN_Q, write_csv)
+from benchmarks.common import (CFG, META_STEPS, META_TEST_Q, META_TRAIN_Q,
+                               TRAIN_SEEDS, eval_per_train_seed, write_csv)
 from repro.core import baselines as BL
 from repro.core import surf, unroll as U
 from repro.data import synthetic
@@ -24,28 +24,39 @@ ALPHAS = (1.0, 0.7, 0.3)
 ROUNDS = 200
 
 
+def _final_accs(states, S_stack, test):
+    """(train_seeds · eval_seeds,) final accuracies: each trained seed's
+    model evaluated on ITS nominal graph over the EVAL_SEEDS battery."""
+    return eval_per_train_seed(CFG, states, S_stack, test)["final_acc"]
+
+
 def main():
     mds = synthetic.make_meta_dataset(CFG, META_TRAIN_Q, seed=0)
-    state, _, S = surf.train_surf(CFG, mds, steps=META_STEPS, log_every=0,
-                                  engine="scan")
-    # same problem meta-trained under i.i.d. link failures (time-varying
-    # S_t inside one compiled engine), evaluated on the nominal graph
-    state_lf, _, _ = surf.train_surf(CFG, mds, steps=META_STEPS,
-                                     log_every=0, engine="scan",
-                                     scenario="link-failure")
+    # seed-batched engine: every TRAIN_SEEDS seed in one compiled scan
+    states, _, S_stack = surf.train_surf(CFG, mds, steps=META_STEPS,
+                                         seeds=TRAIN_SEEDS, log_every=0,
+                                         engine="scan")
+    # same problem meta-trained under i.i.d. link failures (per-seed
+    # time-varying S_t streams inside the SAME compiled engine shape),
+    # evaluated on the nominal graph
+    states_lf, _, _ = surf.train_surf(CFG, mds, steps=META_STEPS,
+                                      seeds=TRAIN_SEEDS, log_every=0,
+                                      engine="scan",
+                                      scenario="link-failure")
+    S = S_stack[0]
     rows = []
     for alpha in ALPHAS:
         test = synthetic.make_meta_dataset(CFG, META_TEST_Q, seed=555,
                                            alpha=alpha)
-        res = surf.evaluate_surf(CFG, state, S, test, seeds=EVAL_SEEDS)
-        acc_u = float(np.mean(res["final_acc"]))
+        accs_u = _final_accs(states, S_stack, test)
+        acc_u = float(np.mean(accs_u))
         rows.append([alpha, "u-dgd(surf)",
-                     int(CFG.n_layers * CFG.filter_taps), acc_u])
-        res_lf = surf.evaluate_surf(CFG, state_lf, S, test,
-                                    seeds=EVAL_SEEDS)
+                     int(CFG.n_layers * CFG.filter_taps), acc_u,
+                     float(np.std(accs_u))])
+        accs_lf = _final_accs(states_lf, S_stack, test)
         rows.append([alpha, "u-dgd(surf,link-failure)",
                      int(CFG.n_layers * CFG.filter_taps),
-                     float(np.mean(res_lf["final_acc"]))])
+                     float(np.mean(accs_lf)), float(np.std(accs_lf))])
         for name, fn in BL.DECENTRALIZED.items():
             lrs = {"dgd": 0.5, "dsgd": 0.2, "dfedavgm": 0.05}
             accs = []
@@ -55,11 +66,12 @@ def main():
                 r = fn(S, W0, batch, jax.random.PRNGKey(1), CFG,
                        rounds=ROUNDS, lr=lrs[name])
                 accs.append(np.asarray(r["acc"])[-1])
-            rows.append([alpha, name, ROUNDS, float(np.mean(accs))])
-            print(f"alpha={alpha}: u-dgd={acc_u:.3f} "
+            rows.append([alpha, name, ROUNDS, float(np.mean(accs)), ""])
+            print(f"alpha={alpha}: u-dgd={acc_u:.3f}"
+                  f"±{float(np.std(accs_u)):.3f} "
                   f"{name}@{ROUNDS}r={float(np.mean(accs)):.3f}")
     write_csv("fig6_heterogeneous.csv",
-              ["alpha", "method", "rounds", "accuracy"], rows)
+              ["alpha", "method", "rounds", "accuracy", "acc_std"], rows)
 
 
 if __name__ == "__main__":

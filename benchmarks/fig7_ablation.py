@@ -7,8 +7,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (CFG, EVAL_SEEDS, META_STEPS, META_TEST_Q,
-                               META_TRAIN_Q, write_csv)
+from benchmarks.common import (CFG, META_STEPS, META_TEST_Q, META_TRAIN_Q,
+                               TRAIN_SEEDS, eval_per_train_seed, write_csv)
 from repro.core import surf
 from repro.data import synthetic
 from repro.data.pipeline import stack_meta_datasets
@@ -16,7 +16,7 @@ from repro.data.pipeline import stack_meta_datasets
 
 def main():
     mds = synthetic.make_meta_dataset(CFG, META_TRAIN_Q, seed=0)
-    # pre-stacked once; the 4 evaluate_surf calls reuse the device pytree
+    # pre-stacked once; the evaluate_surf calls reuse the device pytree
     test = stack_meta_datasets(
         synthetic.make_meta_dataset(CFG, META_TEST_Q, seed=777))
     rows = []
@@ -27,22 +27,25 @@ def main():
     # random init the constraints must do the work (EXPERIMENTS.md §Claims).
     for constrained in (True, False):
         for init in ("random", "dgd"):
-            # scan engine: the 4 (constrained, init) runs share 2 compiled
-            # executables (init only changes values, not the computation)
-            state, _, S = surf.train_surf(CFG, mds, steps=META_STEPS,
-                                          constrained=constrained,
-                                          log_every=0, init=init,
-                                          engine="scan")
-            # (n_seeds, L) stacks from the multi-seed evaluator -> seed mean
-            res = surf.evaluate_surf(CFG, state, S, test, seeds=EVAL_SEEDS)
-            loss_l = np.asarray(res["loss_per_layer"]).mean(0)
-            acc_l = np.asarray(res["acc_per_layer"]).mean(0)
+            # seed-batched engine: every TRAIN_SEEDS seed in one scan; the
+            # 4 (constrained, init) runs share 2 compiled executables
+            # (init only changes values, not the computation)
+            states, _, S_stack = surf.train_surf(CFG, mds,
+                                                 steps=META_STEPS,
+                                                 seeds=TRAIN_SEEDS,
+                                                 constrained=constrained,
+                                                 log_every=0, init=init,
+                                                 engine="scan")
+            # (train_seeds · eval_seeds, L) stacks -> mean and std
+            res = eval_per_train_seed(CFG, states, S_stack, test)
+            loss, acc = res["loss_per_layer"], res["acc_per_layer"]
+            loss_l, acc_l, std_l = loss.mean(0), acc.mean(0), acc.std(0)
             tag = ("surf" if constrained else "no-constraints") + f"+{init}"
-            for l, (lo, ac) in enumerate(zip(loss_l, acc_l)):
-                rows.append([tag, l + 1, float(lo), float(ac)])
+            for l, (lo, ac, sd) in enumerate(zip(loss_l, acc_l, std_l)):
+                rows.append([tag, l + 1, float(lo), float(ac), float(sd)])
             summary[tag] = acc_l
-    write_csv("fig7_ablation.csv", ["method", "layer", "loss", "accuracy"],
-              rows)
+    write_csv("fig7_ablation.csv",
+              ["method", "layer", "loss", "accuracy", "acc_std"], rows)
     for tag, acc in summary.items():
         print(f"{tag:24s} per-layer acc: "
               + " ".join(f"{a:.2f}" for a in acc))

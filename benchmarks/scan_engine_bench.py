@@ -24,8 +24,9 @@ import time
 import jax
 
 from benchmarks.common import OUT_DIR
+from repro import engine as TR
 from repro.configs.base import SURFConfig
-from repro.core import surf, trainer as TR
+from repro.core import surf
 from repro.core.ring import make_ring_mix
 from repro.data import synthetic
 from repro.data.pipeline import stack_meta_datasets
@@ -53,7 +54,7 @@ def bench_variant(cfg, S, mds, mesh, mix_fn, name):
 
     t0 = time.perf_counter()
     state = TR.init_state(key, cfg)
-    state, metrics = run(state, stacked, key, STEPS)
+    state, metrics, _ = run(state, stacked, key, STEPS)
     jax.block_until_ready(metrics["test_loss"])
     first_call_s = time.perf_counter() - t0
 
@@ -61,12 +62,12 @@ def bench_variant(cfg, S, mds, mesh, mix_fn, name):
     t0 = time.perf_counter()
     for _ in range(iters):
         state = TR.init_state(key, cfg)
-        state, metrics = run(state, stacked, key, STEPS)
+        state, metrics, _ = run(state, stacked, key, STEPS)
     jax.block_until_ready(metrics["test_loss"])
     warm_run_s = (time.perf_counter() - t0) / iters
 
     coll, by_kind = meta_step_collective_bytes(cfg, S, mesh, mix_fn=mix_fn)
-    rec = {"first_call_s": round(first_call_s, 3),
+    rec = {"engine_variant": name, "first_call_s": round(first_call_s, 3),
            "warm_run_s": round(warm_run_s, 4),
            "warm_step_us": round(warm_run_s / STEPS * 1e6, 1),
            "collective_bytes_per_meta_step": coll,
@@ -95,7 +96,10 @@ def main():
     dense = bench_variant(cfg, S, mds, mesh, None, "dense")
     ring = bench_variant(cfg, S, mds, mesh, mix, "ring")
 
+    from repro.sharding.surf_rules import mesh_fingerprint
     out = {"devices": ndev, "agent_shards": nshards,
+           "engine": "repro.engine.scan", "n_seeds": 1,
+           "mesh_fingerprint": mesh_fingerprint(mesh),
            "config": dataclasses.asdict(cfg), "steps": STEPS,
            "meta_datasets": META_Q, "dense": dense, "ring": ring,
            "ring_vs_dense": {

@@ -32,7 +32,7 @@ import numpy as np
 
 from benchmarks.common import OUT_DIR
 from repro.configs.base import SURFConfig
-from repro.core import trainer as TR
+from repro import engine as TR
 from repro.core.ring import make_ring_mix
 from repro.data import synthetic
 from repro.data.pipeline import stack_meta_datasets
@@ -61,19 +61,20 @@ def bench_mixer(cfg, S, mds, mesh, mix_fn, name):
     run = TR.make_train_scan(cfg, S, mix_fn=mix_fn, mesh=mesh,
                              stacked=stacked)
     state = TR.init_state(key, cfg)
-    state, metrics = run(state, stacked, key, STEPS)      # compile + run
+    state, metrics, _ = run(state, stacked, key, STEPS)   # compile + run
     jax.block_until_ready(metrics["test_loss"])
 
     iters = 3
     t0 = time.perf_counter()
     for _ in range(iters):
         state = TR.init_state(key, cfg)
-        state, metrics = run(state, stacked, key, STEPS)
+        state, metrics, _ = run(state, stacked, key, STEPS)
     jax.block_until_ready(metrics["test_loss"])
     warm_run_s = (time.perf_counter() - t0) / iters
 
     coll, by_kind = meta_step_collective_bytes(cfg, S, mesh, mix_fn=mix_fn)
-    return {"warm_run_s": round(warm_run_s, 4),
+    return {"engine_variant": name.split("/")[-1],
+            "warm_run_s": round(warm_run_s, 4),
             "warm_step_us": round(warm_run_s / STEPS * 1e6, 1),
             "collective_bytes_per_meta_step": coll,
             "collectives_by_kind": by_kind,
@@ -128,7 +129,10 @@ def main():
             round(halo_b / dense_b, 4) if dense_b else None)
         results[fam] = fam_rec
 
+    from repro.sharding.surf_rules import mesh_fingerprint
     out = {"devices": ndev, "agent_shards": nshards,
+           "engine": "repro.engine.scan", "n_seeds": 1,
+           "mesh_fingerprint": mesh_fingerprint(mesh),
            "config": dataclasses.asdict(CFG), "steps": STEPS,
            "meta_datasets": META_Q, "families": results}
     os.makedirs(OUT_DIR, exist_ok=True)

@@ -6,6 +6,10 @@
 #   scripts/bench.sh topology  # dense vs ring vs halo mixing across graph
 #                              # families (n=32/P=8) ->
 #                              # bench_out/BENCH_topology.json
+#   scripts/bench.sh engine    # unified-engine smoke: seed-batched
+#                              # scheduled run traces meta_step ONCE
+#                              # (asserted) + scheduled-halo collective
+#                              # bytes -> bench_out/BENCH_engine.json
 #   scripts/bench.sh all       # full paper-figure battery (benchmarks.run)
 set -e
 cd "$(dirname "$0")/.."
@@ -17,9 +21,12 @@ case "${1:-scan}" in
   topology)
     export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
     exec python -m benchmarks.topology_bench ;;
+  engine)
+    export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+    exec python -m benchmarks.engine_bench ;;
   all)
     exec python -m benchmarks.run ;;
   *)
-    echo "usage: scripts/bench.sh [scan|topology|all]" >&2
+    echo "usage: scripts/bench.sh [scan|topology|engine|all]" >&2
     exit 2 ;;
 esac

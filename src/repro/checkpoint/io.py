@@ -3,6 +3,14 @@
 Leaves are saved as flat ``k<i>`` arrays; the manifest stores the treedef
 (via jax.tree_util serialization of key paths) and leaf dtypes so restore
 round-trips exactly, including bf16 (stored as uint16 views).
+
+``restore`` optionally places each leaf with a caller-provided sharding
+at restore time (``jax.device_put`` straight from the host buffer) — the
+donate-through-checkpoint handoff of ``engine.resume``: the scan engine
+consumes the restored buffers with its own in-shardings, no re-placement
+on first use. Missing checkpoints raise ``FileNotFoundError`` with the
+offending path; a template/manifest mismatch raises ``ValueError``
+instead of a bare assert.
 """
 from __future__ import annotations
 
@@ -35,26 +43,75 @@ def save(path, tree, step=None):
         json.dump(manifest, f)
 
 
-def restore(path, like):
-    """Restore into the structure of ``like`` (shape/dtype template)."""
-    with open(path + ".json") as f:
+def _sharding_leaves(shardings, like_leaves, like_treedef):
+    """Normalize ``shardings`` (a single Sharding applied everywhere, or
+    a pytree matching the template) into one sharding per leaf."""
+    if isinstance(shardings, jax.sharding.Sharding):
+        return [shardings] * len(like_leaves)
+    sh_leaves, sh_treedef = jax.tree_util.tree_flatten(
+        shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+    if sh_treedef != like_treedef or len(sh_leaves) != len(like_leaves):
+        raise ValueError(
+            f"restore: shardings tree ({sh_treedef}) does not match the "
+            f"template tree ({like_treedef})")
+    return sh_leaves
+
+
+def restore(path, like, *, shardings=None):
+    """Restore into the structure of ``like`` (shape/dtype template;
+    ``jax.eval_shape`` trees work — leaves never materialize).
+
+    ``shardings``: optional ``jax.sharding.Sharding`` (applied to every
+    leaf) or a matching pytree of shardings — each leaf is
+    ``device_put`` with its sharding as it is read, so the returned tree
+    is committed device buffers in the caller's layout (the engine
+    handoff of ``engine.resume.restore_state``)."""
+    manifest_file = path + ".json"
+    if not os.path.exists(manifest_file):
+        raise FileNotFoundError(
+            f"no checkpoint at {path!r} (missing manifest "
+            f"{manifest_file!r})")
+    payload_file = path + ".npz"
+    if not os.path.exists(payload_file):
+        raise FileNotFoundError(
+            f"checkpoint {path!r} has a manifest but no payload "
+            f"({payload_file!r} missing)")
+    with open(manifest_file) as f:
         manifest = json.load(f)
-    data = np.load(path + ".npz")
+    data = np.load(payload_file)
     leaves, treedef = jax.tree_util.tree_flatten(like)
-    assert len(leaves) == len(manifest["leaves"]), \
-        f"checkpoint has {len(manifest['leaves'])} leaves, template {len(leaves)}"
+    if len(leaves) != len(manifest["leaves"]):
+        raise ValueError(
+            f"checkpoint {path!r} has {len(manifest['leaves'])} leaves, "
+            f"template has {len(leaves)} — config/template drift?")
+    sh_leaves = (None if shardings is None else
+                 _sharding_leaves(shardings, leaves, treedef))
     out = []
     for i, (leaf, meta) in enumerate(zip(leaves, manifest["leaves"])):
         arr = data[f"k{i}"]
         if meta["dtype"] == "bfloat16":
             arr = arr.view(jnp.bfloat16)
-        out.append(jnp.asarray(arr).astype(leaf.dtype).reshape(leaf.shape))
+        # dtype/shape coercion stays host-side (numpy) so placement is a
+        # single hop: one device_put per leaf, no default-device detour
+        arr = np.asarray(arr).astype(leaf.dtype).reshape(leaf.shape)
+        out.append(jax.device_put(arr, sh_leaves[i])
+                   if sh_leaves is not None else jnp.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def latest_step(directory, prefix="ckpt_"):
-    if not os.path.isdir(directory):
+    """Highest checkpoint step under ``directory``, or None when the
+    directory is missing, empty, or holds no parseable checkpoints
+    (malformed ``<prefix><non-int>.json`` names are skipped, not
+    fatal)."""
+    if not directory or not os.path.isdir(directory):
         return None
-    steps = [int(f[len(prefix):-5]) for f in os.listdir(directory)
-             if f.startswith(prefix) and f.endswith(".json")]
+    steps = []
+    for f in os.listdir(directory):
+        if not (f.startswith(prefix) and f.endswith(".json")):
+            continue
+        try:
+            steps.append(int(f[len(prefix):-5]))
+        except ValueError:
+            continue
     return max(steps) if steps else None

@@ -1,8 +1,27 @@
 # The paper's primary contribution: SURF — stochastic unrolled federated
 # learning. graph topologies / U-DGD unrolled layers / descending
 # constraints / primal-dual meta-training / FL baselines.
-from repro.core import (graph, task, unroll, constraints, trainer, baselines,
-                        surf)
+#
+# ``trainer`` (the compat shim over ``repro.engine``) and ``surf`` are
+# NOT imported eagerly: both depend on the engine package, which itself
+# imports ``repro.core.constraints``/``task``/``unroll`` — eager imports
+# here would close that cycle when ``repro.engine`` is imported first.
+# ``from repro.core import trainer`` / ``import repro.core.surf`` work
+# via Python's on-demand submodule resolution, and attribute access
+# (``repro.core.surf`` after ``import repro.core``) via the PEP 562
+# module __getattr__ below.
+from repro.core import baselines, constraints, graph, task, unroll
 
 __all__ = ["graph", "task", "unroll", "constraints", "trainer", "baselines",
            "surf"]
+
+_LAZY = ("trainer", "surf")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        module = importlib.import_module(f"repro.core.{name}")
+        globals()[name] = module
+        return module
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

@@ -34,7 +34,7 @@ def make_ring_mix(mesh, axis: str, n: int, hops: int):
 
     The returned function carries a hashable ``.tag`` attribute —
     ``("ring", axis, n, hops, mesh-fingerprint)`` — which the engine
-    caches in ``core.trainer`` / ``core.surf`` fold into their keys so two
+    caches in ``repro.engine`` / ``core.surf`` fold into their keys so two
     ``make_ring_mix`` calls with identical geometry share one compiled
     engine (an untagged ``mix_fn`` disables caching instead)."""
     from repro.sharding.surf_rules import mesh_fingerprint

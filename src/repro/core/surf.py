@@ -1,14 +1,18 @@
 """Public SURF API: build the FL problem, meta-train U-DGD, evaluate, and
 the asynchronous-agent perturbation study (paper App. D).
 
-Meta-training defaults to the fully-jitted ``train_scan`` engine (one
+Meta-training defaults to the fully-jitted ``repro.engine`` scan (one
 compiled scan per experiment); ``engine="python"`` keeps the step-wise
 loop, and ``mix_fn``/``mesh`` route mixing through the ring ppermute path
-on an agent-axis-sharded mesh. Evaluation over downstream datasets is a
-single vmapped+jitted computation — a batch of seeds adds an OUTER vmap
-over evaluation keys, so robustness protocols that need many seeds per
-config (Hadou et al. 2023) compile once and return (n_seeds, ...) metric
-stacks instead of re-dispatching per seed.
+on an agent-axis-sharded mesh. ``train_surf(seeds=...)`` trains a whole
+BATCH of init/topology seeds in one compiled executable
+(``engine.seeds``), and ``eval_every`` folds held-out evaluation
+snapshots into the scan (``engine.snapshots``) — the train-side mirrors
+of the multi-seed evaluation layer below. Evaluation over downstream
+datasets is a single vmapped+jitted computation — a batch of seeds adds
+an OUTER vmap over evaluation keys, so robustness protocols that need
+many seeds per config (Hadou et al. 2023) compile once and return
+(n_seeds, ...) metric stacks instead of re-dispatching per seed.
 """
 from __future__ import annotations
 
@@ -16,10 +20,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import engine as TR
 from repro.configs.base import SURFConfig
 from repro.core import graph as G
 from repro.core import task as T
-from repro.core import trainer as TR
 from repro.core import unroll as U
 from repro.data.pipeline import stack_meta_datasets
 
@@ -69,13 +73,27 @@ def make_scenario(cfg: SURFConfig, scenario, steps, seed=0, *,
 def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
                constrained=True, activation="relu", log_every=10,
                init="dgd", engine="scan", mix_fn=None, mesh=None,
-               scenario=None, schedule=None):
+               scenario=None, schedule=None, seeds=None, eval_every=0,
+               eval_datasets=None):
     """Meta-train U-DGD on the config's topology. ``scenario`` (a name
     from ``SCENARIOS``) or ``schedule`` (an explicit
     ``TopologySchedule``) trains under TIME-VARYING graphs — the
     returned S stays the static base mixing matrix, which evaluation
     uses (robustness protocols train on perturbed topologies and test
-    on the nominal one)."""
+    on the nominal one).
+
+    ``seeds``: optional batch of TRAINING seeds — ONE compiled
+    seed-batched engine (``engine.seeds``) trains every seed with its
+    own init/RNG/topology (and its own per-seed perturbation stream
+    under a scenario); the returned state/history/S gain a leading
+    (n_seeds,) axis and row i matches the sequential ``seed=seeds[i]``
+    run. ``mesh`` then shards the SEED axis (dense mixing only).
+
+    ``eval_every``: fold held-out evaluation snapshots into the scan
+    every that many meta-steps (``engine.snapshots``; needs
+    ``eval_datasets``, evaluated against the NOMINAL static S). Adds a
+    ``snapshots`` list to the return:
+    (state, hist, snapshots, S) / (states, hist, snapshots, S_stack)."""
     if engine not in ("scan", "python"):
         raise ValueError(f"engine must be 'scan' or 'python', got {engine!r}")
     if mesh is not None and engine != "scan":
@@ -84,18 +102,60 @@ def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
     if scenario is not None and schedule is not None:
         raise ValueError("pass either scenario= (a name) or schedule= "
                          "(an explicit TopologySchedule), not both")
+    if eval_every:
+        if engine != "scan":
+            raise ValueError("eval_every (in-scan snapshots) requires "
+                             "engine='scan'")
+        if eval_datasets is None:
+            raise ValueError("eval_every > 0 needs eval_datasets (the "
+                             "held-out snapshot pool)")
+    if seeds is not None:
+        if engine != "scan":
+            raise ValueError("seed batching requires engine='scan'")
+        if seed != 0:
+            raise ValueError(
+                "pass either seed= (one run) or seeds= (a seed-batched "
+                "run), not both — the batch defines every per-seed "
+                "init/topology/RNG stream")
+        if mix_fn is not None:
+            raise ValueError(
+                "seed-batched training uses the dense mixing path (a "
+                "static mix_fn bakes one topology; mesh= shards the seed "
+                "axis instead)")
+        seed_list = [int(s) for s in seeds]
+        S_stack = jnp.stack([make_problem(cfg, s)[1] for s in seed_list])
+        if schedule is not None:
+            S_train = jnp.broadcast_to(
+                schedule.S, (len(seed_list),) + schedule.S.shape)
+        elif scenario not in (None, "static"):
+            S_train = TR.stack_schedules(
+                [make_scenario(cfg, scenario, steps, s) for s in seed_list])
+        else:
+            S_train = S_stack
+        out = TR.train_scan_seeds(
+            cfg, S_train, meta_datasets, steps, seed_list,
+            constrained=constrained, activation=activation,
+            log_every=log_every, init=init, mesh=mesh,
+            eval_every=eval_every, eval_datasets=eval_datasets,
+            S_eval_stack=S_stack if eval_every else None)
+        return (*out, S_stack)
     _, S = make_problem(cfg, seed)
     if schedule is None:
         schedule = make_scenario(cfg, scenario, steps, seed)
     S_train = schedule if schedule is not None else S
     key = jax.random.PRNGKey(seed)
-    kw = {"mix_fn": mix_fn, "mesh": mesh} if engine == "scan" else \
-        {"mix_fn": mix_fn}
+    if engine == "scan":
+        kw = {"mix_fn": mix_fn, "mesh": mesh, "eval_every": eval_every,
+              "eval_datasets": eval_datasets}
+        if eval_every:
+            kw["S_eval"] = S
+    else:
+        kw = {"mix_fn": mix_fn}
     driver = TR.train_scan if engine == "scan" else TR.train
-    state, hist = driver(cfg, S_train, meta_datasets, steps, key,
-                         constrained=constrained, activation=activation,
-                         log_every=log_every, init=init, **kw)
-    return state, hist, S
+    out = driver(cfg, S_train, meta_datasets, steps, key,
+                 constrained=constrained, activation=activation,
+                 log_every=log_every, init=init, **kw)
+    return (*out, S)
 
 
 def _eval_keys(base_key, n):

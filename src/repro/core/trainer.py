@@ -1,401 +1,26 @@
-"""Primal-dual meta-training of U-DGD (paper Algorithm 1 + Figure 3).
+"""Compat shim: the meta-training engine moved to ``repro.engine``.
 
-Each meta-step: sample one downstream dataset D_q, sample W_0 ~ N(μ0, σ0²I)
-and L per-layer mini-batches from D_q's training examples, run the unrolled
-network, evaluate the test loss f(W_L) on D_q's held-out examples, add the
-λ-weighted descending-constraint slacks, take an ADAM step on θ (eq. 6) and
-a projected ascent step on λ (eq. 7).
+Everything that used to live here — ``TrainState``, the S-as-argument
+meta-step/eval bodies, ``make_train_scan``/``train_scan``/``train``, the
+compiled-engine cache and its key normalizer, ``TRACE_COUNTS`` — is
+re-exported below so ``from repro.core import trainer as TR`` keeps
+working, including the private hooks other modules and tests reach for
+(``TR._eval_core``, ``TR._engine_cache_key``, ``TR.TRACE_COUNTS`` — the
+SAME mutable objects, not copies).
 
-Two drivers share the same ``meta_step``:
-
-  * ``train_scan`` — the default engine: the WHOLE meta-loop is a single
-    ``lax.scan`` over meta-steps inside one jit (donated ``TrainState``,
-    RNG via ``jax.random.fold_in``, datasets pre-stacked on device and
-    cycled with a dynamic index). One compile + one dispatch per
-    experiment instead of ``steps`` dispatches with host syncs.
-  * ``train`` — the step-wise Python loop over the SAME jitted
-    ``meta_step`` and the SAME fold_in RNG stream, for interactive /
-    per-step-logging use. Both produce identical results.
-
-The scan engine is mesh-aware: ``mix_fn``/``mesh`` replace the dense
-graph filter with the ring/halo ``ppermute`` exchange of
-``topology.halo`` on an agent-axis-sharded mesh (specs in
-``sharding.surf_rules``), and the compiled-engine cache is keyed on
-(normalized cfg, variant, activation, star, mesh-fingerprint, mix-tag)
-so sharded/ring engines never collide with dense ones while identical
-ring geometries share one executable.
-
-The scan engine is also TOPOLOGY-SCHEDULE-aware: pass a
-``topology.schedule.TopologySchedule`` wherever a static ``S`` is
-accepted and the stacked (T, n, n) matrices ride through the jit as a
-device argument, the scan body selecting ``S[state.step % T]`` every
-meta-step — time-varying graphs (link failures, dropout, anneals)
-train inside ONE compiled engine with zero retraces, and because the
-index is the CARRIED step counter a checkpoint-restored state resumes
-at the correct ``S_t``. Schedules use the dense mixing path; combining
-one with a static-S ``mix_fn`` is rejected.
+New capabilities live only in the engine package: seed-batched training
+(``engine.seeds``), in-scan evaluation snapshots (``engine.snapshots``),
+donate-through-checkpoint resume (``engine.resume``). Import from
+``repro.engine`` in new code.
 """
-from __future__ import annotations
+from repro.engine.core import (  # noqa: F401
+    _ENGINE_CACHE, _check_static_s, _engine_cache_key, _eval_core,
+    _meta_step_core, _mix_tag, TRACE_COUNTS, TrainState, init_state,
+    make_eval, make_meta_step)
+from repro.engine.scan import (  # noqa: F401
+    _decimate_history, make_train_scan, train, train_scan)
 
-from functools import partial
-from typing import NamedTuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.base import SURFConfig
-from repro.core import constraints as C
-from repro.core import task as T
-from repro.core import unroll as U
-from repro.data.pipeline import stack_meta_datasets
-from repro.optim import adam, apply_updates, clip_by_global_norm
-from repro.topology.schedule import TopologySchedule
-
-# Incremented each time a meta_step / eval body is TRACED (not executed) —
-# the scan engine's contract is that an entire training run traces
-# meta_step at most twice (once for the scan, possibly once for a
-# standalone jit), and the multi-seed evaluator's is that one batched
-# evaluate call traces the body exactly once regardless of seed count.
-TRACE_COUNTS = {"meta_step": 0, "eval": 0}
-
-
-class TrainState(NamedTuple):
-    theta: dict
-    lam: jnp.ndarray
-    opt_state: dict
-    step: jnp.ndarray
-
-
-def init_state(key, cfg: SURFConfig, init="dgd"):
-    theta = U.init_udgd(key, cfg, init=init)
-    opt = adam(cfg.lr_theta)
-    return TrainState(theta=theta, lam=jnp.zeros((cfg.n_layers,)),
-                      opt_state=opt.init(theta), step=jnp.zeros((), jnp.int32))
-
-
-def _meta_step_core(cfg: SURFConfig, constrained, activation, star, mix_fn):
-    """S-as-argument meta step: ``meta_step_s(S, state, batch, key)`` and
-    ``forward_s(S, theta, W0, Xl, Yl)``. Keeping S out of the closure lets
-    one jitted engine serve every topology/seed of the same config."""
-    opt = adam(cfg.lr_theta)
-    use_star = cfg.topology == "star" if star is None else star
-    layer_fn = U.udgd_layer_star if use_star else U.udgd_layer
-
-    def forward_s(S, theta, W0, Xl, Yl):
-        def body(W, xs):
-            p_l, Xb, Yb = xs
-            Wn = layer_fn(p_l, S, W, Xb, Yb, cfg, activation, mix_fn=mix_fn)
-            return Wn, Wn
-        W_L, Ws = jax.lax.scan(body, W0, (theta, Xl, Yl))
-        return W_L, jnp.concatenate([W0[None], Ws], axis=0)
-
-    def lagrangian_fn(theta, lam, S, W0, Xl, Yl, Xte, Yte):
-        W_L, W_all = forward_s(S, theta, W0, Xl, Yl)
-        test_loss = T.fl_loss(W_L, Xte, Yte, cfg.feature_dim, cfg.n_classes)
-        gnorms = C.layer_grad_norms(W_all, Xl, Yl, cfg)
-        slack = C.slacks(gnorms, cfg.eps)
-        lag = C.lagrangian(test_loss, lam, slack) if constrained else test_loss
-        return lag, (test_loss, slack, gnorms, W_L)
-
-    def meta_step_s(S, state: TrainState, batch, key):
-        """batch: dict with Xtr (n,m,F), Ytr (n,m), Xte (n,t,F), Yte (n,t)."""
-        TRACE_COUNTS["meta_step"] += 1
-        kw, kb = jax.random.split(key)
-        W0 = U.sample_w0(kw, cfg)
-        Xl, Yl = U.sample_layer_batches(kb, batch["Xtr"], batch["Ytr"], cfg)
-        (lag, (tl, slack, gnorms, W_L)), grads = jax.value_and_grad(
-            lagrangian_fn, has_aux=True)(state.theta, state.lam, S, W0, Xl,
-                                         Yl, batch["Xte"], batch["Yte"])
-        grads, gn = clip_by_global_norm(grads, 10.0)
-        upd, opt_state = opt.update(grads, state.opt_state)
-        theta = apply_updates(state.theta, upd)
-        lam = (C.dual_ascent(state.lam, slack, cfg.lr_lambda)
-               if constrained else state.lam)
-        test_acc = T.fl_accuracy(W_L, batch["Xte"], batch["Yte"],
-                                 cfg.feature_dim, cfg.n_classes)
-        metrics = {"lagrangian": lag, "test_loss": tl, "test_acc": test_acc,
-                   "slack_max": jnp.max(slack), "slack_mean": jnp.mean(slack),
-                   "gnorm_first": gnorms[0], "gnorm_last": gnorms[-1],
-                   "grad_norm": gn, "lam_sum": jnp.sum(lam)}
-        return TrainState(theta, lam, opt_state, state.step + 1), metrics
-
-    return meta_step_s, forward_s
-
-
-def _check_static_s(S, where):
-    """The static-S builders can't consume a time-varying schedule —
-    point the caller at the schedule-aware drivers instead."""
-    if isinstance(S, TopologySchedule):
-        raise TypeError(
-            f"{where} needs a static (n, n) mixing matrix, got a "
-            "TopologySchedule — pass a schedule to train_scan/train "
-            "(and evaluate on a static S, e.g. schedule.S[t])")
-
-
-def make_meta_step(cfg: SURFConfig, S, *, constrained=True,
-                   activation="relu", star=None, mix_fn=None, jit=True):
-    """Build the meta-training step (jitted unless ``jit=False`` — the scan
-    engine embeds the raw body in its own jit).
-
-    ``constrained=False`` gives the ablation of Appendix D (λ frozen at 0).
-    ``star``: override star-topology handling (defaults to cfg.topology).
-    ``mix_fn``: override the dense graph filter (ring ppermute path).
-    """
-    _check_static_s(S, "make_meta_step")
-    meta_step_s, forward_s = _meta_step_core(cfg, constrained, activation,
-                                             star, mix_fn)
-
-    def meta_step(state, batch, key):
-        return meta_step_s(S, state, batch, key)
-
-    def forward(theta, W0, Xl, Yl):
-        return forward_s(S, theta, W0, Xl, Yl)
-
-    return (jax.jit(meta_step) if jit else meta_step), forward
-
-
-def _eval_core(cfg: SURFConfig, activation, star, mix_fn=None):
-    """S-as-argument evaluation body ``evaluate_s(S, theta, batch, key)`` —
-    keeping S out of the closure lets ``core.surf`` cache one jitted vmapped
-    evaluator per config across topologies/seeds. ``mix_fn`` replaces the
-    dense graph filter (ring ppermute path), same contract as the trainer."""
-    use_star = cfg.topology == "star" if star is None else star
-    layer_fn = U.udgd_layer_star if use_star else U.udgd_layer
-
-    def evaluate_s(S, theta, batch, key):
-        TRACE_COUNTS["eval"] += 1
-        kw, kb = jax.random.split(key)
-        W0 = U.sample_w0(kw, cfg)
-        Xl, Yl = U.sample_layer_batches(kb, batch["Xtr"], batch["Ytr"], cfg)
-
-        def body(W, xs):
-            p_l, Xb, Yb = xs
-            Wn = layer_fn(p_l, S, W, Xb, Yb, cfg, activation, mix_fn=mix_fn)
-            loss = T.fl_loss(Wn, batch["Xte"], batch["Yte"],
-                             cfg.feature_dim, cfg.n_classes)
-            acc = T.fl_accuracy(Wn, batch["Xte"], batch["Yte"],
-                                cfg.feature_dim, cfg.n_classes)
-            return Wn, (loss, acc)
-        W_L, (losses, accs) = jax.lax.scan(body, W0, (theta, Xl, Yl))
-        return {"loss_per_layer": losses, "acc_per_layer": accs,
-                "final_loss": losses[-1], "final_acc": accs[-1]}
-
-    return evaluate_s
-
-
-def make_eval(cfg: SURFConfig, S, *, activation="relu", star=None, jit=True,
-              mix_fn=None):
-    """Per-layer loss/accuracy trajectory on a downstream dataset — the
-    evaluation used for every paper figure. ``jit=False`` returns the raw
-    body for embedding under vmap (see ``core.surf.evaluate_surf``);
-    ``mix_fn`` routes mixing through the ring ppermute filter."""
-    _check_static_s(S, "make_eval")
-    evaluate_s = _eval_core(cfg, activation, star, mix_fn)
-
-    def evaluate(theta, batch, key):
-        return evaluate_s(S, theta, batch, key)
-
-    return jax.jit(evaluate) if jit else evaluate
-
-
-# One compiled scan engine per distinct traced computation — the benchmarks
-# call train_surf repeatedly with the same config and must not pay a
-# re-trace/re-compile per experiment. S is a jit ARGUMENT, so every
-# topology/seed of a config reuses the same executable.
-_ENGINE_CACHE: dict = {}
-
-
-def _mix_tag(mix_fn):
-    """Hashable identity of a mix_fn for engine-cache keys. Tagged mixers
-    (``core.ring.make_ring_mix`` sets ``.tag``) cache normally; an
-    untagged custom mix_fn returns None, which the engine builders treat
-    as "don't cache" (the closure could compute anything)."""
-    return getattr(mix_fn, "tag", None) if mix_fn is not None else ()
-
-
-def _engine_cache_key(cfg: SURFConfig, variant, activation, star,
-                      mesh=None, mix_fn=None):
-    """Normalize cfg to the fields that shape the traced computation: on the
-    non-star path the topology/degree/er_p fields only affect how S was
-    BUILT (S itself is a jit argument), so 'regular' and 'er' experiments
-    share one executable. The star path reads cfg.topology inside
-    ``star_filter_mask`` and keeps the full config. ``variant`` is an
-    arbitrary hashable tag distinguishing computations the other fields
-    don't ("train"/constrained, "eval", "async").
-
-    The full key is (cfg, variant, activation, star, mesh-fingerprint,
-    mix-tag): engines lowered with different explicit shardings or a
-    different ring geometry are different executables. Returns None
-    (uncacheable) for an untagged custom ``mix_fn``."""
-    import dataclasses
-    from repro.sharding.surf_rules import mesh_fingerprint
-    mt = _mix_tag(mix_fn)
-    if mt is None:
-        return None
-    use_star = cfg.topology == "star" if star is None else star
-    if not use_star:
-        cfg = dataclasses.replace(cfg, topology="regular", degree=0,
-                                  er_p=0.0)
-    return (cfg, variant, activation, use_star, mesh_fingerprint(mesh), mt)
-
-
-def make_train_scan(cfg: SURFConfig, S, *, constrained=True,
-                    activation="relu", star=None, mix_fn=None, mesh=None,
-                    stacked=None):
-    """Build the device-resident meta-training engine: one jitted
-    ``lax.scan`` over meta-steps.
-
-    Returns ``run(state, stacked, key, steps) -> (state, metrics)`` where
-    ``stacked`` is the pytree from ``stack_meta_datasets`` (leading Q axis,
-    cycled round-robin on device), the incoming ``state`` buffers are
-    DONATED, per-step RNG is ``fold_in(key, t)``, and ``metrics`` is the
-    full history as stacked device arrays of shape (steps,).
-
-    ``mix_fn`` replaces the dense graph filter inside the jitted scan with
-    e.g. the ring ppermute path (``core.ring.make_ring_mix``); ``mesh``
-    additionally pins explicit in/out shardings on the engine (state, key,
-    S replicated; the stacked dataset's AGENT axis over 'data' — see
-    ``sharding.surf_rules``). Pass the ``stacked`` pytree along with
-    ``mesh`` so the dataset shardings are leaf-aware (aux leaves without
-    an agent axis replicate); without it a pytree-prefix spec is used,
-    which only flat Xtr/Ytr/Xte/Yte dicts satisfy. Engines are cached per
-    (normalized cfg, variant, activation, star, mesh-fingerprint,
-    mix-tag[, schedule cache-tag][, stacked structure]); an untagged
-    custom ``mix_fn`` is never cached.
-
-    ``S`` may be a ``topology.schedule.TopologySchedule``: its stacked
-    (T, n, n) matrices become the jit argument and the body mixes with
-    ``S[state.step % T]`` — a different topology every meta-step, one
-    compile. Per-step batch/RNG/schedule selection all index the CARRIED
-    ``state.step`` (not a scan counter), so running ``k`` then
-    ``steps−k`` meta-steps — with a checkpoint save/restore in between —
-    reproduces the single ``steps``-long run exactly.
-    """
-    sched = isinstance(S, TopologySchedule)
-    if sched and mix_fn is not None:
-        raise ValueError(
-            "a TopologySchedule requires the dense mixing path: the "
-            "static halo/ring mix_fn bakes one S and would silently "
-            "ignore the schedule")
-    variant = ("train", constrained) + ((S.cache_tag,) if sched else ())
-    cache_key = _engine_cache_key(cfg, variant, activation,
-                                  star, mesh=mesh, mix_fn=mix_fn)
-    if cache_key is not None and mesh is not None and stacked is not None:
-        from repro.sharding.surf_rules import stacked_sharded_flags
-        cache_key = cache_key + (
-            jax.tree_util.tree_structure(stacked),
-            stacked_sharded_flags(stacked, cfg.n_agents))
-    S_arr = S.S if sched else S
-    if cache_key is not None and cache_key in _ENGINE_CACHE:
-        run_s = _ENGINE_CACHE[cache_key]
-        return lambda state, stacked, key, steps: run_s(state, stacked, key,
-                                                        steps, S_arr)
-
-    meta_step_s, _ = _meta_step_core(cfg, constrained, activation, star,
-                                     mix_fn)
-
-    jit_kwargs = {}
-    if mesh is not None:
-        from repro.sharding.surf_rules import train_scan_shardings
-        in_sh, out_sh = train_scan_shardings(mesh, cfg.n_agents,
-                                             stacked=stacked)
-        # dynamic-arg order is (state, stacked, key, S) — ``steps`` is
-        # static and takes no sharding
-        jit_kwargs = {"in_shardings": in_sh, "out_shardings": out_sh}
-
-    @partial(jax.jit, static_argnames=("steps",), donate_argnums=(0,),
-             **jit_kwargs)
-    def run_s(state: TrainState, stacked, key, steps: int, S):
-        n_q = jax.tree_util.tree_leaves(stacked)[0].shape[0]
-
-        def body(st, _):
-            # index by the CARRIED step counter, not a scan-local t: a
-            # restored mid-run state picks up its batch / RNG / S_t
-            # stream exactly where the interrupted run left off
-            t = st.step
-            batch = jax.tree_util.tree_map(
-                lambda a: jax.lax.dynamic_index_in_dim(
-                    a, t % n_q, 0, keepdims=False), stacked)
-            S_t = (jax.lax.dynamic_index_in_dim(S, t % S.shape[0], 0,
-                                                keepdims=False)
-                   if sched else S)
-            return meta_step_s(S_t, st, batch, jax.random.fold_in(key, t))
-
-        return jax.lax.scan(body, state, None, length=steps)
-
-    if cache_key is not None:
-        _ENGINE_CACHE[cache_key] = run_s
-    return lambda state, stacked, key, steps: run_s(state, stacked, key,
-                                                    steps, S_arr)
-
-
-def _decimate_history(metrics, steps, log_every):
-    """Device-array history (steps,) per key -> the step-wise ``train``
-    hist format, keeping every ``log_every``-th step plus the last."""
-    if not log_every or steps == 0:
-        return []
-    host = {k: np.asarray(v) for k, v in metrics.items()}
-    idx = [t for t in range(steps) if t % log_every == 0 or t == steps - 1]
-    return [{k: float(host[k][t]) for k in host} | {"step": t} for t in idx]
-
-
-def train_scan(cfg: SURFConfig, S, meta_datasets, steps, key,
-               constrained=True, activation="relu", log_every=0, init="dgd",
-               mix_fn=None, mesh=None):
-    """Run Algorithm 1 as ONE compiled scan over ``steps`` meta-iterations,
-    cycling the meta-training datasets on device. Returns (state, history)
-    with history decimated to ``log_every`` on host — same contract as the
-    step-wise ``train``. ``mix_fn``/``mesh`` route mixing through the ring
-    ppermute path on an agent-axis-sharded mesh (see ``make_train_scan``);
-    ``S`` may be a ``TopologySchedule`` for time-varying graphs."""
-    state = init_state(key, cfg, init=init)
-    stacked = stack_meta_datasets(meta_datasets)
-    run = make_train_scan(cfg, S, constrained=constrained,
-                          activation=activation, mix_fn=mix_fn, mesh=mesh,
-                          stacked=stacked)
-    state, metrics = run(state, stacked, key, int(steps))
-    return state, _decimate_history(metrics, int(steps), log_every)
-
-
-def train(cfg: SURFConfig, S, meta_datasets, steps, key,
-          constrained=True, activation="relu", log_every=0, init="dgd",
-          mix_fn=None):
-    """Step-wise Algorithm 1: a thin Python loop over the same jitted
-    ``meta_step`` and fold_in RNG stream as ``train_scan`` — use when you
-    need host access to metrics every iteration (interactive logging,
-    early stopping). Returns (state, history). A ``TopologySchedule`` S
-    jits the S-as-argument body once and indexes ``S_t`` on host — the
-    exact reference stream for the schedule-aware scan engine."""
-    state = init_state(key, cfg, init=init)
-    if isinstance(S, TopologySchedule):
-        if mix_fn is not None:
-            raise ValueError("a TopologySchedule requires the dense "
-                             "mixing path (no static mix_fn)")
-        meta_step_s, _ = _meta_step_core(cfg, constrained, activation,
-                                         None, None)
-        jit_step = jax.jit(meta_step_s)
-        T_s, S_stack = S.steps, S.S
-
-        def meta_step(st, batch, k, t):
-            return jit_step(S_stack[t % T_s], st, batch, k)
-    else:
-        step_fn, _ = make_meta_step(cfg, S, constrained=constrained,
-                                    activation=activation, mix_fn=mix_fn)
-
-        def meta_step(st, batch, k, t):
-            return step_fn(st, batch, k)
-    hist = []
-    if isinstance(meta_datasets, (list, tuple)):
-        n_q = len(meta_datasets)
-        get_batch = lambda q: meta_datasets[q]
-    else:                                   # pre-stacked pytree (Q, ...)
-        n_q = jax.tree_util.tree_leaves(meta_datasets)[0].shape[0]
-        get_batch = lambda q: jax.tree_util.tree_map(
-            lambda a: a[q], meta_datasets)
-    for t in range(steps):
-        state, m = meta_step(state, get_batch(t % n_q),
-                             jax.random.fold_in(key, t), t)
-        if log_every and (t % log_every == 0 or t == steps - 1):
-            hist.append({k: float(v) for k, v in m.items()} | {"step": t})
-    return state, hist
+__all__ = [
+    "TRACE_COUNTS", "TrainState", "init_state", "make_meta_step",
+    "make_eval", "make_train_scan", "train_scan", "train",
+]

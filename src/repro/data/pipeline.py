@@ -17,7 +17,7 @@ def stack_meta_datasets(datasets):
     into one device-resident pytree with a leading dataset axis — for flat
     dicts, {k: (Q, ...)}.
 
-    This is the input format of the fully-jitted engines in ``core.trainer``
+    This is the input format of the fully-jitted engines in ``repro.engine``
     (``train_scan`` indexes the Q axis per meta-step) and ``core.surf``
     (vmapped evaluation maps over it). Nested pytrees (e.g. datasets
     carrying auxiliary sub-dicts) stack leaf-wise; a non-list input is

@@ -1,0 +1,249 @@
+"""Shared core of the streaming SURF engine: the S-as-argument meta-step
+and evaluation bodies (paper Algorithm 1 + Figure 3), the ``TrainState``
+carried through every scan, and the compiled-engine cache keys.
+
+Each meta-step: sample one downstream dataset D_q, sample W_0 ~ N(μ0, σ0²I)
+and L per-layer mini-batches from D_q's training examples, run the unrolled
+network, evaluate the test loss f(W_L) on D_q's held-out examples, add the
+λ-weighted descending-constraint slacks, take an ADAM step on θ (eq. 6) and
+a projected ascent step on λ (eq. 7).
+
+Keeping S OUT of the closures (``meta_step_s(S, state, batch, key)``,
+``evaluate_s(S, theta, batch, key)``) lets one jitted engine serve every
+topology/seed of the same config — S rides through jit as a device
+argument. The drivers live in ``engine.scan`` (single-seed streaming
+scan), ``engine.seeds`` (seed-batched outer vmap), ``engine.snapshots``
+(in-scan evaluation) and ``engine.resume`` (donate-through-checkpoint);
+``core.trainer`` re-exports everything as a compat shim.
+
+``mix_fn`` replaces the dense graph filter with a collective-efficient
+exchange (``core.ring.make_ring_mix`` / ``topology.halo.make_halo_mix``).
+A SCHEDULED mixer (``topology.halo.make_scheduled_halo_mix``, marked by
+``.scheduled = True``) is selected per meta-step by the CARRIED
+``state.step`` — ``mix_fn.at_step(state.step)`` returns the step-t filter
+— so banded time-varying schedules keep the ppermute collective-bytes
+savings instead of falling back to dense ``S_t @ W``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SURFConfig
+from repro.core import constraints as C
+from repro.core import task as T
+from repro.core import unroll as U
+from repro.optim import adam, apply_updates, clip_by_global_norm
+from repro.topology.schedule import TopologySchedule
+
+# Incremented each time a meta_step / eval body is TRACED (not executed) —
+# the scan engines' contract is that an entire training run (seed-batched
+# or not, scheduled or not, with or without in-scan snapshots) traces
+# meta_step at most twice (once for the scan, possibly once for a
+# standalone jit), and the multi-seed evaluator's is that one batched
+# evaluate call traces the body exactly once regardless of seed count.
+TRACE_COUNTS = {"meta_step": 0, "eval": 0}
+
+
+class TrainState(NamedTuple):
+    theta: dict
+    lam: jnp.ndarray
+    opt_state: dict
+    step: jnp.ndarray
+
+
+def init_state(key, cfg: SURFConfig, init="dgd"):
+    theta = U.init_udgd(key, cfg, init=init)
+    opt = adam(cfg.lr_theta)
+    return TrainState(theta=theta, lam=jnp.zeros((cfg.n_layers,)),
+                      opt_state=opt.init(theta), step=jnp.zeros((), jnp.int32))
+
+
+def _meta_step_core(cfg: SURFConfig, constrained, activation, star, mix_fn):
+    """S-as-argument meta step: ``meta_step_s(S, state, batch, key)`` and
+    ``forward_s(S, theta, W0, Xl, Yl)``. Keeping S out of the closure lets
+    one jitted engine serve every topology/seed of the same config.
+
+    A scheduled ``mix_fn`` (``.scheduled`` attribute) is re-bound every
+    call via ``mix_fn.at_step(state.step)`` — the carried step counter
+    selects the step-t coefficient blocks, so checkpoint-restored states
+    resume the exact mixing stream."""
+    opt = adam(cfg.lr_theta)
+    use_star = cfg.topology == "star" if star is None else star
+    layer_fn = U.udgd_layer_star if use_star else U.udgd_layer
+    scheduled = bool(getattr(mix_fn, "scheduled", False))
+    static_mix = None if scheduled else mix_fn
+
+    def _forward(S, theta, W0, Xl, Yl, mf):
+        def body(W, xs):
+            p_l, Xb, Yb = xs
+            Wn = layer_fn(p_l, S, W, Xb, Yb, cfg, activation, mix_fn=mf)
+            return Wn, Wn
+        W_L, Ws = jax.lax.scan(body, W0, (theta, Xl, Yl))
+        return W_L, jnp.concatenate([W0[None], Ws], axis=0)
+
+    def forward_s(S, theta, W0, Xl, Yl):
+        if scheduled:
+            raise ValueError(
+                "forward_s has no step counter to bind a scheduled "
+                "mix_fn — pass mix_fn.at_step(t)'s filter through a "
+                "static builder, or use the meta step (which binds the "
+                "carried state.step)")
+        return _forward(S, theta, W0, Xl, Yl, static_mix)
+
+    def lagrangian_fn(theta, lam, S, W0, Xl, Yl, Xte, Yte, mf):
+        W_L, W_all = _forward(S, theta, W0, Xl, Yl, mf)
+        test_loss = T.fl_loss(W_L, Xte, Yte, cfg.feature_dim, cfg.n_classes)
+        gnorms = C.layer_grad_norms(W_all, Xl, Yl, cfg)
+        slack = C.slacks(gnorms, cfg.eps)
+        lag = C.lagrangian(test_loss, lam, slack) if constrained else test_loss
+        return lag, (test_loss, slack, gnorms, W_L)
+
+    def meta_step_s(S, state: TrainState, batch, key):
+        """batch: dict with Xtr (n,m,F), Ytr (n,m), Xte (n,t,F), Yte (n,t)."""
+        TRACE_COUNTS["meta_step"] += 1
+        mf = mix_fn.at_step(state.step) if scheduled else mix_fn
+        kw, kb = jax.random.split(key)
+        W0 = U.sample_w0(kw, cfg)
+        Xl, Yl = U.sample_layer_batches(kb, batch["Xtr"], batch["Ytr"], cfg)
+        (lag, (tl, slack, gnorms, W_L)), grads = jax.value_and_grad(
+            lagrangian_fn, has_aux=True)(state.theta, state.lam, S, W0, Xl,
+                                         Yl, batch["Xte"], batch["Yte"], mf)
+        grads, gn = clip_by_global_norm(grads, 10.0)
+        upd, opt_state = opt.update(grads, state.opt_state)
+        theta = apply_updates(state.theta, upd)
+        lam = (C.dual_ascent(state.lam, slack, cfg.lr_lambda)
+               if constrained else state.lam)
+        test_acc = T.fl_accuracy(W_L, batch["Xte"], batch["Yte"],
+                                 cfg.feature_dim, cfg.n_classes)
+        metrics = {"lagrangian": lag, "test_loss": tl, "test_acc": test_acc,
+                   "slack_max": jnp.max(slack), "slack_mean": jnp.mean(slack),
+                   "gnorm_first": gnorms[0], "gnorm_last": gnorms[-1],
+                   "grad_norm": gn, "lam_sum": jnp.sum(lam)}
+        return TrainState(theta, lam, opt_state, state.step + 1), metrics
+
+    return meta_step_s, forward_s
+
+
+def _check_static_s(S, where):
+    """The static-S builders can't consume a time-varying schedule —
+    point the caller at the schedule-aware drivers instead."""
+    if isinstance(S, TopologySchedule):
+        raise TypeError(
+            f"{where} needs a static (n, n) mixing matrix, got a "
+            "TopologySchedule — pass a schedule to train_scan/train "
+            "(and evaluate on a static S, e.g. schedule.S[t])")
+
+
+def make_meta_step(cfg: SURFConfig, S, *, constrained=True,
+                   activation="relu", star=None, mix_fn=None, jit=True):
+    """Build the meta-training step (jitted unless ``jit=False`` — the scan
+    engine embeds the raw body in its own jit).
+
+    ``constrained=False`` gives the ablation of Appendix D (λ frozen at 0).
+    ``star``: override star-topology handling (defaults to cfg.topology).
+    ``mix_fn``: override the dense graph filter (ring/halo ppermute path;
+    a scheduled mixer is legal here too — it indexes its own stacked
+    blocks by ``state.step`` and ignores the static ``S``).
+    """
+    _check_static_s(S, "make_meta_step")
+    meta_step_s, forward_s = _meta_step_core(cfg, constrained, activation,
+                                             star, mix_fn)
+
+    def meta_step(state, batch, key):
+        return meta_step_s(S, state, batch, key)
+
+    def forward(theta, W0, Xl, Yl):
+        return forward_s(S, theta, W0, Xl, Yl)
+
+    return (jax.jit(meta_step) if jit else meta_step), forward
+
+
+def _eval_core(cfg: SURFConfig, activation, star, mix_fn=None):
+    """S-as-argument evaluation body ``evaluate_s(S, theta, batch, key)`` —
+    keeping S out of the closure lets ``core.surf`` cache one jitted vmapped
+    evaluator per config across topologies/seeds, and ``engine.snapshots``
+    embed the same body inside the training scan. ``mix_fn`` replaces the
+    dense graph filter (ring ppermute path), same contract as the trainer."""
+    use_star = cfg.topology == "star" if star is None else star
+    layer_fn = U.udgd_layer_star if use_star else U.udgd_layer
+
+    def evaluate_s(S, theta, batch, key):
+        TRACE_COUNTS["eval"] += 1
+        kw, kb = jax.random.split(key)
+        W0 = U.sample_w0(kw, cfg)
+        Xl, Yl = U.sample_layer_batches(kb, batch["Xtr"], batch["Ytr"], cfg)
+
+        def body(W, xs):
+            p_l, Xb, Yb = xs
+            Wn = layer_fn(p_l, S, W, Xb, Yb, cfg, activation, mix_fn=mix_fn)
+            loss = T.fl_loss(Wn, batch["Xte"], batch["Yte"],
+                             cfg.feature_dim, cfg.n_classes)
+            acc = T.fl_accuracy(Wn, batch["Xte"], batch["Yte"],
+                                cfg.feature_dim, cfg.n_classes)
+            return Wn, (loss, acc)
+        W_L, (losses, accs) = jax.lax.scan(body, W0, (theta, Xl, Yl))
+        return {"loss_per_layer": losses, "acc_per_layer": accs,
+                "final_loss": losses[-1], "final_acc": accs[-1]}
+
+    return evaluate_s
+
+
+def make_eval(cfg: SURFConfig, S, *, activation="relu", star=None, jit=True,
+              mix_fn=None):
+    """Per-layer loss/accuracy trajectory on a downstream dataset — the
+    evaluation used for every paper figure. ``jit=False`` returns the raw
+    body for embedding under vmap (see ``core.surf.evaluate_surf``);
+    ``mix_fn`` routes mixing through the ring ppermute filter."""
+    _check_static_s(S, "make_eval")
+    evaluate_s = _eval_core(cfg, activation, star, mix_fn)
+
+    def evaluate(theta, batch, key):
+        return evaluate_s(S, theta, batch, key)
+
+    return jax.jit(evaluate) if jit else evaluate
+
+
+# One compiled scan engine per distinct traced computation — the benchmarks
+# call train_surf repeatedly with the same config and must not pay a
+# re-trace/re-compile per experiment. S is a jit ARGUMENT, so every
+# topology/seed of a config reuses the same executable. See
+# ``engine/README.md`` for the full key anatomy.
+_ENGINE_CACHE: dict = {}
+
+
+def _mix_tag(mix_fn):
+    """Hashable identity of a mix_fn for engine-cache keys. Tagged mixers
+    (``core.ring.make_ring_mix`` / ``topology.halo`` set ``.tag``) cache
+    normally; an untagged custom mix_fn returns None, which the engine
+    builders treat as "don't cache" (the closure could compute anything)."""
+    return getattr(mix_fn, "tag", None) if mix_fn is not None else ()
+
+
+def _engine_cache_key(cfg: SURFConfig, variant, activation, star,
+                      mesh=None, mix_fn=None):
+    """Normalize cfg to the fields that shape the traced computation: on the
+    non-star path the topology/degree/er_p fields only affect how S was
+    BUILT (S itself is a jit argument), so 'regular' and 'er' experiments
+    share one executable. The star path reads cfg.topology inside
+    ``star_filter_mask`` and keeps the full config. ``variant`` is an
+    arbitrary hashable tag distinguishing computations the other fields
+    don't ("train"/constrained, "train-seeds"/n_seeds, "eval", "async",
+    snapshot cadence).
+
+    The full key is (cfg, variant, activation, star, mesh-fingerprint,
+    mix-tag): engines lowered with different explicit shardings or a
+    different ring geometry are different executables. Returns None
+    (uncacheable) for an untagged custom ``mix_fn``."""
+    import dataclasses
+    from repro.sharding.surf_rules import mesh_fingerprint
+    mt = _mix_tag(mix_fn)
+    if mt is None:
+        return None
+    use_star = cfg.topology == "star" if star is None else star
+    if not use_star:
+        cfg = dataclasses.replace(cfg, topology="regular", degree=0,
+                                  er_p=0.0)
+    return (cfg, variant, activation, use_star, mesh_fingerprint(mesh), mt)

@@ -1,0 +1,109 @@
+"""Donate-through-checkpoint: restore device buffers with the engine's
+in-shardings and hand them straight back to the donated scan.
+
+The scan engine donates its incoming ``TrainState`` buffers, and every
+per-step selection (batch, RNG, S_t, snapshot cadence) indexes the
+CARRIED ``state.step`` — so a restored state IS a valid engine input
+that resumes the exact streams of the interrupted run. What used to be
+missing is the placement: a naive restore materializes host arrays that
+jit re-places (and, on a mesh, re-shards) on first use. ``restore_state``
+instead asks ``checkpoint.io.restore`` to ``device_put`` each leaf with
+the engine's input sharding (replicated ``TrainState`` — see
+``sharding.surf_rules.train_state_shardings``) at restore time, so the
+donated scan consumes the buffers with zero host round-trip and
+mid-schedule resumption is bit-exact: running ``k`` then ``steps−k``
+meta-steps through the same executable equals the uninterrupted
+``steps``-long run bit for bit.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.checkpoint import io
+from repro.configs.base import SURFConfig
+from repro.data.pipeline import stack_meta_datasets
+from repro.engine.core import init_state
+from repro.engine.scan import _decimate_history, make_train_scan
+from repro.engine.snapshots import decimate_snapshots
+
+PREFIX = "ckpt_"
+
+
+def state_template(cfg: SURFConfig):
+    """ShapeDtypeStruct tree of the engine's TrainState — the restore
+    template (init values never materialize)."""
+    return jax.eval_shape(lambda k: init_state(k, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def checkpoint_path(directory, step, prefix=PREFIX):
+    return os.path.join(directory, f"{prefix}{int(step)}")
+
+
+def save_state(directory, state, prefix=PREFIX):
+    """Checkpoint a TrainState under ``directory`` keyed by its own
+    carried step. Returns the checkpoint path (sans extensions)."""
+    step = int(state.step)
+    path = checkpoint_path(directory, step, prefix)
+    io.save(path, state, step=step)
+    return path
+
+
+def restore_state(directory, cfg: SURFConfig, step=None, mesh=None,
+                  prefix=PREFIX):
+    """Reconstitute a TrainState as device buffers ready for the donated
+    engine: latest checkpoint under ``directory`` (or ``step``'s), leaves
+    placed with the engine's in-shardings (replicated on ``mesh`` when
+    given, default placement otherwise)."""
+    if step is None:
+        step = io.latest_step(directory, prefix)
+        if step is None:
+            raise FileNotFoundError(
+                f"no checkpoints under {directory!r} (prefix {prefix!r})")
+    template = state_template(cfg)
+    shardings = None
+    if mesh is not None:
+        from repro.sharding.surf_rules import train_state_shardings
+        shardings = train_state_shardings(template, mesh)
+    state = io.restore(checkpoint_path(directory, step, prefix), template,
+                       shardings=shardings)
+    if int(state.step) != int(step):
+        raise ValueError(
+            f"checkpoint {checkpoint_path(directory, step, prefix)!r} "
+            f"carries step {int(state.step)}, expected {int(step)} — "
+            "was it saved with engine.resume.save_state?")
+    return state
+
+
+def resume_train_scan(cfg: SURFConfig, S, meta_datasets, steps, key,
+                      directory, *, constrained=True, activation="relu",
+                      log_every=0, mix_fn=None, mesh=None, eval_every=0,
+                      eval_datasets=None, S_eval=None, step=None,
+                      prefix=PREFIX):
+    """Resume a ``steps``-long training run from its latest checkpoint:
+    restore with engine placement, run the REMAINING meta-steps through
+    the donated scan. History/snapshot entries record ABSOLUTE steps
+    (offset by the restored step), so a resumed run's logs concatenate
+    seamlessly with the pre-checkpoint logs. Returns (state, history) —
+    or (state, history, snapshots) with ``eval_every``."""
+    state = restore_state(directory, cfg, step=step, mesh=mesh)
+    start = int(state.step)
+    remaining = int(steps) - start
+    if remaining < 0:
+        raise ValueError(f"checkpoint is at step {start}, beyond the "
+                         f"requested {steps}-step run")
+    stacked = stack_meta_datasets(meta_datasets)
+    ev_stacked = (stack_meta_datasets(eval_datasets) if eval_every
+                  else None)
+    run = make_train_scan(cfg, S, constrained=constrained,
+                          activation=activation, mix_fn=mix_fn, mesh=mesh,
+                          stacked=stacked, eval_every=eval_every,
+                          eval_stacked=ev_stacked, S_eval=S_eval)
+    state, metrics, snaps = run(state, stacked, key, remaining)
+    hist = _decimate_history(metrics, remaining, log_every, start=start)
+    if eval_every:
+        return state, hist, decimate_snapshots(snaps, remaining,
+                                               eval_every, start=start)
+    return state, hist

@@ -1,0 +1,312 @@
+"""The streaming scan engine: Algorithm 1 as ONE jitted ``lax.scan`` over
+meta-steps (donated ``TrainState``, fold_in RNG, datasets pre-stacked on
+device and cycled with a dynamic index), plus the step-wise Python-loop
+reference driver.
+
+One compile + one dispatch per experiment instead of ``steps`` dispatches
+with host syncs. The engine is:
+
+  * MESH-aware — ``mix_fn``/``mesh`` replace the dense graph filter with
+    the ring/halo ``ppermute`` exchange of ``topology.halo`` on an
+    agent-axis-sharded mesh (specs in ``sharding.surf_rules``);
+  * SCHEDULE-aware — a ``topology.schedule.TopologySchedule`` rides
+    through the jit as a stacked (T, n, n) device argument, the body
+    selecting ``S[state.step % T]`` every meta-step. A banded schedule
+    whose halo plan is time-constant can instead pass a SCHEDULED mixer
+    (``topology.halo.make_scheduled_halo_mix``) and keep the ppermute
+    collective-bytes savings — the mixer threads stacked per-offset
+    coefficient blocks through the scan and binds step ``t``'s blocks via
+    ``mix_fn.at_step(state.step)``;
+  * SNAPSHOT-aware — ``eval_every`` folds the evaluation body into the
+    scan at a fixed cadence (``engine.snapshots``), emitting online
+    robustness curves without leaving the jit;
+  * RESUME-aware — per-step batch/RNG/S_t/snapshot selection all index
+    the CARRIED ``state.step``, so a checkpoint-restored state
+    (``engine.resume``) continues the exact streams of the interrupted
+    run, and the donated input buffers can come straight from
+    ``checkpoint.io.restore``.
+
+The compiled-engine cache is keyed on (normalized cfg, variant,
+activation, star, mesh-fingerprint, mix-tag) — see ``engine/README.md``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import numpy as np
+
+from repro.configs.base import SURFConfig
+from repro.data.pipeline import stack_meta_datasets
+from repro.engine.core import (_ENGINE_CACHE, _engine_cache_key,
+                               _meta_step_core, init_state)
+from repro.engine.snapshots import (make_snapshot_fn, nan_snapshot,
+                                    snapshot_key)
+from repro.topology.schedule import TopologySchedule
+
+
+def _check_schedule_mix(S, mix_fn):
+    """Validate a (TopologySchedule, mix_fn) pair — shared by the scan
+    engine and the python reference driver. Static mixers are rejected (a
+    baked S would silently ignore the schedule); a SCHEDULED mixer must
+    match the schedule in length AND content (the coefficient blocks ARE
+    the mixing matrices, so a mismatch would silently override the S_t
+    stream)."""
+    scheduled_mix = bool(getattr(mix_fn, "scheduled", False))
+    if mix_fn is not None and not scheduled_mix:
+        raise ValueError(
+            "a TopologySchedule requires the dense mixing path or a "
+            "SCHEDULED mixer (topology.halo.make_scheduled_halo_mix): the "
+            "static halo/ring mix_fn bakes one S and would silently "
+            "ignore the schedule")
+    if scheduled_mix:
+        if mix_fn.steps != S.steps:
+            raise ValueError(
+                f"scheduled mix_fn has {mix_fn.steps} steps but the "
+                f"TopologySchedule has {S.steps} — build the mixer from "
+                "the same schedule (topology.halo.make_scheduled_halo_mix)")
+        if getattr(mix_fn, "schedule_digest", None):
+            import hashlib
+            want = hashlib.sha256(
+                np.asarray(S.S, np.float32).tobytes()).hexdigest()[:16]
+            if mix_fn.schedule_digest != want:
+                raise ValueError(
+                    "scheduled mix_fn was built from a DIFFERENT schedule "
+                    "(content digest mismatch) — its coefficient blocks "
+                    "would silently override this schedule's S_t stream; "
+                    "rebuild it from this TopologySchedule via "
+                    "topology.halo.make_scheduled_halo_mix")
+    return scheduled_mix
+
+
+def _scan_run(meta_step_s, snap_fn, eval_every, n_layers, state, stacked,
+              key, steps, S, sched, eval_stacked, S_eval):
+    """The shared scan over meta-steps: every per-step selection (batch,
+    RNG, S_t, snapshot cadence) indexes the CARRIED ``state.step``, not a
+    scan-local counter — running ``k`` then ``steps−k`` meta-steps (with a
+    checkpoint save/restore in between) reproduces the single long run
+    exactly. Returns (state, metrics (steps,)-stacks, snapshot rows)."""
+    n_q = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+
+    def body(st, _):
+        t = st.step
+        batch = jax.tree_util.tree_map(
+            lambda a: jax.lax.dynamic_index_in_dim(
+                a, t % n_q, 0, keepdims=False), stacked)
+        S_t = (jax.lax.dynamic_index_in_dim(S, t % S.shape[0], 0,
+                                            keepdims=False)
+               if sched else S)
+        st2, m = meta_step_s(S_t, st, batch, jax.random.fold_in(key, t))
+        if not eval_every:
+            return st2, (m, {})
+        snap = jax.lax.cond(
+            (t + 1) % eval_every == 0,
+            lambda _: snap_fn(S_eval, st2.theta, eval_stacked,
+                              snapshot_key(key, t)),
+            lambda _: nan_snapshot(n_layers), None)
+        return st2, (m, snap)
+
+    state, (metrics, snaps) = jax.lax.scan(body, state, None, length=steps)
+    return state, metrics, snaps
+
+
+def make_train_scan(cfg: SURFConfig, S, *, constrained=True,
+                    activation="relu", star=None, mix_fn=None, mesh=None,
+                    stacked=None, eval_every=0, eval_stacked=None,
+                    S_eval=None):
+    """Build the device-resident meta-training engine: one jitted
+    ``lax.scan`` over meta-steps.
+
+    Returns ``run(state, stacked, key, steps) -> (state, metrics, snaps)``
+    where ``stacked`` is the pytree from ``stack_meta_datasets`` (leading
+    Q axis, cycled round-robin on device), the incoming ``state`` buffers
+    are DONATED, per-step RNG is ``fold_in(key, t)``, ``metrics`` is the
+    full history as stacked device arrays of shape (steps,), and ``snaps``
+    is the in-scan snapshot buffer ({} when ``eval_every`` is 0).
+
+    ``mix_fn`` replaces the dense graph filter inside the jitted scan with
+    e.g. the ring ppermute path (``core.ring.make_ring_mix``); ``mesh``
+    additionally pins explicit in/out shardings on the engine (state, key,
+    S replicated; the stacked dataset's AGENT axis over 'data' — see
+    ``sharding.surf_rules``). Pass the ``stacked`` pytree along with
+    ``mesh`` so the dataset shardings are leaf-aware (aux leaves without
+    an agent axis replicate); without it a pytree-prefix spec is used,
+    which only flat Xtr/Ytr/Xte/Yte dicts satisfy.
+
+    ``S`` may be a ``topology.schedule.TopologySchedule``: its stacked
+    (T, n, n) matrices become the jit argument and the body mixes with
+    ``S[state.step % T]`` — a different topology every meta-step, one
+    compile. A schedule normally requires the dense mixing path (a static
+    halo/ring ``mix_fn`` bakes one S and is rejected), EXCEPT a scheduled
+    mixer (``topology.halo.make_scheduled_halo_mix``, built from the SAME
+    schedule): it carries stacked per-offset blocks and the body binds
+    step t's blocks via ``mix_fn.at_step(state.step)``, keeping the
+    ppermute savings for banded time-varying graphs.
+
+    ``eval_every`` > 0 folds ``engine.snapshots`` into the scan: after
+    every ``eval_every``-th meta-step the just-updated θ is evaluated on
+    ``eval_stacked`` (a stacked held-out pool) against ``S_eval`` (the
+    NOMINAL static matrix — defaults to ``S`` itself when static; a
+    schedule requires an explicit ``S_eval``, per the train-perturbed /
+    test-nominal robustness protocol).
+    """
+    sched = isinstance(S, TopologySchedule)
+    scheduled_mix = bool(getattr(mix_fn, "scheduled", False))
+    if sched:
+        _check_schedule_mix(S, mix_fn)
+    elif scheduled_mix:
+        raise ValueError("a scheduled mix_fn needs a TopologySchedule S "
+                         "(its per-step blocks follow the schedule)")
+    if eval_every:
+        if eval_stacked is None:
+            raise ValueError("eval_every > 0 needs eval_stacked (the "
+                             "stacked held-out snapshot pool)")
+        if S_eval is None:
+            if sched:
+                raise ValueError(
+                    "in-scan snapshots under a TopologySchedule need an "
+                    "explicit S_eval (the nominal static mixing matrix — "
+                    "robustness protocols evaluate on the unperturbed "
+                    "graph)")
+            S_eval = S
+    variant = (("train", constrained) + ((S.cache_tag,) if sched else ())
+               + (("snap", int(eval_every)) if eval_every else ()))
+    cache_key = _engine_cache_key(cfg, variant, activation,
+                                  star, mesh=mesh, mix_fn=mix_fn)
+    if cache_key is not None and mesh is not None and stacked is not None:
+        from repro.sharding.surf_rules import stacked_sharded_flags
+        cache_key = cache_key + (
+            jax.tree_util.tree_structure(stacked),
+            stacked_sharded_flags(stacked, cfg.n_agents))
+    S_arr = S.S if sched else S
+    ev_arr = eval_stacked if eval_every else {}
+    S_ev_arr = S_eval if eval_every else {}
+
+    def bind(run_s):
+        return lambda state, stacked, key, steps: run_s(
+            state, stacked, key, steps, S_arr, ev_arr, S_ev_arr)
+
+    if cache_key is not None and cache_key in _ENGINE_CACHE:
+        return bind(_ENGINE_CACHE[cache_key])
+
+    meta_step_s, _ = _meta_step_core(cfg, constrained, activation, star,
+                                     mix_fn)
+    snap_fn = (make_snapshot_fn(cfg, activation, star) if eval_every
+               else None)
+
+    jit_kwargs = {}
+    if mesh is not None:
+        from repro.sharding.surf_rules import train_scan_shardings
+        in_sh, out_sh = train_scan_shardings(mesh, cfg.n_agents,
+                                             stacked=stacked)
+        # dynamic-arg order is (state, stacked, key, S, eval_stacked,
+        # S_eval) — ``steps`` is static and takes no sharding
+        jit_kwargs = {"in_shardings": in_sh, "out_shardings": out_sh}
+
+    @partial(jax.jit, static_argnames=("steps",), donate_argnums=(0,),
+             **jit_kwargs)
+    def run_s(state, stacked, key, steps: int, S, eval_stacked, S_eval):
+        return _scan_run(meta_step_s, snap_fn, eval_every, cfg.n_layers,
+                         state, stacked, key, steps, S, sched,
+                         eval_stacked, S_eval)
+
+    if cache_key is not None:
+        _ENGINE_CACHE[cache_key] = run_s
+    return bind(run_s)
+
+
+def _decimate_history(metrics, steps, log_every, start=0):
+    """Device-array history with trailing (steps,) time axis per key ->
+    the step-wise ``train`` hist format, keeping every ``log_every``-th
+    step plus the last. Works for the seed-batched (n_seeds, steps)
+    stacks too (entries carry (n_seeds,) arrays); ``start`` offsets the
+    recorded step for resumed runs — the cadence is on the ABSOLUTE step,
+    so a resumed run's log concatenates seamlessly with the
+    pre-checkpoint log."""
+    if not log_every or steps == 0:
+        return []
+    host = {k: np.asarray(v) for k, v in metrics.items()}
+    idx = [t for t in range(steps)
+           if (start + t) % log_every == 0 or t == steps - 1]
+    out = []
+    for t in idx:
+        row = {}
+        for k, v in host.items():
+            val = np.take(v, t, axis=-1)
+            row[k] = float(val) if val.ndim == 0 else val
+        row["step"] = start + t
+        out.append(row)
+    return out
+
+
+def train_scan(cfg: SURFConfig, S, meta_datasets, steps, key,
+               constrained=True, activation="relu", log_every=0, init="dgd",
+               mix_fn=None, mesh=None, eval_every=0, eval_datasets=None,
+               S_eval=None):
+    """Run Algorithm 1 as ONE compiled scan over ``steps`` meta-iterations,
+    cycling the meta-training datasets on device. Returns (state, history)
+    — or (state, history, snapshots) when ``eval_every`` > 0 — with
+    history decimated to ``log_every`` on host, same contract as the
+    step-wise ``train``. ``mix_fn``/``mesh`` route mixing through the ring
+    ppermute path on an agent-axis-sharded mesh (see ``make_train_scan``);
+    ``S`` may be a ``TopologySchedule`` for time-varying graphs (combine
+    with a scheduled halo mixer to keep the ppermute savings)."""
+    state = init_state(key, cfg, init=init)
+    stacked = stack_meta_datasets(meta_datasets)
+    ev_stacked = (stack_meta_datasets(eval_datasets) if eval_every
+                  else None)
+    run = make_train_scan(cfg, S, constrained=constrained,
+                          activation=activation, mix_fn=mix_fn, mesh=mesh,
+                          stacked=stacked, eval_every=eval_every,
+                          eval_stacked=ev_stacked, S_eval=S_eval)
+    state, metrics, snaps = run(state, stacked, key, int(steps))
+    hist = _decimate_history(metrics, int(steps), log_every)
+    if eval_every:
+        from repro.engine.snapshots import decimate_snapshots
+        return state, hist, decimate_snapshots(snaps, int(steps),
+                                               eval_every)
+    return state, hist
+
+
+def train(cfg: SURFConfig, S, meta_datasets, steps, key,
+          constrained=True, activation="relu", log_every=0, init="dgd",
+          mix_fn=None):
+    """Step-wise Algorithm 1: a thin Python loop over the same jitted
+    ``meta_step`` and fold_in RNG stream as ``train_scan`` — use when you
+    need host access to metrics every iteration (interactive logging,
+    early stopping). Returns (state, history). A ``TopologySchedule`` S
+    jits the S-as-argument body once and indexes ``S_t`` on host — the
+    exact reference stream for the schedule-aware scan engine, including
+    the scheduled-halo combination (a ``make_scheduled_halo_mix`` mixer
+    binds its per-step blocks by the carried ``state.step`` here too)."""
+    state = init_state(key, cfg, init=init)
+    if isinstance(S, TopologySchedule):
+        _check_schedule_mix(S, mix_fn)
+        meta_step_s, _ = _meta_step_core(cfg, constrained, activation,
+                                         None, mix_fn)
+        jit_step = jax.jit(meta_step_s)
+        T_s, S_stack = S.steps, S.S
+
+        def meta_step(st, batch, k, t):
+            return jit_step(S_stack[t % T_s], st, batch, k)
+    else:
+        from repro.engine.core import make_meta_step
+        step_fn, _ = make_meta_step(cfg, S, constrained=constrained,
+                                    activation=activation, mix_fn=mix_fn)
+
+        def meta_step(st, batch, k, t):
+            return step_fn(st, batch, k)
+    hist = []
+    if isinstance(meta_datasets, (list, tuple)):
+        n_q = len(meta_datasets)
+        get_batch = lambda q: meta_datasets[q]
+    else:                                   # pre-stacked pytree (Q, ...)
+        n_q = jax.tree_util.tree_leaves(meta_datasets)[0].shape[0]
+        get_batch = lambda q: jax.tree_util.tree_map(
+            lambda a: a[q], meta_datasets)
+    for t in range(steps):
+        state, m = meta_step(state, get_batch(t % n_q),
+                             jax.random.fold_in(key, t), t)
+        if log_every and (t % log_every == 0 or t == steps - 1):
+            hist.append({k: float(v) for k, v in m.items()} | {"step": t})
+    return state, hist

@@ -1,0 +1,224 @@
+"""Seed-batched training: the whole meta-training scan vmapped over a
+batch of init/topology seeds — paper-grade error bars from ONE compiled
+executable.
+
+The robustness protocols of Hadou et al. (2023) and the multi-seed
+curves of Wang et al. (2021) characterize unrolled optimizers by
+trajectory statistics across random perturbations; producing them by
+re-running the trainer per seed costs ``n_seeds`` dispatches (and
+``n_seeds`` compiles when shapes drift). Here ONE ``lax.scan`` carries
+the stacked per-seed ``TrainState`` and each step vmaps the shared
+``meta_step_s`` over (per-seed S, per-seed state, per-seed key) with the
+meta-batch shared — seeds advance in lockstep, so the per-step
+batch/schedule/snapshot selection indexes the scalar carried step
+``states.step[0]`` and the engine stays resume-exact. Metrics and
+in-scan snapshots come back as ``(n_seeds, steps, ...)`` stacks; row i
+matches the sequential ``seed=seeds[i]`` run (same PRNGKey(seed) init
+and fold_in stream) to fp32 tolerance — the train-side mirror of the
+multi-seed evaluator's guarantee in ``core.surf``.
+
+``S_stack`` is (n_seeds, n, n) for static topologies or
+(n_seeds, T, n, n) for per-seed ``TopologySchedule`` stacks (each seed
+trains under its OWN perturbation stream, as the sequential protocol
+does). Mixing is the dense path — a ``mesh`` shards the SEED axis over
+'data' (``sharding.surf_rules.seed_scan_shardings``): seeds are
+embarrassingly parallel, so the sharded engine runs without a single
+cross-device collective in the hot loop.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SURFConfig
+from repro.data.pipeline import stack_meta_datasets
+from repro.engine.core import (_ENGINE_CACHE, _engine_cache_key,
+                               _meta_step_core, init_state)
+from repro.engine.scan import _decimate_history
+from repro.engine.snapshots import (decimate_snapshots, make_snapshot_fn,
+                                    nan_snapshot, snapshot_key)
+
+
+def seed_keys(seeds):
+    """(n_seeds, 2) uint32 stack of PRNGKey(seed) — the per-seed RNG
+    roots, identical to what the sequential ``seed=i`` run folds from."""
+    seeds = [int(s) for s in seeds]
+    if not seeds:
+        raise ValueError("seeds must be non-empty")
+    return jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+
+
+def init_states(cfg: SURFConfig, keys, init="dgd"):
+    """Per-seed initial ``TrainState`` stack: vmapped ``init_state`` over
+    the key batch (elementwise in the key, so row i equals the sequential
+    ``init_state(PRNGKey(seeds[i]))``)."""
+    return jax.vmap(lambda k: init_state(k, cfg, init=init))(keys)
+
+
+def state_for_seed(states, i):
+    """Slice seed ``i``'s TrainState out of the stacked states — for
+    per-seed evaluation/checkpointing after a seed-batched run."""
+    return jax.tree_util.tree_map(lambda a: a[i], states)
+
+
+def stack_schedules(schedules):
+    """(n_seeds, T, n, n) stack from per-seed ``TopologySchedule``s (all
+    must share (T, n, n) — same scenario, different seeds)."""
+    shapes = {tuple(s.S.shape) for s in schedules}
+    if len(shapes) != 1:
+        raise ValueError(f"per-seed schedules must share one (T, n, n) "
+                         f"shape, got {sorted(shapes)}")
+    return jnp.stack([s.S for s in schedules])
+
+
+def make_seed_train_scan(cfg: SURFConfig, S_stack, *, constrained=True,
+                         activation="relu", star=None, mesh=None,
+                         eval_every=0, eval_stacked=None,
+                         S_eval_stack=None):
+    """Build the seed-batched engine:
+    ``run(states, stacked, keys, steps) -> (states, metrics, snaps)``.
+
+    ``S_stack``: (n_seeds, n, n) static per-seed matrices or
+    (n_seeds, T, n, n) per-seed schedule stacks (the scan body selects
+    ``S_stack[:, step % T]``). ``states``/``keys`` are the stacks from
+    ``init_states``/``seed_keys`` (DONATED / per-seed fold_in streams);
+    ``stacked`` is the SHARED meta-training pool. ``metrics`` leaves are
+    (n_seeds, steps); ``snaps`` adds in-scan snapshots against the
+    per-seed nominal ``S_eval_stack`` (n_seeds, n, n). ``mesh`` shards
+    the SEED axis over 'data'."""
+    S_stack = jnp.asarray(S_stack, jnp.float32)
+    if S_stack.ndim not in (3, 4):
+        raise ValueError("S_stack must be (n_seeds, n, n) or "
+                         f"(n_seeds, T, n, n), got shape {S_stack.shape}")
+    sched = S_stack.ndim == 4
+    n_seeds = int(S_stack.shape[0])
+    if eval_every:
+        if eval_stacked is None:
+            raise ValueError("eval_every > 0 needs eval_stacked")
+        if S_eval_stack is None:
+            if sched:
+                raise ValueError(
+                    "seed-batched snapshots under schedules need an "
+                    "explicit S_eval_stack (per-seed nominal matrices)")
+            S_eval_stack = S_stack
+        S_eval_stack = jnp.asarray(S_eval_stack, jnp.float32)
+        if (S_eval_stack.ndim != 3
+                or int(S_eval_stack.shape[0]) != n_seeds):
+            raise ValueError(
+                "S_eval_stack must stack one (n, n) nominal matrix PER "
+                f"SEED — expected ({n_seeds}, n, n), got shape "
+                f"{tuple(S_eval_stack.shape)} (a single (n, n) matrix "
+                "would be vmapped over its rows)")
+
+    variant = ("train-seeds", constrained, n_seeds, sched,
+               int(eval_every))
+    cache_key = _engine_cache_key(cfg, variant, activation, star,
+                                  mesh=mesh, mix_fn=None)
+    ev_arr = eval_stacked if eval_every else {}
+    S_ev_arr = S_eval_stack if eval_every else {}
+
+    def bind(run_s):
+        return lambda states, stacked, keys, steps: run_s(
+            states, stacked, keys, steps, S_stack, ev_arr, S_ev_arr)
+
+    if cache_key is not None and cache_key in _ENGINE_CACHE:
+        return bind(_ENGINE_CACHE[cache_key])
+
+    meta_step_s, _ = _meta_step_core(cfg, constrained, activation, star,
+                                     None)
+    snap_fn = (make_snapshot_fn(cfg, activation, star) if eval_every
+               else None)
+
+    jit_kwargs = {}
+    if mesh is not None:
+        from repro.sharding.surf_rules import seed_scan_shardings
+        in_sh, out_sh = seed_scan_shardings(mesh, n_seeds)
+        jit_kwargs = {"in_shardings": in_sh, "out_shardings": out_sh}
+
+    @partial(jax.jit, static_argnames=("steps",), donate_argnums=(0,),
+             **jit_kwargs)
+    def run_s(states, stacked, keys, steps: int, S_stack, eval_stacked,
+              S_eval_stack):
+        n_q = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+
+        def body(sts, _):
+            # seeds advance in lockstep: the SCALAR carried step of lane 0
+            # drives batch/schedule/snapshot selection (shared across
+            # lanes), keeping the cadence cond scalar — the snapshot eval
+            # only executes at the cadence instead of being vmapped into
+            # an every-step select.
+            t = sts.step[0]
+            batch = jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, t % n_q, 0, keepdims=False), stacked)
+            S_t = (jax.lax.dynamic_index_in_dim(
+                S_stack, t % S_stack.shape[1], 1, keepdims=False)
+                if sched else S_stack)
+            sts2, m = jax.vmap(
+                lambda S_i, st_i, k_i: meta_step_s(
+                    S_i, st_i, batch, jax.random.fold_in(k_i, t)),
+                in_axes=(0, 0, 0))(S_t, sts, keys)
+            if not eval_every:
+                return sts2, (m, {})
+
+            def do_snap(_):
+                return jax.vmap(
+                    lambda S_i, th_i, k_i: snap_fn(
+                        S_i, th_i, eval_stacked, snapshot_key(k_i, t)),
+                    in_axes=(0, 0, 0))(S_eval_stack, sts2.theta, keys)
+
+            def no_snap(_):
+                return jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(a, (n_seeds,) + a.shape),
+                    nan_snapshot(cfg.n_layers))
+
+            snap = jax.lax.cond((t + 1) % eval_every == 0, do_snap,
+                                no_snap, None)
+            return sts2, (m, snap)
+
+        states, (metrics, snaps) = jax.lax.scan(body, states, None,
+                                                length=steps)
+        # scan stacks along the time axis: (steps, n_seeds, ...) ->
+        # (n_seeds, steps, ...) for the per-seed-row output contract
+        to_seed_major = lambda tree: jax.tree_util.tree_map(
+            lambda a: jnp.swapaxes(a, 0, 1), tree)
+        return states, to_seed_major(metrics), to_seed_major(snaps)
+
+    if cache_key is not None:
+        _ENGINE_CACHE[cache_key] = run_s
+    return bind(run_s)
+
+
+def train_scan_seeds(cfg: SURFConfig, S_stack, meta_datasets, steps, seeds,
+                     constrained=True, activation="relu", log_every=0,
+                     init="dgd", star=None, mesh=None, eval_every=0,
+                     eval_datasets=None, S_eval_stack=None):
+    """Seed-batched Algorithm 1: ONE compiled scan trains every seed in
+    ``seeds`` (per-seed init/RNG/topology), returning (states, history) —
+    or (states, history, snapshots) when ``eval_every`` > 0 — where
+    history/snapshot entries carry (n_seeds,) / (n_seeds, ...) arrays.
+    Row i of every stack matches the sequential ``seed=seeds[i]`` run."""
+    seeds = [int(s) for s in seeds]
+    S_stack = jnp.asarray(S_stack, jnp.float32)
+    if int(S_stack.shape[0]) != len(seeds):
+        raise ValueError(f"S_stack has {S_stack.shape[0]} seed rows but "
+                         f"{len(seeds)} seeds were given")
+    keys = seed_keys(seeds)
+    states = init_states(cfg, keys, init=init)
+    stacked = stack_meta_datasets(meta_datasets)
+    ev_stacked = (stack_meta_datasets(eval_datasets) if eval_every
+                  else None)
+    run = make_seed_train_scan(cfg, S_stack, constrained=constrained,
+                               activation=activation, star=star, mesh=mesh,
+                               eval_every=eval_every,
+                               eval_stacked=ev_stacked,
+                               S_eval_stack=S_eval_stack)
+    states, metrics, snaps = run(states, stacked, keys, int(steps))
+    hist = _decimate_history(metrics, int(steps), log_every)
+    if eval_every:
+        return states, hist, decimate_snapshots(snaps, int(steps),
+                                                eval_every, t_axis=1)
+    return states, hist

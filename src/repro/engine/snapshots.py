@@ -1,0 +1,104 @@
+"""In-scan evaluation snapshots: ``core._eval_core`` folded into the
+training scan body at an ``eval_every`` cadence.
+
+Long schedule runs need MID-SCHEDULE robustness curves (accuracy on the
+nominal graph while training under perturbed topologies — the protocol
+of Hadou et al. 2023), and producing them by stopping the scan every few
+hundred steps would re-dispatch and break the single-compile engine.
+Instead the scan body conditionally evaluates the just-updated θ on a
+held-out pool after meta-step ``t`` whenever ``(t + 1) % eval_every == 0``
+(``jax.lax.cond`` — the eval computation only runs at the cadence), and
+emits a fixed-shape snapshot row every step: NaNs off-cadence, the
+eval-pool mean of the per-layer loss/accuracy trajectory on-cadence.
+The buffer is decimated on host like the metrics history. Trace count
+stays 1 — the eval body is traced once inside the cond branch.
+
+RNG: the snapshot stream is ``fold_in(fold_in(key, SNAP_FOLD), t)``,
+then ``fold_in(·, q)`` per eval dataset — derived from the run key but
+disjoint from the training stream (which uses single-fold ``(key, t)``),
+and indexed by the CARRIED step so checkpoint-resumed runs emit the same
+snapshots as an uninterrupted run. ``snapshot_reference`` recomputes a
+snapshot offline for parity tests and post-hoc analysis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SURFConfig
+from repro.data.pipeline import stack_meta_datasets
+from repro.engine.core import _eval_core
+
+# Disambiguates the snapshot RNG stream from the per-step training stream
+# ("SNAP" in ASCII) — the double fold_in means no snapshot key can collide
+# with a training key fold_in(key, t).
+SNAP_FOLD = 0x534E4150
+
+
+def snapshot_key(key, t):
+    """Base key of the snapshot emitted after meta-step ``t``."""
+    return jax.random.fold_in(jax.random.fold_in(key, SNAP_FOLD), t)
+
+
+def nan_snapshot(n_layers: int):
+    """The off-cadence filler row: same structure/dtypes as a real
+    snapshot, all NaN (host decimation drops these rows)."""
+    f = jnp.float32
+    return {"loss_per_layer": jnp.full((n_layers,), jnp.nan, f),
+            "acc_per_layer": jnp.full((n_layers,), jnp.nan, f),
+            "final_loss": jnp.full((), jnp.nan, f),
+            "final_acc": jnp.full((), jnp.nan, f)}
+
+
+def make_snapshot_fn(cfg: SURFConfig, activation="relu", star=None,
+                     mix_fn=None):
+    """``snap(S, theta, eval_stacked, key_t)`` -> eval-pool-mean snapshot
+    dict — the body embedded in the scan's cond branch. Maps the shared
+    ``_eval_core`` over the stacked eval pool's Q axis with per-dataset
+    ``fold_in(key_t, q)`` keys, then means over the pool — the same
+    aggregation as ``core.surf.evaluate_surf``."""
+    ev_s = _eval_core(cfg, activation, star, mix_fn)
+
+    def snap(S, theta, eval_stacked, key_t):
+        n_q = jax.tree_util.tree_leaves(eval_stacked)[0].shape[0]
+        keys = jax.vmap(lambda q: jax.random.fold_in(key_t, q))(
+            jnp.arange(n_q))
+        outs = jax.vmap(ev_s, in_axes=(None, None, 0, 0))(
+            S, theta, eval_stacked, keys)
+        return jax.tree_util.tree_map(lambda v: jnp.mean(v, axis=0), outs)
+
+    return snap
+
+
+def snapshot_reference(cfg: SURFConfig, theta, S, eval_datasets, key, t,
+                       activation="relu", star=None):
+    """Offline recomputation of the in-scan snapshot emitted after
+    meta-step ``t`` of a run keyed by ``key`` — the parity oracle for
+    tests and the post-hoc tool for analysing a checkpointed θ."""
+    snap = make_snapshot_fn(cfg, activation, star)
+    stacked = stack_meta_datasets(eval_datasets)
+    out = snap(jnp.asarray(S, jnp.float32), theta, stacked,
+               snapshot_key(key, jnp.asarray(t, jnp.int32)))
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+def decimate_snapshots(snaps, steps, eval_every, start=0, t_axis=0):
+    """Device snapshot buffer (one fixed-shape row per scan step, NaN off
+    cadence) -> host list of snapshot dicts, keeping only the on-cadence
+    rows. ``start`` offsets the recorded step for resumed runs; ``t_axis``
+    is the time axis (0 for the single-seed engine, 1 for the seed-batched
+    (n_seeds, steps, ...) stacks)."""
+    if not eval_every or steps == 0 or not snaps:
+        return []
+    host = {k: np.asarray(v) for k, v in snaps.items()}
+    out = []
+    for t in range(steps):
+        if (start + t + 1) % eval_every == 0:
+            row = {}
+            for k, v in host.items():
+                val = np.take(v, t, axis=t_axis)
+                row[k] = float(val) if val.ndim == 0 else val
+            row["step"] = start + t
+            out.append(row)
+    return out

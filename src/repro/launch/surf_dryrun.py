@@ -17,9 +17,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import engine as TR
 from repro.configs.surf_paper import DRYRUN
 from repro.core import graph as G
-from repro.core import trainer as TR
 from repro.launch import hlo_cost
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
@@ -43,9 +43,11 @@ def meta_step_collective_bytes(cfg, S, mesh, mix_fn=None):
     """Per-META-STEP collective traffic of the agent-axis-sharded engine:
     lower ONE meta step (state/key replicated, batch agent-sharded) and
     parse its post-SPMD HLO. Returns (total collective bytes, per-kind
-    dict) — independent of the scan trip count; the quantity the ring
-    ``mix_fn`` path exists to shrink."""
-    from repro.core import trainer as TR
+    dict) — independent of the scan trip count; the quantity the
+    ring/halo ``mix_fn`` paths exist to shrink. ``mix_fn`` may be a
+    SCHEDULED mixer (``topology.halo.make_scheduled_halo_mix``): the
+    lowered step then binds the mixing blocks by the carried
+    ``state.step`` and ``S`` is the (unused) static stand-in."""
     from repro.sharding.surf_rules import (agent_sharding, replicated,
                                            train_state_shardings)
     rep = replicated(mesh)
@@ -70,9 +72,13 @@ def lower_surf_step(multi_pod: bool = False, cfg=DRYRUN, ring: bool = False,
     θ-gradient all-reduces that dominate meta-training.
 
     ``mix``: None (dense S @ W), "ring" (circulant ``ppermute`` filter,
-    ring topologies only; ``ring=True`` is the legacy spelling) or
-    "halo" (``topology.halo`` block-sparse exchange — works for ANY
-    topology in the config, the scenario the ring path could not cover).
+    ring topologies only; ``ring=True`` is the legacy spelling), "halo"
+    (``topology.halo`` block-sparse exchange — works for ANY topology in
+    the config, the scenario the ring path could not cover) or
+    "halo-sched" (the TIME-VARYING composition: a link-failure schedule
+    over the config's base graph lowered through the scheduled halo
+    mixer — the step binds per-step coefficient blocks by the carried
+    ``state.step`` and keeps the ppermute exchange under time variation).
     """
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "2x16x16" if multi_pod else "16x16"
@@ -95,12 +101,20 @@ def lower_surf_step(multi_pod: bool = False, cfg=DRYRUN, ring: bool = False,
         elif mix == "halo":
             from repro.topology.halo import make_halo_mix
             mix_fn = make_halo_mix(mesh, "data", np.asarray(S))
+        elif mix == "halo-sched":
+            from repro.topology.halo import make_scheduled_halo_mix
+            from repro.topology.schedule import link_failure_schedule
+            sch = link_failure_schedule(A, 50, p_fail=0.2, seed=0)
+            mix_fn = make_scheduled_halo_mix(mesh, "data", sch)
         elif mix is not None:
-            raise ValueError(f"mix must be None|'ring'|'halo', got {mix!r}")
+            raise ValueError(f"mix must be None|'ring'|'halo'|"
+                             f"'halo-sched', got {mix!r}")
         if infer:
             from repro.core import unroll as U
 
             def step_fn(state, batch, key):
+                mf = (mix_fn.at_step(state.step)
+                      if getattr(mix_fn, "scheduled", False) else mix_fn)
                 kw, kb = jax.random.split(key)
                 W0 = U.sample_w0(kw, cfg)
                 Xl, Yl = U.sample_layer_batches(kb, batch["Xtr"],
@@ -109,7 +123,7 @@ def lower_surf_step(multi_pod: bool = False, cfg=DRYRUN, ring: bool = False,
                 def body(W, xs):
                     p_l, Xb, Yb = xs
                     return U.udgd_layer(p_l, S, W, Xb, Yb, cfg,
-                                        mix_fn=mix_fn), None
+                                        mix_fn=mf), None
                 W_L, _ = jax.lax.scan(body, W0, (state.theta, Xl, Yl))
                 return state, jnp.mean(W_L)
         else:

@@ -1,6 +1,6 @@
 """NamedSharding rules for the SURF meta-training/evaluation engines.
 
-The scan engine (``core.trainer.make_train_scan``) is one jitted
+The scan engine (``repro.engine.make_train_scan``) is one jitted
 computation, so the whole sharding story is three input specs:
 
   * ``TrainState`` (θ / λ / opt state) — REPLICATED. θ is the shared
@@ -25,7 +25,7 @@ Every rule degrades to replication when the dim doesn't divide the axis
 indivisible Q both lower without error.
 
 ``mesh_fingerprint`` is the hashable mesh identity used by the engine
-caches in ``core.trainer`` / ``core.surf`` — two jitted engines may only
+caches in ``repro.engine`` / ``core.surf`` — two jitted engines may only
 share an executable when (axis names, axis sizes, device ids, platform)
 all agree.
 """
@@ -136,17 +136,43 @@ def stacked_sharded_flags(stacked, n_agents: int):
 def train_scan_shardings(mesh: Mesh, n_agents: int | None = None,
                          axis: str = "data", stacked=None):
     """(in_shardings, out_shardings) for the scan engine's
-    ``run_s(state, stacked, key, S)`` dynamic arguments (``steps`` is
-    static): state/key/S replicated, stacked agent-axis-sharded; outputs
-    (state, metrics) replicated. The S slot covers both a static (n, n)
-    matrix and a stacked (T, n, n) ``TopologySchedule`` array — both
-    replicate (``schedule_sharding``). With ``stacked`` given, the dataset
-    entry is the leaf-aware tree from ``stacked_shardings_tree``;
-    otherwise a pytree-prefix spec (only safe for flat Xtr/Ytr/Xte/Yte
-    dicts whose every leaf has the agent axis at dim 1)."""
+    ``run_s(state, stacked, key, S, eval_stacked, S_eval)`` dynamic
+    arguments (``steps`` is static): state/key/S replicated, stacked
+    agent-axis-sharded, the snapshot args (held-out eval pool + nominal
+    S_eval — empty pytrees when ``eval_every`` is off) replicated;
+    outputs (state, metrics, snaps) replicated. The S slot covers both a
+    static (n, n) matrix and a stacked (T, n, n) ``TopologySchedule``
+    array — both replicate (``schedule_sharding``). With ``stacked``
+    given, the dataset entry is the leaf-aware tree from
+    ``stacked_shardings_tree``; otherwise a pytree-prefix spec (only safe
+    for flat Xtr/Ytr/Xte/Yte dicts whose every leaf has the agent axis at
+    dim 1)."""
     rep = replicated(mesh)
     if stacked is None:
         stacked_sh = stacked_agent_sharding(mesh, n_agents, axis)
     else:
         stacked_sh = stacked_shardings_tree(stacked, mesh, n_agents, axis)
-    return (rep, stacked_sh, rep, rep), (rep, rep)
+    return (rep, stacked_sh, rep, rep, rep, rep), (rep, rep, rep)
+
+
+def seed_sharding(mesh: Mesh, n_seeds: int | None = None,
+                  axis: str = "data") -> NamedSharding:
+    """Leading SEED axis (dim 0) over ``axis`` — the seed-batched train
+    engine's per-seed spec (``engine.seeds``), usable as a pytree prefix:
+    every per-seed leaf (TrainState stacks, key batch, S/schedule stacks,
+    (n_seeds, steps) metrics) carries n_seeds at dim 0 and trailing dims
+    replicate. Seeds are embarrassingly parallel, so this shards the
+    whole training computation with zero hot-loop collectives."""
+    return NamedSharding(mesh, _dim_spec(n_seeds, mesh, axis, 0))
+
+
+def seed_scan_shardings(mesh: Mesh, n_seeds: int | None = None,
+                        axis: str = "data"):
+    """(in_shardings, out_shardings) for the seed-batched engine's
+    ``run_s(states, stacked, keys, S_stack, eval_stacked, S_eval_stack)``
+    dynamic arguments (``steps`` is static): per-seed stacks seed-axis-
+    sharded, the SHARED dataset pools replicated; outputs (states,
+    metrics, snaps) keep the seed axis sharded."""
+    seed = seed_sharding(mesh, n_seeds, axis)
+    rep = replicated(mesh)
+    return (seed, rep, seed, seed, rep, seed), (seed, seed, seed)

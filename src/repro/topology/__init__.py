@@ -14,9 +14,13 @@ mix beyond circulant rings"):
     failures, Markov link switching, agent dropout, ring→random anneals.
   * ``halo`` — a ``shard_map`` block-sparse ``mix_fn`` generalizing the
     circulant-ring ``ppermute`` filter of ``core.ring`` to ANY mixing
-    matrix via per-shard-offset neighbor halo exchanges.
+    matrix via per-shard-offset neighbor halo exchanges; schedules whose
+    union support stays banded compose with it through
+    ``make_scheduled_halo_mix`` (time-constant plan, stacked per-offset
+    blocks selected by the carried step inside the jitted scan).
 """
 from repro.topology import families, halo, schedule  # noqa: F401
 from repro.topology.families import build_topology  # noqa: F401
-from repro.topology.halo import make_halo_mix  # noqa: F401
+from repro.topology.halo import (  # noqa: F401
+    make_halo_mix, make_scheduled_halo_mix)
 from repro.topology.schedule import TopologySchedule  # noqa: F401

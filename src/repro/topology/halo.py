@@ -29,10 +29,21 @@ The returned ``mix_fn(W, h)`` applies the K-tap Horner filter
 Σ_k h_k S^k W with one halo exchange per mixing round and carries a
 hashable ``.tag`` — ``("halo", axis, n, nshards, content-hash-of-S,
 mesh-fingerprint)`` — for the compiled-engine caches in
-``core.trainer`` / ``core.surf`` (S's VALUES are baked into the
+``repro.engine`` / ``core.surf`` (S's VALUES are baked into the
 closure, so the tag must identify them: a content hash, not a family
-name). Time-varying schedules (``topology.schedule``) use the dense
-path instead — a halo mixer bakes one static S.
+name).
+
+Time-varying schedules (``topology.schedule``) whose halo plan is
+TIME-CONSTANT — the offset/row structure of the UNION support
+``∪_t supp(S_t)`` — ride the same exchange via
+``make_scheduled_halo_mix``: the per-offset coefficient blocks are
+stacked over T, threaded through the jitted scan as device arrays, and
+the engine binds step t's blocks with ``mix.at_step(state.step)``.
+Link-failure / Markov / dropout schedules never ADD edges to their base
+graph, so their union is the base topology and a banded base keeps its
+ppermute collective-bytes savings under time variation; only schedules
+whose union densifies (e.g. a ring→random anneal) should fall back to
+the dense ``S_t @ W`` path.
 """
 from __future__ import annotations
 
@@ -132,3 +143,109 @@ def make_halo_mix(mesh, axis: str, S, *, tag=None):
     mix_fn.tag = tag
     mix_fn.plan = (S0, plans)
     return mix_fn
+
+
+def scheduled_halo_plan(S_stack, nshards):
+    """Time-constant exchange plan for a stacked (T, n, n) schedule: the
+    offset/row structure of the UNION support ``∪_t supp(S_t)``, with
+    per-step coefficient blocks restricted to the union's row sets.
+
+    Returns ``(S0_t, plans)``: ``S0_t`` (T, nshards, nl, nl) is the
+    block-diagonal part per step; ``plans`` is a list of
+    ``(delta, rows, Sd_t)`` per offset active ANYWHERE in the schedule,
+    ``Sd_t`` (T, nshards, nl, len(rows)). Every ppermute carries the
+    union rows at every step — a step whose S_t doesn't reference some
+    row just multiplies it by zero — so the plan (and the traced
+    computation) is identical across t."""
+    S_stack = np.asarray(S_stack, np.float32)
+    assert S_stack.ndim == 3 and S_stack.shape[1] == S_stack.shape[2], \
+        "S_stack must be (T, n, n)"
+    T, n, _ = S_stack.shape
+    assert n % nshards == 0, f"n={n} must divide over {nshards} shards"
+    nl = n // nshards
+    union = (S_stack != 0.0).any(axis=0).astype(np.float32)
+    _, plans_u = halo_plan(union, nshards)
+    blocks = (S_stack.reshape(T, nshards, nl, nshards, nl)
+              .transpose(0, 1, 3, 2, 4))        # (T, a, b, nl, nl)
+    a = np.arange(nshards)
+    S0_t = blocks[:, a, a]                      # (T, nshards, nl, nl)
+    plans = []
+    for delta, rows, _ in plans_u:
+        blk = blocks[:, a, (a + delta) % nshards]   # (T, nshards, nl, nl)
+        plans.append((delta, rows, np.ascontiguousarray(blk[:, :, :, rows])))
+    return S0_t, plans
+
+
+class ScheduledHaloMix:
+    """Halo mixer for a time-constant-plan schedule: ``at_step(t)``
+    returns the step-``t % T`` graph filter ``mix_fn(W, h)`` by
+    dynamically indexing the stacked per-offset blocks — usable inside a
+    jitted scan with a TRACED ``t`` (the engine passes the carried
+    ``state.step``, so checkpoint-restored runs resume the exact mixing
+    stream). ``scheduled``/``steps``/``tag`` are the engine protocol:
+    ``repro.engine`` re-binds the mixer every meta-step instead of
+    rejecting it the way it rejects static mixers under a schedule."""
+
+    scheduled = True
+
+    def __init__(self, mesh, axis, S_stack, *, tag=None):
+        S_stack = np.asarray(S_stack, np.float32)
+        T, n, _ = S_stack.shape
+        nshards = int(mesh.shape[axis])
+        S0_t, plans = scheduled_halo_plan(S_stack, nshards)
+        perms = [[(j, (j - delta) % nshards) for j in range(nshards)]
+                 for delta, _, _ in plans]
+        row_sets = [rows for _, rows, _ in plans]
+        self._S0 = jnp.asarray(S0_t)            # (T, nshards, nl, nl)
+        self._Sd = tuple(jnp.asarray(Sd) for _, _, Sd in plans)
+
+        def apply_S(Y, S0_loc, Sd_locs):
+            out = S0_loc[0] @ Y
+            for rows, perm, Sd in zip(row_sets, perms, Sd_locs):
+                recv = jax.lax.ppermute(Y[rows], axis, perm)
+                out = out + Sd[0] @ recv
+            return out
+
+        def filter_local(W_loc, h, S0_loc, Sd_locs):
+            K = h.shape[0] - 1
+            Y = h[K] * W_loc
+            for k in range(K - 1, -1, -1):
+                Y = apply_S(Y, S0_loc, Sd_locs) + h[k] * W_loc
+            return Y
+
+        self._smapped = _shard_map(
+            filter_local, mesh=mesh,
+            in_specs=(P(axis), P(), P(axis), tuple(P(axis) for _ in plans)),
+            out_specs=P(axis))
+        self.steps = T
+        self.plan = (S0_t, plans)
+        # content identity of the schedule the blocks were built from —
+        # the engine refuses a (schedule, mixer) pair whose digests
+        # disagree (same guard as rejecting static mixers under a
+        # schedule, but for the right-shape-wrong-values case)
+        self.schedule_digest = hashlib.sha256(
+            S_stack.tobytes()).hexdigest()[:16]
+        if tag is None:
+            from repro.sharding.surf_rules import mesh_fingerprint
+            tag = ("halo-sched", axis, n, T, nshards,
+                   self.schedule_digest, mesh_fingerprint(mesh))
+        self.tag = tag
+
+    def at_step(self, t):
+        """The graph filter for meta-step ``t`` (cycling mod T) — ``t``
+        may be a traced scalar (the carried ``state.step``)."""
+        ti = t % self.steps
+        S0 = jax.lax.dynamic_index_in_dim(self._S0, ti, 0, keepdims=False)
+        Sds = tuple(jax.lax.dynamic_index_in_dim(Sd, ti, 0, keepdims=False)
+                    for Sd in self._Sd)
+        return lambda W, h: self._smapped(W, h, S0, Sds)
+
+
+def make_scheduled_halo_mix(mesh, axis: str, schedule, *, tag=None):
+    """Build the time-constant-plan halo mixer for a
+    ``topology.schedule.TopologySchedule`` (or a raw (T, n, n) stack):
+    pass it as ``mix_fn`` TOGETHER with the schedule to
+    ``engine.make_train_scan`` and time-varying training keeps the
+    ppermute exchange instead of the dense ``S_t @ W`` fallback."""
+    S_stack = schedule.S if hasattr(schedule, "S") else schedule
+    return ScheduledHaloMix(mesh, axis, S_stack, tag=tag)

@@ -3,7 +3,7 @@ topology subsystem.
 
 A ``TopologySchedule`` is a stacked ``(T, n, n)`` float32 array of
 mixing matrices plus a hashable ``tag``. The scan engine
-(``core.trainer.make_train_scan``) accepts a schedule wherever it
+(``repro.engine.make_train_scan``) accepts a schedule wherever it
 accepts a static ``S``: the stack is threaded through the jitted scan
 as a device argument and the body selects ``S[state.step % T]`` every
 meta-step — the topology changes each iteration inside ONE compiled
@@ -33,7 +33,10 @@ self-weight 1 and simply holds its value):
 Memory: T=1000 at the paper's n=100 is a 40 MB stack — fine device-side.
 Schedules compose with the DENSE mixing path (S_t @ W inside the jitted
 scan, sharded or not); the static halo/ring ``mix_fn`` path bakes one S
-and is rejected in combination with a schedule (see ``core.trainer``).
+and is rejected in combination with a schedule (see ``repro.engine``)
+— unless it is a SCHEDULED halo mixer built from the same schedule
+(``topology.halo.make_scheduled_halo_mix``), which keeps the ppermute
+exchange under time variation.
 """
 from __future__ import annotations
 

@@ -9,7 +9,7 @@ import pytest
 
 from repro.configs.surf_paper import SMOKE
 from repro.core import surf
-from repro.core import trainer as TR
+from repro import engine as TR
 from repro.data import synthetic
 from repro.data.pipeline import stack_meta_datasets
 

@@ -17,7 +17,7 @@ import pytest
 from repro.configs.base import SURFConfig
 from repro.configs.surf_paper import SMOKE
 from repro.core import surf
-from repro.core import trainer as TR
+from repro import engine as TR
 from repro.core.ring import dense_equivalent, make_ring_mix
 from repro.core.unroll import graph_filter
 from repro.data import synthetic

@@ -9,7 +9,7 @@ from repro.core import constraints as C
 from repro.core import graph as G
 from repro.core import surf
 from repro.core import task as T
-from repro.core import trainer as TR
+from repro import engine as TR
 from repro.core import unroll as U
 from repro.data import synthetic
 

@@ -13,7 +13,7 @@ import pytest
 from repro.checkpoint import io as ckpt
 from repro.configs.surf_paper import SMOKE
 from repro.core import surf
-from repro.core import trainer as TR
+from repro import engine as TR
 from repro.core.unroll import graph_filter
 from repro.data import synthetic
 from repro.data.pipeline import stack_meta_datasets
@@ -281,7 +281,7 @@ def test_checkpoint_roundtrip_resumes_at_correct_schedule_step(tmp_path):
     restored = ckpt.restore(path, template)
     assert int(restored.step) == 10
     run = TR.make_train_scan(cfg, sch)
-    resumed, _ = run(restored, stacked, key, 10)
+    resumed, _, _ = run(restored, stacked, key, 10)
     assert int(resumed.step) == 20
     for a, b in zip(jax.tree_util.tree_leaves(ref),
                     jax.tree_util.tree_leaves(resumed)):
