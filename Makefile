@@ -3,7 +3,9 @@
 #   make test-fast    — the <1 min lane: deselects @pytest.mark.slow tests
 #   make test-sharded — the fast lane on 8 SIMULATED host devices: the ring
 #                       ppermute / agent-axis-sharded engine paths run with
-#                       nshards > 1 (they skip on a 1-device run)
+#                       nshards > 1 (they skip on a 1-device run), including
+#                       the 2-D (seed=2, agent=4) and (seed=4, agent=2)
+#                       make_surf_mesh shapes of tests/test_mesh2d.py
 #   make bench        — SURF paper-figure benchmark battery (slow)
 #   make bench-scan   — scan-engine perf tracking: BENCH_scan_engine.json
 #   make bench-topology — dense/ring/halo mixing across graph families:
@@ -12,11 +14,16 @@
 #                       scheduled run traces meta_step exactly once and
 #                       the scheduled-halo path moves fewer collective
 #                       bytes than dense S_t @ W: BENCH_engine.json
+#   make bench-mesh2d — 2-D mesh smoke: ASSERTS a seed-batched scheduled-
+#                       HALO run on a (seed=2, agent=4) mesh traces
+#                       meta_step exactly once and the halo exchange under
+#                       the seed vmap moves fewer collective bytes than
+#                       the dense per-lane S_i @ W: BENCH_mesh2d.json
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-fast test-sharded bench bench-scan bench-topology \
-	bench-engine
+	bench-engine bench-mesh2d
 
 test:
 	$(PY) -m pytest -x -q
@@ -39,3 +46,6 @@ bench-topology:
 
 bench-engine:
 	sh scripts/bench.sh engine
+
+bench-mesh2d:
+	sh scripts/bench.sh mesh2d

@@ -1,0 +1,156 @@
+"""2-D (seed × agent) mesh perf tracking + smoke assertions
+(``make bench-mesh2d`` / ``scripts/bench.sh mesh2d``), as machine-
+readable JSON (``bench_out/BENCH_mesh2d.json``).
+
+Two claims of the composed axis system, measured and ASSERTED on a
+(seed=2, agent=4) ``launch.mesh.make_surf_mesh`` mesh over 8 simulated
+host devices:
+
+  1. trace-count == 1 — a seed-batched (n_seeds=4) run under per-seed
+     link-failure schedules routed through the SCHEDULED seed-batched
+     halo mixer (``topology.halo.make_seed_halo_mix`` via
+     ``train_surf(mix="halo")``) traces ``meta_step`` exactly once: one
+     compiled executable delivers seed parallelism AND the agent-axis
+     ppermute exchange. First-call vs warm whole-run seconds are
+     recorded for cross-PR tracking.
+  2. halo collective bytes < dense — the per-meta-step collective
+     traffic of the halo exchange UNDER THE SEED VMAP
+     (``launch.surf_dryrun.seed_meta_step_collective_bytes``) is
+     strictly below the dense per-lane ``S_i @ W`` path on the same
+     mesh, and lowers to real collective-permutes.
+
+Run via ``scripts/bench.sh mesh2d`` (sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import OUT_DIR
+from repro import engine as E
+from repro.configs.base import SURFConfig
+from repro.core import surf
+from repro.launch.mesh import host_device_count, make_surf_mesh
+from repro.launch.surf_dryrun import seed_meta_step_collective_bytes
+from repro.sharding.surf_rules import mesh_fingerprint
+from repro.topology.halo import halo_exchange_rows, make_seed_halo_mix
+from repro.data import synthetic
+
+CFG = SURFConfig(n_agents=32, n_layers=4, filter_taps=2, feature_dim=16,
+                 n_classes=8, batch_per_agent=6, train_per_agent=12,
+                 test_per_agent=6, eps=0.05, topology="ring", degree=2)
+STEPS = 50
+META_Q = 8
+EVAL_Q = 4
+SEEDS = (0, 1, 2, 3)
+EVAL_EVERY = 10
+SEED_SHARDS, AGENT_SHARDS = 2, 4
+
+
+def bench_2d_scheduled_halo(mesh):
+    """One executable on the 2-D mesh: n_seeds=4 × per-seed link-failure
+    schedules × scheduled seed-batched halo mixing × in-scan snapshots.
+    Asserts meta_step traced exactly once."""
+    mds = synthetic.make_meta_dataset(CFG, META_Q, seed=0)
+    eval_ds = synthetic.make_meta_dataset(CFG, EVAL_Q, seed=777)
+    E.TRACE_COUNTS["meta_step"] = 0
+    t0 = time.perf_counter()
+    states, hist, snaps, S_stack = surf.train_surf(
+        CFG, mds, steps=STEPS, seeds=SEEDS, scenario="link-failure",
+        log_every=STEPS, eval_every=EVAL_EVERY, eval_datasets=eval_ds,
+        mesh=mesh, mix="halo")
+    jax.block_until_ready(states.theta)
+    first_call_s = time.perf_counter() - t0
+    traces = E.TRACE_COUNTS["meta_step"]
+    assert traces == 1, \
+        f"2-D scheduled-halo engine traced meta_step {traces}x, not 1"
+    assert snaps and snaps[-1]["final_acc"].shape == (len(SEEDS),)
+
+    # warm re-run through the cached engine (no retrace)
+    t0 = time.perf_counter()
+    iters = 3
+    for _ in range(iters):
+        out = surf.train_surf(
+            CFG, mds, steps=STEPS, seeds=SEEDS, scenario="link-failure",
+            log_every=STEPS, eval_every=EVAL_EVERY, eval_datasets=eval_ds,
+            mesh=mesh, mix="halo")
+        jax.block_until_ready(out[0].theta)
+    warm_run_s = (time.perf_counter() - t0) / iters
+    assert E.TRACE_COUNTS["meta_step"] == 1, "warm rerun retraced"
+    rec = {"engine_variant": "seeds+schedule+halo2d+snapshots",
+           "n_seeds": len(SEEDS), "schedule_T": STEPS,
+           "eval_every": EVAL_EVERY, "steps": STEPS,
+           "meta_step_traces": traces,
+           "first_call_s": round(first_call_s, 3),
+           "warm_run_s": round(warm_run_s, 4),
+           "warm_step_us": round(warm_run_s / STEPS * 1e6, 1),
+           "snapshots": len(snaps),
+           "final_test_acc_per_seed":
+               [round(float(a), 4) for a in hist[-1]["test_acc"]]}
+    print(f"2-D scheduled halo: traces={traces} "
+          f"first={rec['first_call_s']:.3f}s "
+          f"warm_step={rec['warm_step_us']:.1f}us "
+          f"snapshots={len(snaps)}")
+    return rec
+
+
+def bench_2d_halo_bytes(mesh):
+    """Collective bytes per meta-step UNDER THE SEED VMAP: dense
+    per-lane S_i @ W vs the seed-batched halo exchange. Asserts the
+    halo path moves strictly fewer bytes."""
+    S_stack = jnp.stack([surf.make_problem(CFG, s)[1] for s in SEEDS])
+    dense, _ = seed_meta_step_collective_bytes(CFG, S_stack, mesh)
+    mix = make_seed_halo_mix(mesh, "agent", np.asarray(S_stack))
+    halo, by_kind = seed_meta_step_collective_bytes(CFG, S_stack, mesh,
+                                                    mix_fn=mix)
+    assert halo < dense, \
+        f"2-D halo bytes {halo} !< dense bytes {dense}"
+    assert by_kind.get("collective-permute", 0) > 0
+    rec = {"engine_variant": "seed-vmap-halo",
+           "halo_plan": {"active_offsets": len(mix.plan[1]),
+                         "rows_per_round":
+                             int(halo_exchange_rows(mix.plan[1]))},
+           "dense_collective_bytes_per_meta_step": dense,
+           "halo_collective_bytes_per_meta_step": halo,
+           "halo_vs_dense_collective_ratio":
+               round(halo / dense, 4) if dense else None,
+           "collectives_by_kind": by_kind}
+    print(f"2-D halo: bytes/step {halo} vs dense {dense} "
+          f"(x{rec['halo_vs_dense_collective_ratio']})")
+    return rec
+
+
+def main():
+    ndev = host_device_count()
+    assert ndev >= SEED_SHARDS * AGENT_SHARDS, \
+        f"mesh2d bench needs {SEED_SHARDS * AGENT_SHARDS} devices, " \
+        f"got {ndev} (run via scripts/bench.sh mesh2d)"
+    mesh = make_surf_mesh(SEED_SHARDS, AGENT_SHARDS,
+                          n_seeds=len(SEEDS), n_agents=CFG.n_agents)
+    print(f"mesh2d bench: {ndev} devices, mesh "
+          f"(seed={SEED_SHARDS}, agent={AGENT_SHARDS}), "
+          f"n={CFG.n_agents} L={CFG.n_layers} seeds={len(SEEDS)}")
+    out = {"devices": ndev,
+           "mesh_shape": {"seed": SEED_SHARDS, "agent": AGENT_SHARDS},
+           "engine": "repro.engine.seeds+halo2d",
+           "n_seeds": len(SEEDS),
+           "mesh_fingerprint": mesh_fingerprint(mesh),
+           "config": dataclasses.asdict(CFG),
+           "scheduled_halo_2d": bench_2d_scheduled_halo(mesh),
+           "halo_bytes_2d": bench_2d_halo_bytes(mesh)}
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "BENCH_mesh2d.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,11 @@
 #                              # scheduled run traces meta_step ONCE
 #                              # (asserted) + scheduled-halo collective
 #                              # bytes -> bench_out/BENCH_engine.json
+#   scripts/bench.sh mesh2d    # 2-D (seed=2, agent=4) mesh smoke:
+#                              # seed-batched scheduled-HALO run traces
+#                              # meta_step ONCE (asserted) + halo bytes
+#                              # under the seed vmap < dense (asserted)
+#                              # -> bench_out/BENCH_mesh2d.json
 #   scripts/bench.sh all       # full paper-figure battery (benchmarks.run)
 set -e
 cd "$(dirname "$0")/.."
@@ -24,9 +29,12 @@ case "${1:-scan}" in
   engine)
     export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
     exec python -m benchmarks.engine_bench ;;
+  mesh2d)
+    export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+    exec python -m benchmarks.mesh2d_bench ;;
   all)
     exec python -m benchmarks.run ;;
   *)
-    echo "usage: scripts/bench.sh [scan|topology|engine|all]" >&2
+    echo "usage: scripts/bench.sh [scan|topology|engine|mesh2d|all]" >&2
     exit 2 ;;
 esac

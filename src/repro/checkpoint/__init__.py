@@ -1,3 +1,4 @@
-from repro.checkpoint.io import save, restore, latest_step
+from repro.checkpoint.io import (save, restore, latest_step,
+                                 state_save_callback)
 
-__all__ = ["save", "restore", "latest_step"]
+__all__ = ["save", "restore", "latest_step", "state_save_callback"]

@@ -99,6 +99,22 @@ def restore(path, like, *, shardings=None):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def state_save_callback(directory, prefix="ckpt_"):
+    """Host-side target for PERIODIC IN-SCAN checkpointing: the scan
+    engine's ``lax.cond`` cadence fires a ``jax.experimental.io_callback``
+    that hands the carried ``TrainState`` (numpy leaves, structure
+    preserved) to this function, which writes the exact
+    ``<directory>/<prefix><step>`` payload ``engine.resume.save_state``
+    would — so ``engine.resume.restore_state`` / ``resume_train_scan``
+    resume from an in-scan checkpoint bit-exactly, no manual split-run
+    checkpointing needed. The step key is read off the state's own
+    carried ``step`` field."""
+    def cb(state):
+        step = int(np.asarray(state.step))
+        save(os.path.join(directory, f"{prefix}{step}"), state, step=step)
+    return cb
+
+
 def latest_step(directory, prefix="ckpt_"):
     """Highest checkpoint step under ``directory``, or None when the
     directory is missing, empty, or holds no parseable checkpoints

@@ -10,6 +10,14 @@ byte (O(hops·d) per mixing round vs the dense path's O(n·d/P)
 all-gather) while also covering arbitrary banded / partition-local S.
 This module keeps the ring-specific constructor and its stable
 ``("ring", ...)`` cache tag.
+
+The shard-mapped plan is shared with every halo mixer
+(``topology.halo._halo_filter_smapped``), so a ring mixer built with
+``axis="agent"`` on a 2-D ``('seed', 'agent')``
+``launch.mesh.make_surf_mesh`` permutes over the AGENT sub-axis and
+composes under the seed-batched engine's ``spmd_axis_name='seed'`` vmap
+exactly like ``make_seed_halo_mix``; the legacy ``axis="data"`` 1-D
+meshes are the degenerate agent-only case.
 """
 from __future__ import annotations
 

@@ -70,11 +70,54 @@ def make_scenario(cfg: SURFConfig, scenario, steps, seed=0, *,
     raise ValueError(f"unknown scenario {scenario!r}; one of {SCENARIOS}")
 
 
+MIXES = (None, "dense", "ring", "halo")
+
+
+def _resolve_mix(mix, mesh, cfg, *, S=None, schedule=None, S_stack=None):
+    """Build the ``mix_fn`` named by a ``mix=`` string against the run's
+    actual topology stack and the mesh's AGENT-role axis — exactly one of
+    ``S`` (single-seed static), ``schedule`` (single-seed time-varying)
+    or ``S_stack`` (seed-batched, static (n_seeds, n, n) or schedule
+    (n_seeds, T, n, n)) describes the run."""
+    if mix in (None, "dense"):
+        return None
+    if mix not in MIXES:
+        raise ValueError(f"mix must be one of {MIXES}, got {mix!r}")
+    if mesh is None:
+        raise ValueError(
+            f"mix={mix!r} needs mesh= (the mesh whose agent axis the "
+            "ppermute exchange runs over — launch.mesh.make_surf_mesh)")
+    from repro.sharding.surf_rules import axis_for_role
+    axis = axis_for_role(mesh, "agent")
+    if mix == "ring":
+        if cfg.topology != "ring":
+            raise ValueError("mix='ring' needs cfg.topology='ring' (the "
+                             "circulant special case); use mix='halo' "
+                             "for arbitrary topologies")
+        if schedule is not None or S_stack is not None:
+            raise ValueError("mix='ring' bakes one static circulant — "
+                             "use mix='halo' for schedules or "
+                             "seed-batched runs")
+        from repro.core.ring import make_ring_mix
+        return make_ring_mix(mesh, axis, cfg.n_agents,
+                             max(1, cfg.degree // 2))
+    from repro.topology.halo import (make_halo_mix, make_scheduled_halo_mix,
+                                     make_seed_halo_mix)
+    if S_stack is not None:
+        # pass the stack OBJECT through: the mixer weakrefs it, so the
+        # engine's content-digest guard short-circuits on identity
+        # instead of re-hashing the full per-seed stack
+        return make_seed_halo_mix(mesh, axis, S_stack)
+    if schedule is not None:
+        return make_scheduled_halo_mix(mesh, axis, schedule)
+    return make_halo_mix(mesh, axis, np.asarray(S))
+
+
 def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
                constrained=True, activation="relu", log_every=10,
-               init="dgd", engine="scan", mix_fn=None, mesh=None,
+               init="dgd", engine="scan", mix_fn=None, mix=None, mesh=None,
                scenario=None, schedule=None, seeds=None, eval_every=0,
-               eval_datasets=None):
+               eval_datasets=None, checkpoint_every=0, checkpoint_dir=None):
     """Meta-train U-DGD on the config's topology. ``scenario`` (a name
     from ``SCENARIOS``) or ``schedule`` (an explicit
     ``TopologySchedule``) trains under TIME-VARYING graphs — the
@@ -87,13 +130,30 @@ def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
     own init/RNG/topology (and its own per-seed perturbation stream
     under a scenario); the returned state/history/S gain a leading
     (n_seeds,) axis and row i matches the sequential ``seed=seeds[i]``
-    run. ``mesh`` then shards the SEED axis (dense mixing only).
+    run. ``mesh`` shards the SEED role; on a 2-D ('seed', 'agent') mesh
+    (``launch.mesh.make_surf_mesh``) ``mix="halo"`` additionally routes
+    mixing through the halo ``ppermute`` exchange over the agent
+    sub-axis — both axes from one compiled scan.
+
+    ``mix``: convenience string building the right mixer for the run —
+    "dense"/None (matmul path), "ring" (circulant ``ppermute``,
+    single-seed static ring only) or "halo" (block-sparse exchange;
+    composes with schedules via the scheduled mixer and with ``seeds``
+    via the seed-batched mixer). Mutually exclusive with an explicit
+    ``mix_fn``.
 
     ``eval_every``: fold held-out evaluation snapshots into the scan
     every that many meta-steps (``engine.snapshots``; needs
     ``eval_datasets``, evaluated against the NOMINAL static S). Adds a
     ``snapshots`` list to the return:
-    (state, hist, snapshots, S) / (states, hist, snapshots, S_stack)."""
+    (state, hist, snapshots, S) / (states, hist, snapshots, S_stack).
+
+    ``checkpoint_every``/``checkpoint_dir``: PERIODIC in-scan
+    checkpointing (single-seed scan engine) — the carried state is
+    written as ``ckpt_<step>`` at the cadence via an ``io_callback``
+    without leaving the compiled scan, and
+    ``engine.resume.resume_train_scan`` restores from those checkpoints
+    bit-exactly."""
     if engine not in ("scan", "python"):
         raise ValueError(f"engine must be 'scan' or 'python', got {engine!r}")
     if mesh is not None and engine != "scan":
@@ -102,6 +162,12 @@ def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
     if scenario is not None and schedule is not None:
         raise ValueError("pass either scenario= (a name) or schedule= "
                          "(an explicit TopologySchedule), not both")
+    if mix is not None and mix_fn is not None:
+        raise ValueError("pass either mix= (a name the right mixer is "
+                         "built from) or mix_fn= (an explicit mixer), "
+                         "not both")
+    if mix is not None and mix not in MIXES:
+        raise ValueError(f"mix must be one of {MIXES}, got {mix!r}")
     if eval_every:
         if engine != "scan":
             raise ValueError("eval_every (in-scan snapshots) requires "
@@ -109,6 +175,19 @@ def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
         if eval_datasets is None:
             raise ValueError("eval_every > 0 needs eval_datasets (the "
                              "held-out snapshot pool)")
+    if checkpoint_every:
+        if engine != "scan":
+            raise ValueError("checkpoint_every (periodic in-scan "
+                             "checkpointing) requires engine='scan'")
+        if not checkpoint_dir:
+            raise ValueError("checkpoint_every > 0 needs checkpoint_dir")
+        if seeds is not None:
+            raise ValueError(
+                "checkpoint_every is single-seed: the stacked per-seed "
+                "TrainState has no scalar step to key ckpt_<step> files "
+                "by — checkpoint per-seed runs individually, or slice "
+                "rows out with engine.seeds.state_for_seed and save "
+                "them via engine.resume.save_state")
     if seeds is not None:
         if engine != "scan":
             raise ValueError("seed batching requires engine='scan'")
@@ -117,11 +196,13 @@ def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
                 "pass either seed= (one run) or seeds= (a seed-batched "
                 "run), not both — the batch defines every per-seed "
                 "init/topology/RNG stream")
-        if mix_fn is not None:
+        if mix_fn is not None and not getattr(mix_fn, "seed_batched",
+                                              False):
             raise ValueError(
-                "seed-batched training uses the dense mixing path (a "
-                "static mix_fn bakes one topology; mesh= shards the seed "
-                "axis instead)")
+                "seed-batched training needs a SEED-BATCHED mixer "
+                "(topology.halo.make_seed_halo_mix / mix='halo') or the "
+                "dense path — a static mix_fn bakes one topology and "
+                "would silently override the per-seed S_i stream")
         seed_list = [int(s) for s in seeds]
         S_stack = jnp.stack([make_problem(cfg, s)[1] for s in seed_list])
         if schedule is not None:
@@ -132,10 +213,12 @@ def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
                 [make_scenario(cfg, scenario, steps, s) for s in seed_list])
         else:
             S_train = S_stack
+        if mix is not None:
+            mix_fn = _resolve_mix(mix, mesh, cfg, S_stack=S_train)
         out = TR.train_scan_seeds(
             cfg, S_train, meta_datasets, steps, seed_list,
             constrained=constrained, activation=activation,
-            log_every=log_every, init=init, mesh=mesh,
+            log_every=log_every, init=init, mesh=mesh, mix_fn=mix_fn,
             eval_every=eval_every, eval_datasets=eval_datasets,
             S_eval_stack=S_stack if eval_every else None)
         return (*out, S_stack)
@@ -143,10 +226,14 @@ def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
     if schedule is None:
         schedule = make_scenario(cfg, scenario, steps, seed)
     S_train = schedule if schedule is not None else S
+    if mix is not None:
+        mix_fn = _resolve_mix(mix, mesh, cfg, S=S, schedule=schedule)
     key = jax.random.PRNGKey(seed)
     if engine == "scan":
         kw = {"mix_fn": mix_fn, "mesh": mesh, "eval_every": eval_every,
-              "eval_datasets": eval_datasets}
+              "eval_datasets": eval_datasets,
+              "checkpoint_every": checkpoint_every,
+              "checkpoint_dir": checkpoint_dir}
         if eval_every:
             kw["S_eval"] = S
     else:

@@ -22,7 +22,12 @@ A SCHEDULED mixer (``topology.halo.make_scheduled_halo_mix``, marked by
 ``.scheduled = True``) is selected per meta-step by the CARRIED
 ``state.step`` — ``mix_fn.at_step(state.step)`` returns the step-t filter
 — so banded time-varying schedules keep the ppermute collective-bytes
-savings instead of falling back to dense ``S_t @ W``.
+savings instead of falling back to dense ``S_t @ W``. A SEED-BATCHED
+mixer (``topology.halo.make_seed_halo_mix``, ``.seed_batched = True``)
+is bound per seed LANE: ``engine.seeds`` vmaps ``meta_step_s`` over its
+stacked per-seed blocks (the optional ``mix_blocks`` argument) with
+``spmd_axis_name='seed'``, so the halo ppermutes run over the agent
+sub-axis of a 2-D ('seed', 'agent') mesh while seeds stay sharded.
 """
 from __future__ import annotations
 
@@ -73,8 +78,10 @@ def _meta_step_core(cfg: SURFConfig, constrained, activation, star, mix_fn):
     opt = adam(cfg.lr_theta)
     use_star = cfg.topology == "star" if star is None else star
     layer_fn = U.udgd_layer_star if use_star else U.udgd_layer
-    scheduled = bool(getattr(mix_fn, "scheduled", False))
-    static_mix = None if scheduled else mix_fn
+    seed_batched = bool(getattr(mix_fn, "seed_batched", False))
+    scheduled = (bool(getattr(mix_fn, "scheduled", False))
+                 and not seed_batched)
+    static_mix = None if (scheduled or seed_batched) else mix_fn
 
     def _forward(S, theta, W0, Xl, Yl, mf):
         def body(W, xs):
@@ -85,12 +92,13 @@ def _meta_step_core(cfg: SURFConfig, constrained, activation, star, mix_fn):
         return W_L, jnp.concatenate([W0[None], Ws], axis=0)
 
     def forward_s(S, theta, W0, Xl, Yl):
-        if scheduled:
+        if scheduled or seed_batched:
             raise ValueError(
-                "forward_s has no step counter to bind a scheduled "
-                "mix_fn — pass mix_fn.at_step(t)'s filter through a "
-                "static builder, or use the meta step (which binds the "
-                "carried state.step)")
+                "forward_s has no step counter / seed lane to bind a "
+                "scheduled or seed-batched mix_fn — pass a statically "
+                "bound filter, or use the meta step (which binds the "
+                "carried state.step and, in engine.seeds, the lane's "
+                "blocks)")
         return _forward(S, theta, W0, Xl, Yl, static_mix)
 
     def lagrangian_fn(theta, lam, S, W0, Xl, Yl, Xte, Yte, mf):
@@ -101,10 +109,19 @@ def _meta_step_core(cfg: SURFConfig, constrained, activation, star, mix_fn):
         lag = C.lagrangian(test_loss, lam, slack) if constrained else test_loss
         return lag, (test_loss, slack, gnorms, W_L)
 
-    def meta_step_s(S, state: TrainState, batch, key):
-        """batch: dict with Xtr (n,m,F), Ytr (n,m), Xte (n,t,F), Yte (n,t)."""
+    def meta_step_s(S, state: TrainState, batch, key, mix_blocks=None):
+        """batch: dict with Xtr (n,m,F), Ytr (n,m), Xte (n,t,F), Yte (n,t).
+        ``mix_blocks``: ONE seed lane's coefficient blocks for a
+        seed-batched mixer — supplied by the engine-side vmap in
+        ``engine.seeds`` (in_axes=0 over ``mix_fn.blocks``), unused
+        otherwise."""
         TRACE_COUNTS["meta_step"] += 1
-        mf = mix_fn.at_step(state.step) if scheduled else mix_fn
+        if seed_batched:
+            mf = mix_fn.bind(mix_blocks, state.step)
+        elif scheduled:
+            mf = mix_fn.at_step(state.step)
+        else:
+            mf = mix_fn
         kw, kb = jax.random.split(key)
         W0 = U.sample_w0(kw, cfg)
         Xl, Yl = U.sample_layer_batches(kb, batch["Xtr"], batch["Ytr"], cfg)
@@ -125,6 +142,19 @@ def _meta_step_core(cfg: SURFConfig, constrained, activation, star, mix_fn):
         return TrainState(theta, lam, opt_state, state.step + 1), metrics
 
     return meta_step_s, forward_s
+
+
+def _reject_seed_batched_mix(mix_fn, where):
+    """Single-seed builders can't bind a seed-batched mixer (its blocks
+    are vmapped per lane by ``engine.seeds``) — point the caller at the
+    seed-batched engine instead."""
+    if getattr(mix_fn, "seed_batched", False):
+        raise ValueError(
+            f"{where} is a single-seed builder but got a SEED-BATCHED "
+            "mixer (topology.halo.make_seed_halo_mix) — its per-seed "
+            "blocks are bound by the engine vmap in engine.seeds; pass "
+            "it to train_surf(seeds=...)/make_seed_train_scan, or build "
+            "a static make_halo_mix / make_ring_mix here")
 
 
 def _check_static_s(S, where):
@@ -149,6 +179,7 @@ def make_meta_step(cfg: SURFConfig, S, *, constrained=True,
     blocks by ``state.step`` and ignores the static ``S``).
     """
     _check_static_s(S, "make_meta_step")
+    _reject_seed_batched_mix(mix_fn, "make_meta_step")
     meta_step_s, forward_s = _meta_step_core(cfg, constrained, activation,
                                              star, mix_fn)
 

@@ -81,13 +81,21 @@ def resume_train_scan(cfg: SURFConfig, S, meta_datasets, steps, key,
                       directory, *, constrained=True, activation="relu",
                       log_every=0, mix_fn=None, mesh=None, eval_every=0,
                       eval_datasets=None, S_eval=None, step=None,
-                      prefix=PREFIX):
+                      prefix=PREFIX, checkpoint_every=0,
+                      checkpoint_dir=None):
     """Resume a ``steps``-long training run from its latest checkpoint:
     restore with engine placement, run the REMAINING meta-steps through
     the donated scan. History/snapshot entries record ABSOLUTE steps
     (offset by the restored step), so a resumed run's logs concatenate
     seamlessly with the pre-checkpoint logs. Returns (state, history) —
-    or (state, history, snapshots) with ``eval_every``."""
+    or (state, history, snapshots) with ``eval_every``.
+
+    ``checkpoint_every``/``checkpoint_dir`` re-arm the PERIODIC in-scan
+    checkpointing of the interrupted run (``make_train_scan``): the
+    cadence indexes the absolute carried step, so the resumed run keeps
+    saving on the same ckpt_<step> grid. The checkpoints restored FROM
+    may themselves have been written by that in-scan cadence — the
+    round-trip is bit-exact either way."""
     state = restore_state(directory, cfg, step=step, mesh=mesh)
     start = int(state.step)
     remaining = int(steps) - start
@@ -100,7 +108,9 @@ def resume_train_scan(cfg: SURFConfig, S, meta_datasets, steps, key,
     run = make_train_scan(cfg, S, constrained=constrained,
                           activation=activation, mix_fn=mix_fn, mesh=mesh,
                           stacked=stacked, eval_every=eval_every,
-                          eval_stacked=ev_stacked, S_eval=S_eval)
+                          eval_stacked=ev_stacked, S_eval=S_eval,
+                          checkpoint_every=checkpoint_every,
+                          checkpoint_dir=checkpoint_dir)
     state, metrics, snaps = run(state, stacked, key, remaining)
     hist = _decimate_history(metrics, remaining, log_every, start=start)
     if eval_every:

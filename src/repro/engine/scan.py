@@ -39,7 +39,8 @@ import numpy as np
 from repro.configs.base import SURFConfig
 from repro.data.pipeline import stack_meta_datasets
 from repro.engine.core import (_ENGINE_CACHE, _engine_cache_key,
-                               _meta_step_core, init_state)
+                               _meta_step_core, _reject_seed_batched_mix,
+                               init_state)
 from repro.engine.snapshots import (make_snapshot_fn, nan_snapshot,
                                     snapshot_key)
 from repro.topology.schedule import TopologySchedule
@@ -52,6 +53,7 @@ def _check_schedule_mix(S, mix_fn):
     match the schedule in length AND content (the coefficient blocks ARE
     the mixing matrices, so a mismatch would silently override the S_t
     stream)."""
+    _reject_seed_batched_mix(mix_fn, "the single-seed engine")
     scheduled_mix = bool(getattr(mix_fn, "scheduled", False))
     if mix_fn is not None and not scheduled_mix:
         raise ValueError(
@@ -80,12 +82,20 @@ def _check_schedule_mix(S, mix_fn):
 
 
 def _scan_run(meta_step_s, snap_fn, eval_every, n_layers, state, stacked,
-              key, steps, S, sched, eval_stacked, S_eval):
+              key, steps, S, sched, eval_stacked, S_eval,
+              ckpt_every=0, ckpt_cb=None):
     """The shared scan over meta-steps: every per-step selection (batch,
     RNG, S_t, snapshot cadence) indexes the CARRIED ``state.step``, not a
     scan-local counter — running ``k`` then ``steps−k`` meta-steps (with a
     checkpoint save/restore in between) reproduces the single long run
-    exactly. Returns (state, metrics (steps,)-stacks, snapshot rows)."""
+    exactly. Returns (state, metrics (steps,)-stacks, snapshot rows).
+
+    ``ckpt_every`` > 0 additionally fires ``ckpt_cb`` (an
+    ``io_callback`` host save, ``checkpoint.io.state_save_callback``)
+    with the just-updated state after every ``ckpt_every``-th meta-step —
+    the cadence is on the ABSOLUTE carried step, so a resumed run keeps
+    checkpointing on the same grid as the uninterrupted one."""
+    from jax.experimental import io_callback
     n_q = jax.tree_util.tree_leaves(stacked)[0].shape[0]
 
     def body(st, _):
@@ -97,6 +107,12 @@ def _scan_run(meta_step_s, snap_fn, eval_every, n_layers, state, stacked,
                                             keepdims=False)
                if sched else S)
         st2, m = meta_step_s(S_t, st, batch, jax.random.fold_in(key, t))
+        if ckpt_every:
+            def do_save(s):
+                io_callback(ckpt_cb, None, s, ordered=True)
+                return 0
+            jax.lax.cond((t + 1) % ckpt_every == 0, do_save,
+                         lambda s: 0, st2)
         if not eval_every:
             return st2, (m, {})
         snap = jax.lax.cond(
@@ -113,7 +129,7 @@ def _scan_run(meta_step_s, snap_fn, eval_every, n_layers, state, stacked,
 def make_train_scan(cfg: SURFConfig, S, *, constrained=True,
                     activation="relu", star=None, mix_fn=None, mesh=None,
                     stacked=None, eval_every=0, eval_stacked=None,
-                    S_eval=None):
+                    S_eval=None, checkpoint_every=0, checkpoint_dir=None):
     """Build the device-resident meta-training engine: one jitted
     ``lax.scan`` over meta-steps.
 
@@ -149,7 +165,17 @@ def make_train_scan(cfg: SURFConfig, S, *, constrained=True,
     NOMINAL static matrix — defaults to ``S`` itself when static; a
     schedule requires an explicit ``S_eval``, per the train-perturbed /
     test-nominal robustness protocol).
+
+    ``checkpoint_every`` > 0 folds PERIODIC CHECKPOINTING into the scan
+    (the dual of the snapshots): after every ``checkpoint_every``-th
+    meta-step an ``io_callback`` hands the carried state to
+    ``checkpoint.io.state_save_callback(checkpoint_dir)``, which writes
+    the same ``ckpt_<step>`` payload as ``engine.resume.save_state`` —
+    long runs checkpoint inside the single compiled scan, and
+    ``engine.resume.resume_train_scan`` restores from them bit-exactly.
+    The cadence indexes the ABSOLUTE carried step.
     """
+    _reject_seed_batched_mix(mix_fn, "make_train_scan")
     sched = isinstance(S, TopologySchedule)
     scheduled_mix = bool(getattr(mix_fn, "scheduled", False))
     if sched:
@@ -157,6 +183,10 @@ def make_train_scan(cfg: SURFConfig, S, *, constrained=True,
     elif scheduled_mix:
         raise ValueError("a scheduled mix_fn needs a TopologySchedule S "
                          "(its per-step blocks follow the schedule)")
+    if checkpoint_every and not checkpoint_dir:
+        raise ValueError("checkpoint_every > 0 needs checkpoint_dir (the "
+                         "directory the in-scan ckpt_<step> payloads are "
+                         "written to)")
     if eval_every:
         if eval_stacked is None:
             raise ValueError("eval_every > 0 needs eval_stacked (the "
@@ -170,7 +200,12 @@ def make_train_scan(cfg: SURFConfig, S, *, constrained=True,
                     "graph)")
             S_eval = S
     variant = (("train", constrained) + ((S.cache_tag,) if sched else ())
-               + (("snap", int(eval_every)) if eval_every else ()))
+               + (("snap", int(eval_every)) if eval_every else ())
+               # the save directory is baked into the callback closure, so
+               # engines that checkpoint to different places are different
+               # executables
+               + (("ckpt", int(checkpoint_every), str(checkpoint_dir))
+                  if checkpoint_every else ()))
     cache_key = _engine_cache_key(cfg, variant, activation,
                                   star, mesh=mesh, mix_fn=mix_fn)
     if cache_key is not None and mesh is not None and stacked is not None:
@@ -193,6 +228,10 @@ def make_train_scan(cfg: SURFConfig, S, *, constrained=True,
                                      mix_fn)
     snap_fn = (make_snapshot_fn(cfg, activation, star) if eval_every
                else None)
+    ckpt_cb = None
+    if checkpoint_every:
+        from repro.checkpoint.io import state_save_callback
+        ckpt_cb = state_save_callback(str(checkpoint_dir))
 
     jit_kwargs = {}
     if mesh is not None:
@@ -208,7 +247,8 @@ def make_train_scan(cfg: SURFConfig, S, *, constrained=True,
     def run_s(state, stacked, key, steps: int, S, eval_stacked, S_eval):
         return _scan_run(meta_step_s, snap_fn, eval_every, cfg.n_layers,
                          state, stacked, key, steps, S, sched,
-                         eval_stacked, S_eval)
+                         eval_stacked, S_eval,
+                         ckpt_every=int(checkpoint_every), ckpt_cb=ckpt_cb)
 
     if cache_key is not None:
         _ENGINE_CACHE[cache_key] = run_s
@@ -242,7 +282,7 @@ def _decimate_history(metrics, steps, log_every, start=0):
 def train_scan(cfg: SURFConfig, S, meta_datasets, steps, key,
                constrained=True, activation="relu", log_every=0, init="dgd",
                mix_fn=None, mesh=None, eval_every=0, eval_datasets=None,
-               S_eval=None):
+               S_eval=None, checkpoint_every=0, checkpoint_dir=None):
     """Run Algorithm 1 as ONE compiled scan over ``steps`` meta-iterations,
     cycling the meta-training datasets on device. Returns (state, history)
     — or (state, history, snapshots) when ``eval_every`` > 0 — with
@@ -250,7 +290,9 @@ def train_scan(cfg: SURFConfig, S, meta_datasets, steps, key,
     step-wise ``train``. ``mix_fn``/``mesh`` route mixing through the ring
     ppermute path on an agent-axis-sharded mesh (see ``make_train_scan``);
     ``S`` may be a ``TopologySchedule`` for time-varying graphs (combine
-    with a scheduled halo mixer to keep the ppermute savings)."""
+    with a scheduled halo mixer to keep the ppermute savings);
+    ``checkpoint_every``/``checkpoint_dir`` checkpoint the carried state
+    at a cadence WITHOUT leaving the scan."""
     state = init_state(key, cfg, init=init)
     stacked = stack_meta_datasets(meta_datasets)
     ev_stacked = (stack_meta_datasets(eval_datasets) if eval_every
@@ -258,7 +300,9 @@ def train_scan(cfg: SURFConfig, S, meta_datasets, steps, key,
     run = make_train_scan(cfg, S, constrained=constrained,
                           activation=activation, mix_fn=mix_fn, mesh=mesh,
                           stacked=stacked, eval_every=eval_every,
-                          eval_stacked=ev_stacked, S_eval=S_eval)
+                          eval_stacked=ev_stacked, S_eval=S_eval,
+                          checkpoint_every=checkpoint_every,
+                          checkpoint_dir=checkpoint_dir)
     state, metrics, snaps = run(state, stacked, key, int(steps))
     hist = _decimate_history(metrics, int(steps), log_every)
     if eval_every:

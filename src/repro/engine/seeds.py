@@ -20,10 +20,22 @@ multi-seed evaluator's guarantee in ``core.surf``.
 ``S_stack`` is (n_seeds, n, n) for static topologies or
 (n_seeds, T, n, n) for per-seed ``TopologySchedule`` stacks (each seed
 trains under its OWN perturbation stream, as the sequential protocol
-does). Mixing is the dense path — a ``mesh`` shards the SEED axis over
-'data' (``sharding.surf_rules.seed_scan_shardings``): seeds are
-embarrassingly parallel, so the sharded engine runs without a single
-cross-device collective in the hot loop.
+does).
+
+MIXING composes both axes of a 2-D ``('seed', 'agent')`` mesh
+(``launch.mesh.make_surf_mesh``): the dense path shards only the SEED
+role (embarrassingly parallel — zero hot-loop collectives), while a
+SEED-BATCHED halo mixer (``topology.halo.make_seed_halo_mix``,
+``.seed_batched = True``) threads the ``ppermute`` exchange through the
+seed vmap — the meta-step vmap carries the mixer's stacked per-seed
+coefficient blocks (in_axes=0) with ``spmd_axis_name=<seed axis>``, so
+the shard_map inside each lane permutes boundary rows over the AGENT
+sub-axis while the lanes stay sharded over 'seed'. The shared
+meta-training pool is then agent-sharded (dim 1) per
+``sharding.surf_rules.seed_scan_shardings``, so the per-step indexed
+batch arrives already agent-partitioned. Big-n multi-seed runs get the
+halo collective-bytes savings AND seed parallelism from one compiled
+scan.
 """
 from __future__ import annotations
 
@@ -74,10 +86,63 @@ def stack_schedules(schedules):
     return jnp.stack([s.S for s in schedules])
 
 
+def _check_seed_mix(S_stack, sched, n_seeds, mesh, mix_fn):
+    """Validate a (per-seed S stack, mix_fn, mesh) triple for the
+    seed-batched engine. Only SEED-BATCHED mixers are legal (a static
+    halo/ring mixer bakes ONE topology and would silently override the
+    per-seed S_i stream); the mixer must have been built from the SAME
+    stack (length, seed count, content digest) and needs a mesh whose
+    named 'seed'/'agent' axes its shard_map + the engine vmap compose
+    over."""
+    if mix_fn is None:
+        return
+    if not getattr(mix_fn, "seed_batched", False):
+        raise ValueError(
+            "the seed-batched engine needs a SEED-BATCHED mixer "
+            "(topology.halo.make_seed_halo_mix) or the dense path — a "
+            "static make_halo_mix/make_ring_mix bakes ONE topology and "
+            "would silently override the per-seed S_i stream")
+    if mesh is None or not {"seed", "agent"} <= set(mesh.axis_names):
+        raise ValueError(
+            "a seed-batched halo mixer needs mesh= with named "
+            "('seed', 'agent') axes (launch.mesh.make_surf_mesh) — its "
+            "shard_map permutes the agent sub-axis under the seed vmap, "
+            f"got mesh axes {None if mesh is None else mesh.axis_names}")
+    if bool(mix_fn.scheduled) != sched:
+        raise ValueError(
+            f"seed-batched mixer was built from a "
+            f"{'schedule' if mix_fn.scheduled else 'static'} stack but "
+            f"the engine got a {'schedule' if sched else 'static'} "
+            "S_stack — build the mixer from the SAME per-seed stack "
+            "(topology.halo.make_seed_halo_mix)")
+    if int(mix_fn.n_seeds) != n_seeds:
+        raise ValueError(f"seed-batched mixer stacks {mix_fn.n_seeds} "
+                         f"seeds but the engine got {n_seeds}")
+    if sched and int(mix_fn.steps) != int(S_stack.shape[1]):
+        raise ValueError(
+            f"seed-batched mixer has {mix_fn.steps} schedule steps but "
+            f"the S_stack has {int(S_stack.shape[1])} — build the mixer "
+            "from the same schedule stack")
+    if getattr(mix_fn, "stack_digest", None):
+        src = getattr(mix_fn, "_src_ref", None)
+        if src is not None and src() is S_stack:
+            return  # built from THIS array — digest trivially matches
+        import hashlib
+        want = hashlib.sha256(
+            np.asarray(S_stack, np.float32).tobytes()).hexdigest()[:16]
+        if mix_fn.stack_digest != want:
+            raise ValueError(
+                "seed-batched mixer was built from a DIFFERENT per-seed "
+                "stack (content digest mismatch) — its coefficient "
+                "blocks would silently override this run's S_i stream; "
+                "rebuild it from this stack via "
+                "topology.halo.make_seed_halo_mix")
+
+
 def make_seed_train_scan(cfg: SURFConfig, S_stack, *, constrained=True,
                          activation="relu", star=None, mesh=None,
-                         eval_every=0, eval_stacked=None,
-                         S_eval_stack=None):
+                         mix_fn=None, stacked=None, eval_every=0,
+                         eval_stacked=None, S_eval_stack=None):
     """Build the seed-batched engine:
     ``run(states, stacked, keys, steps) -> (states, metrics, snaps)``.
 
@@ -87,14 +152,32 @@ def make_seed_train_scan(cfg: SURFConfig, S_stack, *, constrained=True,
     ``init_states``/``seed_keys`` (DONATED / per-seed fold_in streams);
     ``stacked`` is the SHARED meta-training pool. ``metrics`` leaves are
     (n_seeds, steps); ``snaps`` adds in-scan snapshots against the
-    per-seed nominal ``S_eval_stack`` (n_seeds, n, n). ``mesh`` shards
-    the SEED axis over 'data'."""
+    per-seed nominal ``S_eval_stack`` (n_seeds, n, n).
+
+    ``mesh`` shards the SEED role (``surf_rules.seed_scan_shardings``);
+    on a 2-D ('seed', 'agent') mesh a SEED-BATCHED mixer
+    (``mix_fn`` from ``topology.halo.make_seed_halo_mix``, built from
+    this same ``S_stack``) replaces the dense per-lane ``S_i @ W`` with
+    the halo ``ppermute`` exchange over the agent sub-axis — the vmap
+    carries its per-seed blocks with ``spmd_axis_name='seed'``. Pass the
+    ``stacked`` pytree along with a 2-D mesh so the pool's agent-axis
+    shardings are leaf-aware."""
     S_stack = jnp.asarray(S_stack, jnp.float32)
     if S_stack.ndim not in (3, 4):
         raise ValueError("S_stack must be (n_seeds, n, n) or "
                          f"(n_seeds, T, n, n), got shape {S_stack.shape}")
     sched = S_stack.ndim == 4
     n_seeds = int(S_stack.shape[0])
+    _check_seed_mix(S_stack, sched, n_seeds, mesh, mix_fn)
+    if mesh is not None and "seed" in mesh.axis_names:
+        from repro.sharding.surf_rules import check_divides
+        check_divides(n_seeds, int(mesh.shape["seed"]),
+                      "the seed-batched engine", "n_seeds",
+                      "every shard gets an equal block of seed lanes (a "
+                      "named 'seed' axis does NOT silently replicate); "
+                      "pass a matching seed batch or rebuild the mesh "
+                      "via launch.mesh.make_surf_mesh(seed_shards, "
+                      f"agent_shards, n_seeds={n_seeds})")
     if eval_every:
         if eval_stacked is None:
             raise ValueError("eval_every > 0 needs eval_stacked")
@@ -116,7 +199,12 @@ def make_seed_train_scan(cfg: SURFConfig, S_stack, *, constrained=True,
     variant = ("train-seeds", constrained, n_seeds, sched,
                int(eval_every))
     cache_key = _engine_cache_key(cfg, variant, activation, star,
-                                  mesh=mesh, mix_fn=None)
+                                  mesh=mesh, mix_fn=mix_fn)
+    if cache_key is not None and mesh is not None and stacked is not None:
+        from repro.sharding.surf_rules import stacked_sharded_flags
+        cache_key = cache_key + (
+            jax.tree_util.tree_structure(stacked),
+            stacked_sharded_flags(stacked, cfg.n_agents))
     ev_arr = eval_stacked if eval_every else {}
     S_ev_arr = S_eval_stack if eval_every else {}
 
@@ -128,15 +216,22 @@ def make_seed_train_scan(cfg: SURFConfig, S_stack, *, constrained=True,
         return bind(_ENGINE_CACHE[cache_key])
 
     meta_step_s, _ = _meta_step_core(cfg, constrained, activation, star,
-                                     None)
+                                     mix_fn)
     snap_fn = (make_snapshot_fn(cfg, activation, star) if eval_every
                else None)
 
     jit_kwargs = {}
     if mesh is not None:
         from repro.sharding.surf_rules import seed_scan_shardings
-        in_sh, out_sh = seed_scan_shardings(mesh, n_seeds)
+        in_sh, out_sh = seed_scan_shardings(mesh, n_seeds,
+                                            n_agents=cfg.n_agents,
+                                            stacked=stacked)
         jit_kwargs = {"in_shardings": in_sh, "out_shardings": out_sh}
+    # shard_map under vmap: the spmd axis name tells the batching rule to
+    # shard the lane dim of the mixer's shard_map over 'seed' instead of
+    # replicating every lane on every device
+    spmd = ("seed" if (mix_fn is not None and mesh is not None
+                       and "seed" in mesh.axis_names) else None)
 
     @partial(jax.jit, static_argnames=("steps",), donate_argnums=(0,),
              **jit_kwargs)
@@ -157,10 +252,18 @@ def make_seed_train_scan(cfg: SURFConfig, S_stack, *, constrained=True,
             S_t = (jax.lax.dynamic_index_in_dim(
                 S_stack, t % S_stack.shape[1], 1, keepdims=False)
                 if sched else S_stack)
-            sts2, m = jax.vmap(
-                lambda S_i, st_i, k_i: meta_step_s(
-                    S_i, st_i, batch, jax.random.fold_in(k_i, t)),
-                in_axes=(0, 0, 0))(S_t, sts, keys)
+            if mix_fn is None:
+                sts2, m = jax.vmap(
+                    lambda S_i, st_i, k_i: meta_step_s(
+                        S_i, st_i, batch, jax.random.fold_in(k_i, t)),
+                    in_axes=(0, 0, 0))(S_t, sts, keys)
+            else:
+                sts2, m = jax.vmap(
+                    lambda S_i, st_i, k_i, blk_i: meta_step_s(
+                        S_i, st_i, batch, jax.random.fold_in(k_i, t),
+                        blk_i),
+                    in_axes=(0, 0, 0, 0),
+                    spmd_axis_name=spmd)(S_t, sts, keys, mix_fn.blocks)
             if not eval_every:
                 return sts2, (m, {})
 
@@ -194,13 +297,15 @@ def make_seed_train_scan(cfg: SURFConfig, S_stack, *, constrained=True,
 
 def train_scan_seeds(cfg: SURFConfig, S_stack, meta_datasets, steps, seeds,
                      constrained=True, activation="relu", log_every=0,
-                     init="dgd", star=None, mesh=None, eval_every=0,
-                     eval_datasets=None, S_eval_stack=None):
+                     init="dgd", star=None, mesh=None, mix_fn=None,
+                     eval_every=0, eval_datasets=None, S_eval_stack=None):
     """Seed-batched Algorithm 1: ONE compiled scan trains every seed in
     ``seeds`` (per-seed init/RNG/topology), returning (states, history) —
     or (states, history, snapshots) when ``eval_every`` > 0 — where
     history/snapshot entries carry (n_seeds,) / (n_seeds, ...) arrays.
-    Row i of every stack matches the sequential ``seed=seeds[i]`` run."""
+    Row i of every stack matches the sequential ``seed=seeds[i]`` run.
+    ``mesh``/``mix_fn`` compose seed AND agent parallelism on a 2-D
+    ('seed', 'agent') mesh (see ``make_seed_train_scan``)."""
     seeds = [int(s) for s in seeds]
     S_stack = jnp.asarray(S_stack, jnp.float32)
     if int(S_stack.shape[0]) != len(seeds):
@@ -213,6 +318,7 @@ def train_scan_seeds(cfg: SURFConfig, S_stack, meta_datasets, steps, seeds,
                   else None)
     run = make_seed_train_scan(cfg, S_stack, constrained=constrained,
                                activation=activation, star=star, mesh=mesh,
+                               mix_fn=mix_fn, stacked=stacked,
                                eval_every=eval_every,
                                eval_stacked=ev_stacked,
                                S_eval_stack=S_eval_stack)

@@ -1,13 +1,20 @@
 """Production meshes (task spec: single pod 16×16 = 256 chips; multi-pod
-2×16×16 = 512 chips) plus the agent-axis mesh the sharded SURF engine
-trains on. FUNCTIONS, not module constants — importing this module never
-touches jax device state.
+2×16×16 = 512 chips) plus the SURF training meshes. FUNCTIONS, not
+module constants — importing this module never touches jax device state.
+
+``make_surf_mesh(seed_shards, agent_shards)`` is the ONE axis system the
+SURF engines consume: a named ``('seed', 'agent')`` 2-D mesh whose axes
+carry the two roles every engine shards — the embarrassingly-parallel
+SEED axis of the seed-batched trainer and the AGENT axis the halo/ring
+``ppermute`` mixers permute over (``sharding.surf_rules.axis_for_role``
+maps role → axis name; the legacy 1-D ``make_agent_mesh`` and its
+``'data'`` axis are the degenerate agent-only case, kept as a shim).
 
 CI runs the sharded path on simulated host devices:
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the
 ``make test-sharded`` lane) makes ``host_device_count()`` report 8 and
-``make_agent_mesh()`` build a real 8-shard mesh whose ``ppermute``
-collectives execute with nshards > 1.
+``make_surf_mesh(2, 4)`` build a real (seed=2, agent=4) mesh whose
+``ppermute`` collectives execute with nshards > 1.
 """
 from __future__ import annotations
 
@@ -32,11 +39,55 @@ def host_device_count() -> int:
     return len(jax.devices())
 
 
+def make_surf_mesh(seed_shards: int = 1, agent_shards: int = 1, *,
+                   n_seeds: int | None = None, n_agents: int | None = None):
+    """The SURF axis system: a named ``('seed', 'agent')`` 2-D mesh.
+
+    ``seed_shards`` devices on the 'seed' axis (the seed-batched engine
+    shards per-seed TrainState/key/S stacks over it — embarrassingly
+    parallel, zero hot-loop collectives) × ``agent_shards`` on the
+    'agent' axis (the halo/ring mixers ``ppermute`` over it). Either
+    degenerates cleanly: ``make_surf_mesh(1, P)`` is an agent-only mesh
+    for single-seed sharded training, ``make_surf_mesh(P, 1)`` a
+    seed-only mesh for dense multi-seed runs.
+
+    ``n_seeds`` / ``n_agents``: optional problem sizes to validate UP
+    FRONT — an indivisible axis would otherwise silently replicate (the
+    sharding-rule fallback) or fail deep inside ``shard_map``; here it
+    raises an actionable error instead."""
+    from repro.sharding.surf_rules import check_divides
+    seed_shards, agent_shards = int(seed_shards), int(agent_shards)
+    if seed_shards < 1 or agent_shards < 1:
+        raise ValueError(f"make_surf_mesh: shard counts must be >= 1, got "
+                         f"seed_shards={seed_shards} "
+                         f"agent_shards={agent_shards}")
+    if n_seeds is not None:
+        check_divides(n_seeds, seed_shards, "make_surf_mesh", "n_seeds",
+                      "the seed-batched engine gives every shard an equal "
+                      "block of seed lanes; pass a seed batch whose "
+                      f"length is a multiple of seed_shards={seed_shards}")
+    if n_agents is not None:
+        check_divides(n_agents, agent_shards, "make_surf_mesh", "n_agents",
+                      "the halo exchange gives every shard an equal row "
+                      f"block of W; lower agent_shards={agent_shards}")
+    need = seed_shards * agent_shards
+    if need > host_device_count():
+        raise ValueError(
+            f"make_surf_mesh: ({seed_shards}, {agent_shards}) needs "
+            f"{need} devices but only {host_device_count()} are visible "
+            f"(CI: set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{need})")
+    return jax.make_mesh((seed_shards, agent_shards), ("seed", "agent"))
+
+
 def make_agent_mesh(n_shards: int | None = None):
-    """Mesh for agent-axis-sharded SURF training: ``n_shards`` devices on
-    'data' (the axis ``core.ring.make_ring_mix`` permutes over), a trivial
-    'model' axis so the same P('data', ...) specs work on every mesh in
-    this repo. Defaults to all addressable devices."""
+    """DEGENERATE-CASE SHIM: the legacy 1-D agent-axis mesh — ``n_shards``
+    devices on 'data' (the axis ``core.ring.make_ring_mix`` historically
+    permutes over), a trivial 'model' axis so the same P('data', ...)
+    specs work on every mesh in this repo. Defaults to all addressable
+    devices. New code should build ``make_surf_mesh(1, n_shards)`` and
+    let ``sharding.surf_rules.axis_for_role`` resolve the axis name; this
+    shim keeps the 'data' spelling for existing call sites."""
     n = host_device_count() if n_shards is None else int(n_shards)
     if n > host_device_count():
         raise ValueError(

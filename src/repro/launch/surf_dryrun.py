@@ -64,6 +64,55 @@ def meta_step_collective_bytes(cfg, S, mesh, mix_fn=None):
     return parsed["collective_bytes"], parsed["collectives"]
 
 
+def seed_meta_step_collective_bytes(cfg, S_stack, mesh, mix_fn=None):
+    """Per-META-STEP collective traffic of the SEED-BATCHED engine on a
+    2-D ('seed', 'agent') mesh: lower ONE vmapped meta step (per-seed
+    states/keys/S seed-sharded, the SHARED batch agent-sharded) and
+    parse its post-SPMD HLO. ``mix_fn`` may be a seed-batched halo mixer
+    (``topology.halo.make_seed_halo_mix``) — the vmap then carries its
+    per-seed blocks with ``spmd_axis_name='seed'``, exactly like
+    ``engine.seeds``; ``mix_fn=None`` lowers the dense per-lane
+    ``S_i @ W`` baseline the halo path exists to beat. ``S_stack`` is
+    the (n_seeds, n, n) static stand-in (a scheduled seed mixer binds
+    its own blocks by the carried step and ignores it)."""
+    from repro.engine.core import _meta_step_core
+    from repro.sharding.surf_rules import agent_sharding, seed_sharding
+    S_stack = jnp.asarray(S_stack, jnp.float32)
+    n_seeds = int(S_stack.shape[0])
+    seed_sh = seed_sharding(mesh, n_seeds)
+    agent_sh = agent_sharding(mesh, cfg.n_agents)
+    meta_step_s, _ = _meta_step_core(cfg, True, "relu", None, mix_fn)
+    spmd = ("seed" if (mix_fn is not None and "seed" in mesh.axis_names)
+            else None)
+    if mix_fn is None:
+        def step(states, batch, keys, S_stack):
+            return jax.vmap(
+                lambda S_i, st_i, k_i: meta_step_s(S_i, st_i, batch, k_i),
+                in_axes=(0, 0, 0))(S_stack, states, keys)
+    else:
+        def step(states, batch, keys, S_stack):
+            return jax.vmap(
+                lambda S_i, st_i, k_i, blk_i: meta_step_s(
+                    S_i, st_i, batch, k_i, blk_i),
+                in_axes=(0, 0, 0, 0),
+                spmd_axis_name=spmd)(S_stack, states, keys, mix_fn.blocks)
+    keys_spec = jax.ShapeDtypeStruct((n_seeds, 2), jnp.uint32)
+    states_spec = jax.eval_shape(
+        lambda ks: jax.vmap(lambda k: TR.init_state(k, cfg))(ks), keys_spec)
+    states_sh = jax.tree_util.tree_map(lambda _: seed_sh, states_spec)
+    batch_spec = surf_batch_specs(cfg)
+    batch_sh = jax.tree_util.tree_map(lambda _: agent_sh, batch_spec)
+    # (n_seeds,) metric leaves stay seed-sharded like the engine outputs
+    fn = jax.jit(step,
+                 in_shardings=(states_sh, batch_sh, seed_sh, seed_sh),
+                 out_shardings=(states_sh, seed_sh))
+    txt = fn.lower(states_spec, batch_spec, keys_spec,
+                   jax.ShapeDtypeStruct(tuple(S_stack.shape), jnp.float32)
+                   ).compile().as_text()
+    parsed = hlo_cost.summarize(txt)
+    return parsed["collective_bytes"], parsed["collectives"]
+
+
 def lower_surf_step(multi_pod: bool = False, cfg=DRYRUN, ring: bool = False,
                     infer: bool = False, mix: str | None = None):
     """``infer=True`` lowers the deployed unrolled optimizer (forward only,

@@ -1,14 +1,17 @@
 from repro.sharding.rules import (param_spec, params_shardings, batch_spec,
                                   batch_shardings, cache_spec,
                                   cache_shardings, data_axes)
-from repro.sharding.surf_rules import (agent_sharding, mesh_fingerprint,
-                                       replicated, stacked_agent_sharding,
+from repro.sharding.surf_rules import (agent_sharding, axis_for_role,
+                                       mesh_fingerprint, replicated,
+                                       seed_scan_shardings, seed_sharding,
+                                       stacked_agent_sharding,
                                        stacked_q_sharding,
                                        train_scan_shardings,
                                        train_state_shardings)
 
 __all__ = ["param_spec", "params_shardings", "batch_spec", "batch_shardings",
            "cache_spec", "cache_shardings", "data_axes",
-           "agent_sharding", "mesh_fingerprint", "replicated",
+           "agent_sharding", "axis_for_role", "mesh_fingerprint",
+           "replicated", "seed_scan_shardings", "seed_sharding",
            "stacked_agent_sharding", "stacked_q_sharding",
            "train_scan_shardings", "train_state_shardings"]

@@ -1,5 +1,23 @@
 """NamedSharding rules for the SURF meta-training/evaluation engines.
 
+AXIS ROLES, not axis names: every rule shards one of two roles —
+
+  * the SEED role (``seed_sharding`` / ``seed_scan_shardings``): the
+    leading per-seed axis of the seed-batched engine's stacks;
+  * the AGENT role (``agent_sharding`` / ``stacked_*`` / Q rules): the
+    agent dimension the halo/ring mixers ``ppermute`` over (the stacked
+    eval pool's Q axis is data-parallel over the same devices, so it
+    rides the agent role too).
+
+``axis_for_role`` maps a role to the mesh axis that carries it: the
+named ``'seed'``/``'agent'`` axes of a ``launch.mesh.make_surf_mesh``
+2-D mesh, or the legacy ``'data'`` axis on the 1-D shim meshes
+(``make_agent_mesh`` / the production ('data', 'model') meshes), where
+BOTH roles degrade onto the single sharded axis and each engine uses
+the one role it shards. Rules compose as pytree prefixes and default to
+role resolution when no explicit axis is passed, so one rule set serves
+1-D and 2-D meshes unchanged.
+
 The scan engine (``repro.engine.make_train_scan``) is one jitted
 computation, so the whole sharding story is three input specs:
 
@@ -40,6 +58,42 @@ def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
+ROLE_AXES = {"seed": "seed", "agent": "agent"}
+
+
+def check_divides(count, shards, what, noun, fix):
+    """The ONE actionable divisibility guard behind ``make_surf_mesh``,
+    the halo planners and the seed-batched engine: an axis whose problem
+    size doesn't divide its shard count fails UP FRONT naming the fix,
+    instead of silently replicating (the ``_dim_spec`` fallback) or
+    dying deep inside ``shard_map`` with a shape mismatch."""
+    if shards <= 1 or count % shards == 0:
+        return
+    divisors = [d for d in range(1, count + 1) if count % d == 0]
+    raise ValueError(
+        f"{what}: {noun}={count} does not divide over {shards} shards — "
+        f"{fix}; pick a shard count from the divisors of {count} "
+        f"({divisors})")
+
+
+def axis_for_role(mesh: Mesh, role: str):
+    """Mesh axis carrying an axis ROLE ('seed' | 'agent'): the named axis
+    of a ``make_surf_mesh`` 2-D mesh when present, else the legacy 'data'
+    axis (1-D shim meshes name their single sharded axis 'data' whatever
+    role it plays), else None (nothing to shard over — every rule
+    replicates)."""
+    try:
+        name = ROLE_AXES[role]
+    except KeyError:
+        raise ValueError(f"unknown axis role {role!r}; one of "
+                         f"{sorted(ROLE_AXES)}")
+    if name in mesh.axis_names:
+        return name
+    if "data" in mesh.axis_names:
+        return "data"
+    return None
+
+
 def mesh_fingerprint(mesh: Mesh | None):
     """Hashable identity of a mesh for engine-cache keys (None passes
     through so unsharded engines keep their old keys)."""
@@ -52,11 +106,13 @@ def mesh_fingerprint(mesh: Mesh | None):
             devs, platform)
 
 
-def _axis_size(mesh: Mesh, axis: str) -> int:
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
     return int(mesh.shape[axis]) if axis in mesh.axis_names else 1
 
 
-def _dim_spec(dim_size: int | None, mesh: Mesh, axis: str, position: int,
+def _dim_spec(dim_size: int | None, mesh: Mesh, axis, position: int,
               ndim_hint: int | None = None) -> P:
     """P with ``axis`` at ``position`` when the dim divides the axis size,
     else fully replicated. ``dim_size=None`` skips the divisibility check
@@ -72,23 +128,28 @@ def _dim_spec(dim_size: int | None, mesh: Mesh, axis: str, position: int,
 
 
 def agent_sharding(mesh: Mesh, n_agents: int | None = None,
-                   axis: str = "data") -> NamedSharding:
-    """W / per-step batch leaves: agent axis (dim 0) over ``axis``."""
+                   axis=None) -> NamedSharding:
+    """W / per-step batch leaves: agent axis (dim 0) over the AGENT-role
+    axis (``axis`` overrides role resolution)."""
+    axis = axis_for_role(mesh, "agent") if axis is None else axis
     return NamedSharding(mesh, _dim_spec(n_agents, mesh, axis, 0))
 
 
 def stacked_agent_sharding(mesh: Mesh, n_agents: int | None = None,
-                           axis: str = "data") -> NamedSharding:
+                           axis=None) -> NamedSharding:
     """Stacked meta-dataset leaves (Q, n, ...): agent axis (dim 1) over
-    ``axis`` — the TRAIN-engine input spec (usable as a pytree prefix:
-    trailing dims replicate)."""
+    the AGENT-role axis — the TRAIN-engine input spec (usable as a pytree
+    prefix: trailing dims replicate)."""
+    axis = axis_for_role(mesh, "agent") if axis is None else axis
     return NamedSharding(mesh, _dim_spec(n_agents, mesh, axis, 1))
 
 
 def stacked_q_sharding(mesh: Mesh, n_q: int | None = None,
-                       axis: str = "data") -> NamedSharding:
-    """Stacked meta-dataset leaves (Q, ...): Q axis (dim 0) over ``axis``
-    — the vmapped-EVAL input spec."""
+                       axis=None) -> NamedSharding:
+    """Stacked meta-dataset leaves (Q, ...): Q axis (dim 0) over the
+    AGENT-role axis (data-parallel evaluation rides the same devices the
+    agent axis shards over) — the vmapped-EVAL input spec."""
+    axis = axis_for_role(mesh, "agent") if axis is None else axis
     return NamedSharding(mesh, _dim_spec(n_q, mesh, axis, 0))
 
 
@@ -110,7 +171,7 @@ def train_state_shardings(state, mesh: Mesh):
 
 
 def stacked_shardings_tree(stacked, mesh: Mesh, n_agents: int,
-                           axis: str = "data"):
+                           axis=None):
     """Per-leaf shardings for a stacked meta-dataset pytree: leaves whose
     dim 1 IS the agent axis get ``stacked_agent_sharding``; anything else
     (auxiliary leaves without an agent axis, indivisible shapes)
@@ -134,7 +195,7 @@ def stacked_sharded_flags(stacked, n_agents: int):
 
 
 def train_scan_shardings(mesh: Mesh, n_agents: int | None = None,
-                         axis: str = "data", stacked=None):
+                         axis=None, stacked=None):
     """(in_shardings, out_shardings) for the scan engine's
     ``run_s(state, stacked, key, S, eval_stacked, S_eval)`` dynamic
     arguments (``steps`` is static): state/key/S replicated, stacked
@@ -156,23 +217,46 @@ def train_scan_shardings(mesh: Mesh, n_agents: int | None = None,
 
 
 def seed_sharding(mesh: Mesh, n_seeds: int | None = None,
-                  axis: str = "data") -> NamedSharding:
-    """Leading SEED axis (dim 0) over ``axis`` — the seed-batched train
-    engine's per-seed spec (``engine.seeds``), usable as a pytree prefix:
-    every per-seed leaf (TrainState stacks, key batch, S/schedule stacks,
-    (n_seeds, steps) metrics) carries n_seeds at dim 0 and trailing dims
-    replicate. Seeds are embarrassingly parallel, so this shards the
-    whole training computation with zero hot-loop collectives."""
+                  axis=None) -> NamedSharding:
+    """Leading SEED axis (dim 0) over the SEED-role axis — the
+    seed-batched train engine's per-seed spec (``engine.seeds``), usable
+    as a pytree prefix: every per-seed leaf (TrainState stacks, key
+    batch, S/schedule stacks, (n_seeds, steps) metrics) carries n_seeds
+    at dim 0 and trailing dims replicate. Seeds are embarrassingly
+    parallel, so this shards the whole training computation with zero
+    hot-loop collectives."""
+    axis = axis_for_role(mesh, "seed") if axis is None else axis
     return NamedSharding(mesh, _dim_spec(n_seeds, mesh, axis, 0))
 
 
 def seed_scan_shardings(mesh: Mesh, n_seeds: int | None = None,
-                        axis: str = "data"):
+                        axis=None, n_agents: int | None = None,
+                        stacked=None):
     """(in_shardings, out_shardings) for the seed-batched engine's
     ``run_s(states, stacked, keys, S_stack, eval_stacked, S_eval_stack)``
-    dynamic arguments (``steps`` is static): per-seed stacks seed-axis-
-    sharded, the SHARED dataset pools replicated; outputs (states,
-    metrics, snaps) keep the seed axis sharded."""
-    seed = seed_sharding(mesh, n_seeds, axis)
+    dynamic arguments (``steps`` is static): per-seed stacks over the
+    SEED-role axis; outputs (states, metrics, snaps) keep the seed axis
+    sharded.
+
+    The SHARED meta-training pool composes the AGENT role: on a 2-D
+    ``('seed', 'agent')`` mesh its agent dim (dim 1, ``n_agents``) shards
+    over 'agent' (replicated over 'seed') so the per-step indexed batch
+    arrives already agent-partitioned for the halo ``ppermute`` exchange
+    under the seed vmap — pass ``stacked`` for the leaf-aware tree
+    (aux leaves without an agent axis replicate). On a 1-D mesh both
+    roles resolve to the same axis, so the pool stays replicated (the
+    pre-2-D behavior). The held-out snapshot pool always replicates."""
+    seed_ax = axis_for_role(mesh, "seed") if axis is None else axis
+    agent_ax = axis_for_role(mesh, "agent")
+    seed = seed_sharding(mesh, n_seeds, seed_ax)
     rep = replicated(mesh)
-    return (seed, rep, seed, seed, rep, seed), (seed, seed, seed)
+    if (agent_ax is not None and agent_ax != seed_ax
+            and _axis_size(mesh, agent_ax) > 1):
+        if stacked is not None:
+            stacked_sh = stacked_shardings_tree(stacked, mesh, n_agents,
+                                                agent_ax)
+        else:
+            stacked_sh = stacked_agent_sharding(mesh, n_agents, agent_ax)
+    else:
+        stacked_sh = rep
+    return (seed, stacked_sh, seed, seed, rep, seed), (seed, seed, seed)

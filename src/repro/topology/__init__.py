@@ -22,5 +22,5 @@ mix beyond circulant rings"):
 from repro.topology import families, halo, schedule  # noqa: F401
 from repro.topology.families import build_topology  # noqa: F401
 from repro.topology.halo import (  # noqa: F401
-    make_halo_mix, make_scheduled_halo_mix)
+    make_halo_mix, make_scheduled_halo_mix, make_seed_halo_mix)
 from repro.topology.schedule import TopologySchedule  # noqa: F401

@@ -44,10 +44,21 @@ graph, so their union is the base topology and a banded base keeps its
 ppermute collective-bytes savings under time variation; only schedules
 whose union densifies (e.g. a ring→random anneal) should fall back to
 the dense ``S_t @ W`` path.
+
+On a 2-D ``('seed', 'agent')`` mesh (``launch.mesh.make_surf_mesh``)
+the same exchange composes with SEED parallelism: ``make_seed_halo_mix``
+stacks per-seed coefficient blocks under one union plan and the
+seed-batched engine runs the shard-mapped filter under
+``jax.vmap(..., spmd_axis_name='seed')`` — every seed row of the mesh
+ppermutes only its own lanes' boundary rows over its agent sub-axis.
+All three mixers share one shard-mapped filter body
+(``_halo_filter_smapped``); they differ only in how the coefficient
+blocks are bound (baked / by carried step / by seed lane + step).
 """
 from __future__ import annotations
 
 import hashlib
+import weakref
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +69,57 @@ try:                                   # jax >= 0.5: public top-level API
     _shard_map = jax.shard_map
 except AttributeError:                 # pinned jax 0.4.x
     from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def _check_divisible(n, nshards, what="halo plan"):
+    """Every halo planner fails an indivisible agent axis HERE with the
+    shared actionable message, not deep inside ``shard_map`` with a
+    shape mismatch."""
+    from repro.sharding.surf_rules import check_divides
+    check_divides(n, nshards, what, "n",
+                  f"the halo exchange gives every shard an equal "
+                  f"n/{nshards} row block of W; build the mesh via "
+                  f"launch.mesh.make_surf_mesh(seed_shards, agent_shards, "
+                  f"n_agents={n})")
+
+
+def _halo_filter_smapped(mesh, axis, row_sets, perms):
+    """The shared shard-mapped K-tap Horner graph filter
+    ``(W_loc, h, S0_loc, Sd_locs) -> Y_loc`` over the AGENT sub-axis
+    ``axis``: one ``ppermute`` per active shard offset, carrying only
+    that offset's union rows. Every halo mixer (static ``make_halo_mix``,
+    ``ScheduledHaloMix``, ``SeedHaloMix``) applies the same traced
+    exchange and differs only in how it binds the coefficient blocks.
+    Because the in/out specs mention ONLY ``axis``, the mapped filter
+    composes under an outer seed vmap (``jax.vmap(...,
+    spmd_axis_name='seed')`` on a 2-D ('seed', 'agent') mesh): the
+    batching rule inserts 'seed' at the lane dim and each seed row of
+    the mesh ppermutes its own lanes' boundary rows over its agent
+    sub-axis."""
+    def apply_S(Y, S0_loc, Sd_locs):
+        # Y (nl, d) local block; S0_loc (1, nl, nl); Sd_locs[i] (1, nl, r_i)
+        out = S0_loc[0] @ Y
+        for rows, perm, Sd in zip(row_sets, perms, Sd_locs):
+            recv = jax.lax.ppermute(Y[rows], axis, perm)
+            out = out + Sd[0] @ recv
+        return out
+
+    def filter_local(W_loc, h, S0_loc, Sd_locs):
+        K = h.shape[0] - 1
+        Y = h[K] * W_loc
+        for k in range(K - 1, -1, -1):
+            Y = apply_S(Y, S0_loc, Sd_locs) + h[k] * W_loc
+        return Y
+
+    return _shard_map(
+        filter_local, mesh=mesh,
+        in_specs=(P(axis), P(), P(axis), tuple(P(axis) for _ in row_sets)),
+        out_specs=P(axis))
+
+
+def _offset_perms(plans, nshards):
+    return [[(j, (j - delta) % nshards) for j in range(nshards)]
+            for delta, _, _ in plans]
 
 
 def halo_plan(S, nshards):
@@ -71,8 +133,10 @@ def halo_plan(S, nshards):
     the per-shard coefficient blocks restricted to those rows."""
     S = np.asarray(S, np.float32)
     n = S.shape[0]
-    assert S.ndim == 2 and S.shape[1] == n, "S must be (n, n)"
-    assert n % nshards == 0, f"n={n} must divide over {nshards} shards"
+    if S.ndim != 2 or S.shape[1] != n:
+        raise ValueError(f"halo plan: S must be (n, n), got shape "
+                         f"{tuple(S.shape)}")
+    _check_divisible(n, nshards)
     nl = n // nshards
     blocks = S.reshape(nshards, nl, nshards, nl).transpose(0, 2, 1, 3)
     a = np.arange(nshards)
@@ -107,31 +171,11 @@ def make_halo_mix(mesh, axis: str, S, *, tag=None):
     n = S.shape[0]
     nshards = int(mesh.shape[axis])
     S0, plans = halo_plan(S, nshards)
-    perms = [[(j, (j - delta) % nshards) for j in range(nshards)]
-             for delta, _, _ in plans]
     S0_dev = jnp.asarray(S0)
     Sd_devs = tuple(jnp.asarray(Sd) for _, _, Sd in plans)
-    row_sets = [rows for _, rows, _ in plans]
-
-    def apply_S(Y, S0_loc, Sd_locs):
-        # Y (nl, d) local block; S0_loc (1, nl, nl); Sd_locs[i] (1, nl, r_i)
-        out = S0_loc[0] @ Y
-        for rows, perm, Sd in zip(row_sets, perms, Sd_locs):
-            recv = jax.lax.ppermute(Y[rows], axis, perm)
-            out = out + Sd[0] @ recv
-        return out
-
-    def filter_local(W_loc, h, S0_loc, Sd_locs):
-        K = h.shape[0] - 1
-        Y = h[K] * W_loc
-        for k in range(K - 1, -1, -1):
-            Y = apply_S(Y, S0_loc, Sd_locs) + h[k] * W_loc
-        return Y
-
-    smapped = _shard_map(
-        filter_local, mesh=mesh,
-        in_specs=(P(axis), P(), P(axis), tuple(P(axis) for _ in plans)),
-        out_specs=P(axis))
+    smapped = _halo_filter_smapped(mesh, axis,
+                                   [rows for _, rows, _ in plans],
+                                   _offset_perms(plans, nshards))
 
     def mix_fn(W, h):
         return smapped(W, h, S0_dev, Sd_devs)
@@ -158,10 +202,11 @@ def scheduled_halo_plan(S_stack, nshards):
     row just multiplies it by zero — so the plan (and the traced
     computation) is identical across t."""
     S_stack = np.asarray(S_stack, np.float32)
-    assert S_stack.ndim == 3 and S_stack.shape[1] == S_stack.shape[2], \
-        "S_stack must be (T, n, n)"
+    if S_stack.ndim != 3 or S_stack.shape[1] != S_stack.shape[2]:
+        raise ValueError(f"scheduled halo plan: S_stack must be (T, n, n), "
+                         f"got shape {tuple(S_stack.shape)}")
     T, n, _ = S_stack.shape
-    assert n % nshards == 0, f"n={n} must divide over {nshards} shards"
+    _check_divisible(n, nshards, "scheduled halo plan")
     nl = n // nshards
     union = (S_stack != 0.0).any(axis=0).astype(np.float32)
     _, plans_u = halo_plan(union, nshards)
@@ -193,30 +238,11 @@ class ScheduledHaloMix:
         T, n, _ = S_stack.shape
         nshards = int(mesh.shape[axis])
         S0_t, plans = scheduled_halo_plan(S_stack, nshards)
-        perms = [[(j, (j - delta) % nshards) for j in range(nshards)]
-                 for delta, _, _ in plans]
-        row_sets = [rows for _, rows, _ in plans]
         self._S0 = jnp.asarray(S0_t)            # (T, nshards, nl, nl)
         self._Sd = tuple(jnp.asarray(Sd) for _, _, Sd in plans)
-
-        def apply_S(Y, S0_loc, Sd_locs):
-            out = S0_loc[0] @ Y
-            for rows, perm, Sd in zip(row_sets, perms, Sd_locs):
-                recv = jax.lax.ppermute(Y[rows], axis, perm)
-                out = out + Sd[0] @ recv
-            return out
-
-        def filter_local(W_loc, h, S0_loc, Sd_locs):
-            K = h.shape[0] - 1
-            Y = h[K] * W_loc
-            for k in range(K - 1, -1, -1):
-                Y = apply_S(Y, S0_loc, Sd_locs) + h[k] * W_loc
-            return Y
-
-        self._smapped = _shard_map(
-            filter_local, mesh=mesh,
-            in_specs=(P(axis), P(), P(axis), tuple(P(axis) for _ in plans)),
-            out_specs=P(axis))
+        self._smapped = _halo_filter_smapped(mesh, axis,
+                                             [rows for _, rows, _ in plans],
+                                             _offset_perms(plans, nshards))
         self.steps = T
         self.plan = (S0_t, plans)
         # content identity of the schedule the blocks were built from —
@@ -249,3 +275,117 @@ def make_scheduled_halo_mix(mesh, axis: str, schedule, *, tag=None):
     ppermute exchange instead of the dense ``S_t @ W`` fallback."""
     S_stack = schedule.S if hasattr(schedule, "S") else schedule
     return ScheduledHaloMix(mesh, axis, S_stack, tag=tag)
+
+
+class SeedHaloMix:
+    """Per-SEED halo mixer for the seed-batched engine on a 2-D
+    ``('seed', 'agent')`` mesh: one seed- (and, for schedule stacks,
+    time-) constant exchange plan over the UNION support across every
+    seed's mixing matrices, with per-seed coefficient blocks stacked at
+    dim 0.
+
+    Engine protocol (``seed_batched = True``): ``repro.engine.seeds``
+    vmaps its meta step over ``(S_i, state_i, key_i, blocks_i)`` with
+    ``spmd_axis_name='seed'`` and calls ``bind(blocks_i, state.step)``
+    inside each lane — the bound filter runs the shared shard-mapped
+    exchange (``_halo_filter_smapped``) whose specs mention only the
+    AGENT axis, so the per-offset ``ppermute``s execute over each seed
+    row's agent sub-axis while the lanes stay sharded over 'seed'.
+
+    ``S_stack``: (n_seeds, n, n) static per-seed matrices, or
+    (n_seeds, T, n, n) per-seed schedule stacks (``scheduled = True``;
+    ``bind`` dynamic-indexes the lane's T axis by the carried step, so
+    checkpoint-restored runs resume the exact per-seed mixing streams).
+    Seeds of a scenario share a base graph and perturbations never ADD
+    edges, so the union across seeds/steps keeps a banded base's
+    ppermute savings — same argument as the scheduled mixer's union.
+    """
+
+    seed_batched = True
+
+    def __init__(self, mesh, axis, S_stack, *, tag=None):
+        # remember WHICH array object the blocks were built from: the
+        # engine's content-digest guard short-circuits on identity, so
+        # the common build-mixer-then-train path (train_surf(mix="halo"))
+        # never re-transfers and re-hashes the full stack per call
+        try:
+            self._src_ref = weakref.ref(S_stack)
+        except TypeError:
+            self._src_ref = None
+        S_stack = np.asarray(S_stack, np.float32)
+        if S_stack.ndim == 3:
+            scheduled = False
+            n_seeds, n, n2 = S_stack.shape
+        elif S_stack.ndim == 4:
+            scheduled = True
+            n_seeds, T, n, n2 = S_stack.shape
+        else:
+            raise ValueError(
+                "SeedHaloMix: S_stack must be (n_seeds, n, n) or "
+                f"(n_seeds, T, n, n), got shape {tuple(S_stack.shape)}")
+        if n2 != n:
+            raise ValueError(f"SeedHaloMix: mixing matrices must be "
+                             f"square, got {(n, n2)}")
+        nshards = int(mesh.shape[axis])
+        flat = S_stack.reshape(-1, n, n)
+        union = (flat != 0.0).any(axis=0).astype(np.float32)
+        _, plans_u = halo_plan(union, nshards)
+        nl = n // nshards
+        blocks = (flat.reshape(-1, nshards, nl, nshards, nl)
+                  .transpose(0, 1, 3, 2, 4))    # (B, a, b, nl, nl)
+        a = np.arange(nshards)
+        lead = (n_seeds, T) if scheduled else (n_seeds,)
+        S0 = blocks[:, a, a]                    # (B, nshards, nl, nl)
+        plans = []
+        for delta, rows, _ in plans_u:
+            blk = blocks[:, a, (a + delta) % nshards]
+            plans.append((delta, rows,
+                          np.ascontiguousarray(blk[:, :, :, rows])))
+        self._smapped = _halo_filter_smapped(
+            mesh, axis, [rows for _, rows, _ in plans],
+            _offset_perms(plans, nshards))
+        S0 = S0.reshape(lead + S0.shape[1:])
+        plans = [(d, rows, Sd.reshape(lead + Sd.shape[1:]))
+                 for d, rows, Sd in plans]
+        # the engine vmaps ``blocks`` with in_axes=0 — each lane binds
+        # its own (T,)?(nshards, nl, ·) coefficient blocks
+        self.blocks = (jnp.asarray(S0),
+                       tuple(jnp.asarray(Sd) for _, _, Sd in plans))
+        self.plan = (S0, plans)
+        self.scheduled = scheduled
+        self.steps = T if scheduled else None
+        self.n_seeds = n_seeds
+        self.stack_digest = hashlib.sha256(
+            S_stack.tobytes()).hexdigest()[:16]
+        if tag is None:
+            from repro.sharding.surf_rules import mesh_fingerprint
+            tag = ("halo-seeds", axis, n, n_seeds,
+                   T if scheduled else 0, nshards, self.stack_digest,
+                   mesh_fingerprint(mesh))
+        self.tag = tag
+
+    def bind(self, lane_blocks, t):
+        """The graph filter for ONE seed lane: ``lane_blocks`` is the
+        engine-vmap's dim-0 slice of ``self.blocks``; scheduled stacks
+        additionally select step ``t % T`` (``t`` may be the traced
+        carried ``state.step``)."""
+        S0, Sds = lane_blocks
+        if self.scheduled:
+            ti = t % self.steps
+            S0 = jax.lax.dynamic_index_in_dim(S0, ti, 0, keepdims=False)
+            Sds = tuple(jax.lax.dynamic_index_in_dim(Sd, ti, 0,
+                                                     keepdims=False)
+                        for Sd in Sds)
+        return lambda W, h: self._smapped(W, h, S0, Sds)
+
+
+def make_seed_halo_mix(mesh, axis: str, S_stack, *, tag=None):
+    """Build the per-seed halo mixer for ``train_surf(seeds=...)`` /
+    ``engine.seeds.make_seed_train_scan`` on a 2-D ('seed', 'agent')
+    mesh. ``S_stack``: the per-seed (n_seeds, n, n) static stack or
+    (n_seeds, T, n, n) schedule stack the engine trains with (also
+    accepts a list of per-seed ``TopologySchedule``s)."""
+    if isinstance(S_stack, (list, tuple)):
+        S_stack = np.stack([np.asarray(s.S if hasattr(s, "S") else s,
+                                       np.float32) for s in S_stack])
+    return SeedHaloMix(mesh, axis, S_stack, tag=tag)

@@ -151,7 +151,7 @@ def test_seed_batched_rejects_bad_inputs(mds):
         surf.train_surf(CFG, mds, steps=2, seeds=[0, 1], engine="python")
     with pytest.raises(ValueError, match="not both"):
         surf.train_surf(CFG, mds, steps=2, seed=7, seeds=[0, 1])
-    with pytest.raises(ValueError, match="dense mixing"):
+    with pytest.raises(ValueError, match="SEED-BATCHED"):
         surf.train_surf(CFG, mds, steps=2, seeds=[0, 1],
                         mix_fn=lambda W, h: W)
     with pytest.raises(ValueError, match="seed rows"):
@@ -415,6 +415,68 @@ def test_trainer_shim_reexports_engine():
     assert repro.core.surf is surf
     with pytest.raises(AttributeError):
         repro.core.nonexistent
+
+
+# ------------------------------------------ periodic in-scan checkpoints
+def test_in_scan_checkpoint_cadence_and_bit_exact_resume(mds, tmp_path):
+    """ISSUE satellite: ``checkpoint_every`` writes ckpt_<step> payloads
+    from INSIDE the compiled scan (io_callback at the snapshot-style
+    cond cadence), the checkpointing run equals the plain run bit for
+    bit, and resuming from an in-scan checkpoint is bit-exact."""
+    _, S = surf.make_problem(CFG, seed=0)
+    key = jax.random.PRNGKey(3)
+    d = str(tmp_path)
+    st_plain, _ = E.train_scan(CFG, S, mds, 20, key)
+    st_ck, _ = E.train_scan(CFG, S, mds, 20, key, checkpoint_every=5,
+                            checkpoint_dir=d)
+    assert ckpt.latest_step(d) == 20
+    steps = sorted(int(f[5:-5]) for f in os.listdir(d)
+                   if f.endswith(".json"))
+    assert steps == [5, 10, 15, 20]
+    for a, b in zip(jax.tree_util.tree_leaves(st_plain),
+                    jax.tree_util.tree_leaves(st_ck)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    st_res, hist = E.resume.resume_train_scan(CFG, S, mds, 20, key, d,
+                                              step=10, log_every=5)
+    assert [h["step"] for h in hist] == [10, 15, 19]
+    for a, b in zip(jax.tree_util.tree_leaves(st_ck),
+                    jax.tree_util.tree_leaves(st_res)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resumed_run_rearms_checkpoint_cadence(mds, tmp_path):
+    """A resumed run with checkpoint_every keeps saving on the SAME
+    absolute ckpt_<step> grid as the interrupted run (carried-step
+    cadence), into a directory of its own here to observe only the
+    post-resume saves."""
+    _, S = surf.make_problem(CFG, seed=0)
+    key = jax.random.PRNGKey(3)
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    E.train_scan(CFG, S, mds, 8, key, checkpoint_every=4,
+                 checkpoint_dir=d1)
+    E.resume.resume_train_scan(CFG, S, mds, 20, key, d1, step=8,
+                               checkpoint_every=4, checkpoint_dir=d2)
+    steps = sorted(int(f[5:-5]) for f in os.listdir(d2)
+                   if f.endswith(".json"))
+    assert steps == [12, 16, 20]
+
+
+def test_checkpoint_cadence_validation(mds, tmp_path):
+    _, S = surf.make_problem(CFG, seed=0)
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        E.make_train_scan(CFG, S, checkpoint_every=5)
+    with pytest.raises(ValueError, match="single-seed"):
+        surf.train_surf(CFG, mds, steps=4, seeds=[0, 1],
+                        checkpoint_every=2, checkpoint_dir=str(tmp_path))
+    with pytest.raises(ValueError, match="engine='scan'"):
+        surf.train_surf(CFG, mds, steps=4, engine="python",
+                        checkpoint_every=2, checkpoint_dir=str(tmp_path))
+
+
+def test_train_surf_checkpoint_passthrough(mds, tmp_path):
+    surf.train_surf(CFG, mds, steps=10, log_every=0, checkpoint_every=4,
+                    checkpoint_dir=str(tmp_path))
+    assert ckpt.latest_step(str(tmp_path)) == 8
 
 
 # -------------------------------------------- multi-device (sharded lane)

@@ -1,0 +1,302 @@
+"""The 2-D (seed × agent) axis system: ``make_surf_mesh`` validation,
+axis-role resolution in ``sharding.surf_rules``, the seed-batched halo
+mixer (``topology.halo.make_seed_halo_mix``) through the seed-batched
+engine — parity with sequential per-seed runs (train + snapshots +
+scheduled halo), single-trace compilation, and the collective-bytes
+drop of the halo exchange under the seed vmap.
+
+Multi-device tests need ``XLA_FLAGS=--xla_force_host_platform_device_
+count=8`` (the ``make test-sharded`` lane) and skip on a plain 1-device
+run; the validation/axis-role tests run in every lane.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine as E
+from repro.configs.base import SURFConfig
+from repro.core import surf
+from repro.data import synthetic
+from repro.launch.mesh import (host_device_count, make_agent_mesh,
+                               make_surf_mesh)
+from repro.sharding import surf_rules as R
+from repro.topology.halo import SeedHaloMix, halo_plan, make_seed_halo_mix
+
+NDEV = host_device_count()
+multi_device = pytest.mark.skipif(
+    NDEV < 8, reason="needs 8 devices: run via `make test-sharded` "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+# 16 agents divide over both 2- and 4-shard agent axes; ring keeps the
+# union support banded so the halo exchange stays collective-efficient.
+CFG = SURFConfig(n_agents=16, n_layers=3, filter_taps=2, feature_dim=8,
+                 n_classes=4, batch_per_agent=4, train_per_agent=8,
+                 test_per_agent=4, eps=0.05, topology="ring", degree=2)
+STEPS = 12
+SEEDS = [0, 1, 2, 3]
+
+
+@pytest.fixture(scope="module")
+def mds():
+    return synthetic.make_meta_dataset(CFG, 4, seed=0)
+
+
+@pytest.fixture(scope="module")
+def eval_ds():
+    return synthetic.make_meta_dataset(CFG, 3, seed=99)
+
+
+def _assert_trees_close(a, b, atol=2e-5, rtol=2e-5):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=atol, rtol=rtol)
+
+
+# --------------------------------------------- mesh + planner validation
+def test_make_surf_mesh_divisibility_errors_are_actionable():
+    """Indivisible problem sizes fail UP FRONT with a fix, before any
+    device allocation (so they are testable on 1 device too)."""
+    with pytest.raises(ValueError, match="n_agents=10 does not divide"):
+        make_surf_mesh(2, 4, n_agents=10)
+    with pytest.raises(ValueError, match="n_seeds=4 does not divide"):
+        make_surf_mesh(3, 1, n_seeds=4)
+    with pytest.raises(ValueError, match="must be >= 1"):
+        make_surf_mesh(0, 1)
+
+
+def test_make_surf_mesh_device_count_error_names_the_fix():
+    need = NDEV + 1
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        make_surf_mesh(need, 1)
+
+
+def test_make_surf_mesh_axis_names_and_degenerate_cases():
+    mesh = make_surf_mesh(1, 1)
+    assert mesh.axis_names == ("seed", "agent")
+    assert mesh.shape["seed"] == 1 and mesh.shape["agent"] == 1
+
+
+def test_halo_plan_divisibility_error_is_actionable():
+    with pytest.raises(ValueError, match="divisors of 10"):
+        halo_plan(np.eye(10, dtype=np.float32), 4)
+    with pytest.raises(ValueError, match="must be \\(n, n\\)"):
+        halo_plan(np.ones((4, 5), np.float32), 2)
+
+
+# ------------------------------------------------- axis-role resolution
+def test_axis_for_role_resolves_named_then_legacy_axes():
+    mesh2d = make_surf_mesh(1, 1)
+    assert R.axis_for_role(mesh2d, "seed") == "seed"
+    assert R.axis_for_role(mesh2d, "agent") == "agent"
+    legacy = make_agent_mesh(1)
+    assert R.axis_for_role(legacy, "seed") == "data"
+    assert R.axis_for_role(legacy, "agent") == "data"
+    with pytest.raises(ValueError, match="unknown axis role"):
+        R.axis_for_role(mesh2d, "batch")
+
+
+def test_rules_place_roles_on_their_axes():
+    """On a 2-D mesh the seed rule shards 'seed' and the agent/stacked/Q
+    rules shard 'agent'; on the legacy 1-D mesh both degrade to 'data'
+    (same specs as before the refactor)."""
+    if NDEV >= 8:
+        mesh = make_surf_mesh(2, 4)
+        assert R.seed_sharding(mesh, 4).spec == jax.sharding.PartitionSpec(
+            "seed")
+        assert R.agent_sharding(mesh, 16).spec == \
+            jax.sharding.PartitionSpec("agent")
+        assert R.stacked_agent_sharding(mesh, 16).spec == \
+            jax.sharding.PartitionSpec(None, "agent")
+        assert R.stacked_q_sharding(mesh, 8).spec == \
+            jax.sharding.PartitionSpec("agent")
+    legacy = make_agent_mesh(1)
+    # size-1 axes replicate (P()) exactly as before
+    assert R.seed_sharding(legacy, 4).spec == jax.sharding.PartitionSpec()
+    assert R.agent_sharding(legacy, 16).spec == \
+        jax.sharding.PartitionSpec()
+
+
+@multi_device
+def test_seed_scan_shardings_compose_agent_axis_on_2d_mesh():
+    """The seed-batched engine's shared pool: replicated on a 1-D mesh
+    (pre-2-D behavior), agent-sharded at dim 1 on a ('seed', 'agent')
+    mesh — leaf-aware, so aux leaves without an agent axis replicate."""
+    from repro.data.pipeline import stack_meta_datasets
+    mds = synthetic.make_meta_dataset(CFG, 3, seed=1)
+    nested = [dict(d, aux={"w": np.full((2,), float(q))})
+              for q, d in enumerate(mds)]
+    stacked = stack_meta_datasets(nested)
+    mesh = make_surf_mesh(2, 4)
+    (seed_sh, stacked_sh, *_), _ = R.seed_scan_shardings(
+        mesh, 4, n_agents=CFG.n_agents, stacked=stacked)
+    assert seed_sh.spec == jax.sharding.PartitionSpec("seed")
+    assert stacked_sh["Xtr"].spec == jax.sharding.PartitionSpec(
+        None, "agent")
+    assert stacked_sh["aux"]["w"].spec == jax.sharding.PartitionSpec()
+    legacy = make_agent_mesh(8)
+    (_, pool_sh, *_), _ = R.seed_scan_shardings(
+        legacy, 8, n_agents=CFG.n_agents, stacked=stacked)
+    assert pool_sh.spec == jax.sharding.PartitionSpec()
+
+
+# --------------------------------------------- seed-halo mixer protocol
+def test_seed_halo_mix_validation_and_engine_guards(mds):
+    mesh = make_surf_mesh(1, 1)
+    with pytest.raises(ValueError, match="n_seeds, n, n"):
+        SeedHaloMix(mesh, "agent", np.eye(4, dtype=np.float32))
+    S4 = jnp.stack([surf.make_problem(CFG, s)[1] for s in SEEDS])
+    mix = make_seed_halo_mix(mesh, "agent", np.asarray(S4))
+    assert mix.seed_batched and not mix.scheduled
+    assert mix.n_seeds == len(SEEDS)
+    # single-seed builders reject seed-batched mixers
+    with pytest.raises(ValueError, match="single-seed"):
+        E.make_train_scan(CFG, S4[0], mix_fn=mix, mesh=mesh)
+    with pytest.raises(ValueError, match="single-seed"):
+        E.make_meta_step(CFG, S4[0], mix_fn=mix)
+    # the seed engine rejects static mixers (one baked topology)
+    from repro.topology.halo import make_halo_mix
+    static = make_halo_mix(mesh, "agent", np.asarray(S4[0]))
+    with pytest.raises(ValueError, match="SEED-BATCHED"):
+        E.make_seed_train_scan(CFG, S4, mix_fn=static, mesh=mesh)
+    # content-digest mismatch: built from a DIFFERENT per-seed stack
+    other = jnp.stack([surf.make_problem(CFG, s + 7)[1] for s in SEEDS])
+    wrong = make_seed_halo_mix(mesh, "agent", np.asarray(other))
+    if wrong.stack_digest != mix.stack_digest:
+        with pytest.raises(ValueError, match="digest mismatch"):
+            E.make_seed_train_scan(CFG, S4, mix_fn=wrong, mesh=mesh)
+    # static mixer + schedule stack shape mismatch
+    sched_stack = jnp.broadcast_to(S4[:, None], (len(SEEDS), 5, 16, 16))
+    with pytest.raises(ValueError, match="static stack"):
+        E.make_seed_train_scan(CFG, sched_stack, mix_fn=mix, mesh=mesh)
+    # a mesh without the named axes is rejected
+    legacy = make_agent_mesh(1)
+    with pytest.raises(ValueError, match="'seed', 'agent'"):
+        E.make_seed_train_scan(CFG, S4, mix_fn=mix, mesh=legacy)
+
+
+def test_train_surf_mix_string_validation(mds):
+    with pytest.raises(ValueError, match="not both"):
+        surf.train_surf(CFG, mds, steps=2, mix="halo",
+                        mix_fn=lambda W, h: W)
+    with pytest.raises(ValueError, match="mix must be one of"):
+        surf.train_surf(CFG, mds, steps=2, mix="butterfly")
+    with pytest.raises(ValueError, match="needs mesh="):
+        surf.train_surf(CFG, mds, steps=2, mix="halo")
+    with pytest.raises(ValueError, match="use mix='halo'"):
+        surf.train_surf(CFG, mds, steps=2, seeds=[0, 1], mix="ring",
+                        mesh=make_surf_mesh(1, 1))
+
+
+@multi_device
+def test_seed_engine_raises_on_indivisible_seed_axis(mds):
+    """A named 'seed' axis must NOT silently replicate an indivisible
+    seed batch — 3 seeds on seed_shards=2 raises with the fix."""
+    mesh = make_surf_mesh(2, 4)
+    with pytest.raises(ValueError, match="n_seeds=3 does not divide"):
+        surf.train_surf(CFG, mds, steps=4, seeds=[0, 1, 2], mesh=mesh,
+                        mix="halo")
+
+
+# ----------------------------------------- 2-D engine parity (tentpole)
+@multi_device
+@pytest.mark.parametrize("seed_shards,agent_shards", [(2, 4), (4, 2)])
+def test_2d_halo_train_matches_sequential(mds, seed_shards, agent_shards):
+    """ISSUE acceptance: train_surf(seeds=0..3) on a ('seed', 'agent')
+    mesh with mix='halo' is parity-exact with the sequential seed=i
+    dense runs (state AND history) and compiles ONE meta-step trace."""
+    mesh = make_surf_mesh(seed_shards, agent_shards,
+                          n_seeds=len(SEEDS), n_agents=CFG.n_agents)
+    E.TRACE_COUNTS["meta_step"] = 0
+    states, hist, _ = surf.train_surf(CFG, mds, steps=STEPS, seeds=SEEDS,
+                                      log_every=6, mesh=mesh, mix="halo")
+    assert E.TRACE_COUNTS["meta_step"] == 1
+    for i, s in enumerate(SEEDS):
+        st_i, h_i, _ = surf.train_surf(CFG, mds, steps=STEPS, seed=s,
+                                       log_every=6)
+        _assert_trees_close(E.state_for_seed(states, i), st_i)
+        assert [h["step"] for h in hist] == [h["step"] for h in h_i]
+        for hb, hs in zip(hist, h_i):
+            for k in hs:
+                if k == "step":
+                    continue
+                np.testing.assert_allclose(hb[k][i], hs[k], atol=1e-4,
+                                           rtol=1e-3)
+
+
+@multi_device
+@pytest.mark.parametrize("seed_shards,agent_shards", [(2, 4), (4, 2)])
+def test_2d_scheduled_halo_snapshots_match_sequential(mds, eval_ds,
+                                                      seed_shards,
+                                                      agent_shards):
+    """The full composition on both 2-D shapes: per-seed link-failure
+    schedules through the seed-batched SCHEDULED halo mixer WITH in-scan
+    snapshots — states and snapshot rows match the sequential per-seed
+    scenario runs."""
+    mesh = make_surf_mesh(seed_shards, agent_shards,
+                          n_seeds=len(SEEDS), n_agents=CFG.n_agents)
+    states, _, snaps, _ = surf.train_surf(
+        CFG, mds, steps=STEPS, seeds=SEEDS, scenario="link-failure",
+        log_every=0, eval_every=4, eval_datasets=eval_ds, mesh=mesh,
+        mix="halo")
+    assert len(snaps) == STEPS // 4
+    for i, s in enumerate(SEEDS):
+        st_i, _, sn_i, _ = surf.train_surf(
+            CFG, mds, steps=STEPS, seed=s, scenario="link-failure",
+            log_every=0, eval_every=4, eval_datasets=eval_ds)
+        _assert_trees_close(E.state_for_seed(states, i), st_i)
+        for sb, ss in zip(snaps, sn_i):
+            assert sb["step"] == ss["step"]
+            np.testing.assert_allclose(sb["final_acc"][i], ss["final_acc"],
+                                       atol=1e-4, rtol=1e-3)
+            np.testing.assert_allclose(sb["acc_per_layer"][i],
+                                       ss["acc_per_layer"], atol=1e-4,
+                                       rtol=1e-3)
+
+
+@multi_device
+def test_2d_dense_seed_engine_still_matches(mds):
+    """The dense path on a 2-D mesh (seed sharded, pool agent-sharded,
+    no mixer) is the bytes baseline — it must stay parity-exact too."""
+    mesh = make_surf_mesh(2, 4, n_seeds=len(SEEDS), n_agents=CFG.n_agents)
+    st_u, _, _ = surf.train_surf(CFG, mds, steps=STEPS, seeds=SEEDS,
+                                 log_every=0)
+    st_s, _, _ = surf.train_surf(CFG, mds, steps=STEPS, seeds=SEEDS,
+                                 log_every=0, mesh=mesh)
+    _assert_trees_close(st_u, st_s)
+
+
+@multi_device
+def test_2d_halo_collective_bytes_drop_under_seed_vmap(mds):
+    """ISSUE acceptance (efficiency half): on a (2, 4) mesh the halo
+    exchange under the seed vmap moves strictly fewer collective bytes
+    per meta-step than the dense per-lane S_i @ W path, and lowers to
+    real collective-permutes."""
+    from repro.launch.surf_dryrun import seed_meta_step_collective_bytes
+    mesh = make_surf_mesh(2, 4, n_seeds=len(SEEDS), n_agents=CFG.n_agents)
+    S4 = jnp.stack([surf.make_problem(CFG, s)[1] for s in SEEDS])
+    dense, _ = seed_meta_step_collective_bytes(CFG, S4, mesh)
+    mix = make_seed_halo_mix(mesh, "agent", np.asarray(S4))
+    halo, by_kind = seed_meta_step_collective_bytes(CFG, S4, mesh,
+                                                    mix_fn=mix)
+    assert halo < dense, f"halo {halo} !< dense {dense}"
+    assert by_kind.get("collective-permute", 0) > 0
+
+
+@multi_device
+def test_2d_engine_cache_keys_carry_mesh_and_mixer():
+    """(2, 4) and (4, 2) meshes (different fingerprints) and their
+    seed-batched mixers (different tags) never collide in the engine
+    cache; the seed mixer's tag hashes the per-seed stack contents."""
+    S4 = jnp.stack([surf.make_problem(CFG, s)[1] for s in SEEDS])
+    m24 = make_surf_mesh(2, 4)
+    m42 = make_surf_mesh(4, 2)
+    mix24 = make_seed_halo_mix(m24, "agent", np.asarray(S4))
+    mix42 = make_seed_halo_mix(m42, "agent", np.asarray(S4))
+    assert mix24.tag != mix42.tag
+    keys = {E._engine_cache_key(CFG, ("train-seeds",), "relu", None,
+                                mesh=m, mix_fn=f)
+            for m, f in [(m24, mix24), (m42, mix42), (m24, None),
+                         (m42, None)]}
+    assert len(keys) == 4
