@@ -19,11 +19,17 @@
 #                       meta_step exactly once and the halo exchange under
 #                       the seed vmap moves fewer collective bytes than
 #                       the dense per-lane S_i @ W: BENCH_mesh2d.json
+#   make bench-tasks  — task-layer smoke: ASSERTS classification AND
+#                       sparse recovery each trace meta_step exactly once
+#                       through the one engine, and sparse-recovery eval
+#                       NMSE decreases monotonically with unrolled depth
+#                       L in {3, 6, 10} (best of 3 training restarts per
+#                       depth): BENCH_tasks.json
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-fast test-sharded bench bench-scan bench-topology \
-	bench-engine bench-mesh2d
+	bench-engine bench-mesh2d bench-tasks
 
 test:
 	$(PY) -m pytest -x -q
@@ -49,3 +55,6 @@ bench-engine:
 
 bench-mesh2d:
 	sh scripts/bench.sh mesh2d
+
+bench-tasks:
+	sh scripts/bench.sh tasks

@@ -15,6 +15,13 @@
 #                              # meta_step ONCE (asserted) + halo bytes
 #                              # under the seed vmap < dense (asserted)
 #                              # -> bench_out/BENCH_mesh2d.json
+#   scripts/bench.sh tasks     # task-layer smoke: classification AND
+#                              # sparse recovery each trace meta_step
+#                              # ONCE (asserted) + sparse eval NMSE
+#                              # decreases monotonically over unrolled
+#                              # depth L in {3,6,10}, best of 3 training
+#                              # restarts per depth (asserted) ->
+#                              # bench_out/BENCH_tasks.json
 #   scripts/bench.sh all       # full paper-figure battery (benchmarks.run)
 set -e
 cd "$(dirname "$0")/.."
@@ -32,9 +39,11 @@ case "${1:-scan}" in
   mesh2d)
     export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
     exec python -m benchmarks.mesh2d_bench ;;
+  tasks)
+    exec python -m benchmarks.tasks_bench ;;
   all)
     exec python -m benchmarks.run ;;
   *)
-    echo "usage: scripts/bench.sh [scan|topology|engine|mesh2d|all]" >&2
+    echo "usage: scripts/bench.sh [scan|topology|engine|mesh2d|tasks|all]" >&2
     exit 2 ;;
 esac

@@ -115,6 +115,22 @@ def state_save_callback(directory, prefix="ckpt_"):
     return cb
 
 
+def stacked_state_save_callback(directory, prefix="ckpt_"):
+    """Seed-batched sibling of ``state_save_callback``: the seed engine's
+    cadence hands the STACKED per-seed state tree (every leaf carrying a
+    leading ``n_seeds`` axis, the lockstep ``step`` a (n_seeds,) vector)
+    to this function, which writes ONE payload for all lanes under
+    ``<directory>/<prefix><step>/seeds`` — the layout
+    ``engine.resume.restore_seed_states`` / ``resume_train_scan_seeds``
+    restore from bit-exactly. Seeds advance in lockstep, so lane 0's
+    carried step names the checkpoint."""
+    def cb(states):
+        step = int(np.asarray(states.step).reshape(-1)[0])
+        save(os.path.join(directory, f"{prefix}{step}", "seeds"),
+             states, step=step)
+    return cb
+
+
 def latest_step(directory, prefix="ckpt_"):
     """Highest checkpoint step under ``directory``, or None when the
     directory is missing, empty, or holds no parseable checkpoints

@@ -182,6 +182,47 @@ class ShapeConfig:
 
 
 @dataclass(frozen=True)
+class TaskConfig:
+    """Pure-data description of the inner FL problem the unrolled optimizer
+    solves. Subclasses carry the task hyperparameters and the per-agent
+    weight dimension; ``repro.core.tasks.resolve_task`` turns one into the
+    executable ``Task`` object (losses / metrics / synthesis)."""
+    kind: str = "abstract"
+
+    @property
+    def dim(self) -> int:
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class ClassificationTaskConfig(TaskConfig):
+    """Softmax-classifier head on frozen features (paper §6)."""
+    kind: str = "classification"
+    feature_dim: int = 64
+    n_classes: int = 10
+
+    @property
+    def dim(self) -> int:
+        return self.feature_dim * self.n_classes + self.n_classes
+
+
+@dataclass(frozen=True)
+class SparseRecoveryTaskConfig(TaskConfig):
+    """Federated LASSO (arxiv 2010.12616): per-agent
+    ½·mean((A_i w − y_i)²) + ρ‖w‖₁ over a shared k-sparse signal."""
+    kind: str = "sparse_recovery"
+    signal_dim: int = 32        # p — recovered signal length
+    rho: float = 0.02           # ℓ1 penalty weight
+    sparsity: int = 4           # nonzeros in the synthetic ground truth
+    noise: float = 0.01         # measurement noise std in synthesis
+    signal_scale: float = 1.0   # std of the nonzero ground-truth entries
+
+    @property
+    def dim(self) -> int:
+        return self.signal_dim
+
+
+@dataclass(frozen=True)
 class SURFConfig:
     """Paper-faithful SURF / U-DGD hyperparameters (§6 of the paper)."""
     n_agents: int = 100
@@ -200,7 +241,24 @@ class SURFConfig:
     topology: str = "regular"   # regular | er | star | ring
     degree: int = 3
     er_p: float = 0.1
+    # Inner problem. None keeps the legacy classification task built from
+    # feature_dim/n_classes above (bit-exact default); any TaskConfig
+    # overrides it and makes feature_dim/n_classes inert.
+    task: Optional[TaskConfig] = None
+    # RSDUN robust descending constraints (arxiv 2312.15788): when
+    # robust_sigma > 0 the per-layer grad norms are the max over
+    # robust_samples Gaussian perturbations W_l + σδ of the iterates
+    # (and the nominal point), tightening the slack the dual ascent sees.
+    robust_sigma: float = 0.0
+    robust_samples: int = 2
+
+    @property
+    def task_config(self) -> TaskConfig:
+        if self.task is not None:
+            return self.task
+        return ClassificationTaskConfig(feature_dim=self.feature_dim,
+                                        n_classes=self.n_classes)
 
     @property
     def head_dim(self) -> int:
-        return self.feature_dim * self.n_classes + self.n_classes
+        return self.task_config.dim

@@ -8,9 +8,13 @@ Classical/star: FedAvg, FedProx (proximal local objective), SCAFFOLD
 dynamic-regularizer machinery is orthogonal to the convergence-rate claim
 we validate; noted in EXPERIMENTS.md).
 
-All operate on the same softmax-head task as U-DGD; every mixing with the
-graph (or server round-trip) counts as ONE communication round so the
-x-axes match the paper's figures.
+All operate on the same inner ``Task`` as U-DGD (``task=`` — frozen,
+hashable, a jit-static argument; None resolves the config's task, legacy
+classification by default); every mixing with the graph (or server
+round-trip) counts as ONE communication round so the x-axes match the
+paper's figures. The metric slot named "acc" generically carries
+``task.fl_metric`` (accuracy for classification, NMSE for sparse
+recovery).
 """
 from __future__ import annotations
 
@@ -20,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SURFConfig
-from repro.core import task as T
+from repro.core.tasks import resolve_task
 
 
 def _sample_batch(key, Xtr, Ytr, b):
@@ -31,46 +35,51 @@ def _sample_batch(key, Xtr, Ytr, b):
     return Xb, Yb
 
 
-def _local_grads(W, Xb, Yb, cfg):
-    return jax.vmap(jax.grad(T.local_loss), (0, 0, 0, None, None))(
-        W, Xb, Yb, cfg.feature_dim, cfg.n_classes)
+def _local_grads(W, Xb, Yb, task):
+    return jax.vmap(jax.grad(task.local_loss))(W, Xb, Yb)
 
 
-def _metrics(W, batch, cfg):
-    return (T.fl_loss(W, batch["Xte"], batch["Yte"], cfg.feature_dim, cfg.n_classes),
-            T.fl_accuracy(W, batch["Xte"], batch["Yte"], cfg.feature_dim, cfg.n_classes))
+def _metrics(W, batch, task):
+    return (task.fl_loss(W, batch["Xte"], batch["Yte"]),
+            task.fl_metric(W, batch["Xte"], batch["Yte"]))
 
 
-@partial(jax.jit, static_argnames=("cfg", "rounds", "lr"))
-def run_dgd(S, W0, batch, key, cfg: SURFConfig, rounds=200, lr=1e-3):
+@partial(jax.jit, static_argnames=("cfg", "rounds", "lr", "task"))
+def run_dgd(S, W0, batch, key, cfg: SURFConfig, rounds=200, lr=1e-3,
+            task=None):
     """W ← S W − β ∇f_local(W), full local batch each round."""
+    task = resolve_task(cfg, task)
     def body(W, _):
-        g = _local_grads(W, batch["Xtr"], batch["Ytr"], cfg)
+        g = _local_grads(W, batch["Xtr"], batch["Ytr"], task)
         W = S @ W - lr * g
-        return W, _metrics(W, batch, cfg)
+        return W, _metrics(W, batch, task)
     W, (loss, acc) = jax.lax.scan(body, W0, None, length=rounds)
     return {"loss": loss, "acc": acc}
 
 
-@partial(jax.jit, static_argnames=("cfg", "rounds", "lr"))
-def run_dsgd(S, W0, batch, key, cfg: SURFConfig, rounds=200, lr=1e-4):
+@partial(jax.jit, static_argnames=("cfg", "rounds", "lr", "task"))
+def run_dsgd(S, W0, batch, key, cfg: SURFConfig, rounds=200, lr=1e-4,
+             task=None):
     """One-sample stochastic gradient per round."""
+    task = resolve_task(cfg, task)
     def body(carry, _):
         W, k = carry
         k, sub = jax.random.split(k)
         Xb, Yb = _sample_batch(sub, batch["Xtr"], batch["Ytr"], 1)
-        g = _local_grads(W, Xb, Yb, cfg)
+        g = _local_grads(W, Xb, Yb, task)
         W = S @ W - lr * g
-        return (W, k), _metrics(W, batch, cfg)
+        return (W, k), _metrics(W, batch, task)
     (W, _), (loss, acc) = jax.lax.scan(body, (W0, key), None, length=rounds)
     return {"loss": loss, "acc": acc}
 
 
-@partial(jax.jit, static_argnames=("cfg", "rounds", "lr", "local_steps", "beta"))
+@partial(jax.jit, static_argnames=("cfg", "rounds", "lr", "local_steps",
+                                   "beta", "task"))
 def run_dfedavgm(S, W0, batch, key, cfg: SURFConfig, rounds=200, lr=1e-2,
-                 local_steps=6, beta=0.9):
+                 local_steps=6, beta=0.9, task=None):
     """Decentralized FedAvg with momentum (Sun et al. 2023): 6 local
     momentum SGD steps on mini-batches, then one graph mixing."""
+    task = resolve_task(cfg, task)
     def body(carry, _):
         W, mom, k = carry
         def local(carry2, _):
@@ -78,13 +87,13 @@ def run_dfedavgm(S, W0, batch, key, cfg: SURFConfig, rounds=200, lr=1e-2,
             k_, sub = jax.random.split(k_)
             Xb, Yb = _sample_batch(sub, batch["Xtr"], batch["Ytr"],
                                    cfg.batch_per_agent)
-            g = _local_grads(W_, Xb, Yb, cfg)
+            g = _local_grads(W_, Xb, Yb, task)
             m_ = beta * m_ + g
             return (W_ - lr * m_, m_, k_), None
         (W, mom, k), _ = jax.lax.scan(local, (W, mom, k), None,
                                       length=local_steps)
         W = S @ W
-        return (W, mom, k), _metrics(W, batch, cfg)
+        return (W, mom, k), _metrics(W, batch, task)
     init = (W0, jnp.zeros_like(W0), key)
     (W, _, _), (loss, acc) = jax.lax.scan(body, init, None, length=rounds)
     return {"loss": loss, "acc": acc}
@@ -92,10 +101,11 @@ def run_dfedavgm(S, W0, batch, key, cfg: SURFConfig, rounds=200, lr=1e-2,
 
 # --------------------------------------------------------- classical (star)
 @partial(jax.jit, static_argnames=("cfg", "rounds", "lr", "local_steps",
-                                   "participate"))
+                                   "participate", "task"))
 def run_fedavg(W0, batch, key, cfg: SURFConfig, rounds=25, lr=1e-1,
-               local_steps=6, participate=10):
+               local_steps=6, participate=10, task=None):
     """FedAvg with partial participation (paper: 10 agents/round)."""
+    task = resolve_task(cfg, task)
     n = cfg.n_agents
     def body(carry, _):
         w, k = carry                       # global weight (d,)
@@ -109,22 +119,22 @@ def run_fedavg(W0, batch, key, cfg: SURFConfig, rounds=25, lr=1e-1,
                                      0, Ys.shape[1])
             Xb = jnp.take_along_axis(Xs, idx[..., None], axis=1)
             Yb = jnp.take_along_axis(Ys, idx, axis=1)
-            g = jax.vmap(jax.grad(T.local_loss), (0, 0, 0, None, None))(
-                W_, Xb, Yb, cfg.feature_dim, cfg.n_classes)
+            g = _local_grads(W_, Xb, Yb, task)
             return W_ - lr * g, None
         W_local, _ = jax.lax.scan(local, W_local, jnp.arange(local_steps))
         w = jnp.mean(W_local, axis=0)
         Wfull = jnp.tile(w[None], (n, 1))
-        return (w, k), _metrics(Wfull, batch, cfg)
+        return (w, k), _metrics(Wfull, batch, task)
     (w, _), (loss, acc) = jax.lax.scan(body, (W0[0], key), None, length=rounds)
     return {"loss": loss, "acc": acc}
 
 
 @partial(jax.jit, static_argnames=("cfg", "rounds", "lr", "local_steps",
-                                   "participate", "mu"))
+                                   "participate", "mu", "task"))
 def run_fedprox(W0, batch, key, cfg: SURFConfig, rounds=25, lr=1e-1,
-                local_steps=6, participate=10, mu=0.1):
+                local_steps=6, participate=10, mu=0.1, task=None):
     """FedProx: local objective + (μ/2)‖w − w_global‖²."""
+    task = resolve_task(cfg, task)
     n = cfg.n_agents
     def body(carry, _):
         w, k = carry
@@ -138,23 +148,23 @@ def run_fedprox(W0, batch, key, cfg: SURFConfig, rounds=25, lr=1e-1,
                                      0, Ys.shape[1])
             Xb = jnp.take_along_axis(Xs, idx[..., None], axis=1)
             Yb = jnp.take_along_axis(Ys, idx, axis=1)
-            g = jax.vmap(jax.grad(T.local_loss), (0, 0, 0, None, None))(
-                W_, Xb, Yb, cfg.feature_dim, cfg.n_classes)
+            g = _local_grads(W_, Xb, Yb, task)
             g = g + mu * (W_ - w[None])
             return W_ - lr * g, None
         W_local, _ = jax.lax.scan(local, W_local, jnp.arange(local_steps))
         w = jnp.mean(W_local, axis=0)
         Wfull = jnp.tile(w[None], (n, 1))
-        return (w, k), _metrics(Wfull, batch, cfg)
+        return (w, k), _metrics(Wfull, batch, task)
     (w, _), (loss, acc) = jax.lax.scan(body, (W0[0], key), None, length=rounds)
     return {"loss": loss, "acc": acc}
 
 
 @partial(jax.jit, static_argnames=("cfg", "rounds", "lr", "local_steps",
-                                   "participate"))
+                                   "participate", "task"))
 def run_scaffold(W0, batch, key, cfg: SURFConfig, rounds=25, lr=1e-1,
-                 local_steps=6, participate=10):
+                 local_steps=6, participate=10, task=None):
     """SCAFFOLD (Karimireddy et al. 2020) with option-II control variates."""
+    task = resolve_task(cfg, task)
     n, d = W0.shape
     def body(carry, _):
         w, c, ci, k = carry                # global w, global c, per-agent c_i
@@ -169,8 +179,7 @@ def run_scaffold(W0, batch, key, cfg: SURFConfig, rounds=25, lr=1e-1,
                                      0, Ys.shape[1])
             Xb = jnp.take_along_axis(Xs, idx[..., None], axis=1)
             Yb = jnp.take_along_axis(Ys, idx, axis=1)
-            g = jax.vmap(jax.grad(T.local_loss), (0, 0, 0, None, None))(
-                W_, Xb, Yb, cfg.feature_dim, cfg.n_classes)
+            g = _local_grads(W_, Xb, Yb, task)
             return W_ - lr * (g - ci_sel + c[None]), None
         W_local, _ = jax.lax.scan(local, W_local, jnp.arange(local_steps))
         ci_new_sel = ci_sel - c[None] + (w[None] - W_local) / (local_steps * lr)
@@ -178,7 +187,7 @@ def run_scaffold(W0, batch, key, cfg: SURFConfig, rounds=25, lr=1e-1,
         c_new = c + jnp.sum(ci_new_sel - ci_sel, axis=0) / n
         w_new = w + jnp.mean(W_local - w[None], axis=0)
         Wfull = jnp.tile(w_new[None], (n, 1))
-        return (w_new, c_new, ci_new, k), _metrics(Wfull, batch, cfg)
+        return (w_new, c_new, ci_new, k), _metrics(Wfull, batch, task)
     init = (W0[0], jnp.zeros((d,)), jnp.zeros((n, d)), key)
     (w, _, _, _), (loss, acc) = jax.lax.scan(body, init, None, length=rounds)
     return {"loss": loss, "acc": acc}

@@ -7,6 +7,13 @@ Gradient norms use *stochastic* gradients evaluated on each layer's own
 mini-batch (the stochastic-unrolling uncertainty the theory handles).
 ∇_θ of the Lagrangian therefore differentiates through ‖∇_W f‖ —
 grad-of-grad, handled natively by JAX.
+
+The ROBUST variant (RSDUN, arxiv 2312.15788) replaces each layer's
+gradient norm with the max over Gaussian perturbations of the iterate,
+``max(‖∇f(W_l)‖, max_j ‖∇f(W_l + σδ_j)‖)`` — descent must hold in a
+σ-neighbourhood of the trajectory, not just on it. Enabled via
+``cfg.robust_sigma > 0``; the dual-ascent loop is unchanged, and at
+σ=0 the robust slack equals (hence upper-bounds) the nominal slack.
 """
 from __future__ import annotations
 
@@ -14,22 +21,51 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SURFConfig
-from repro.core import task as T
+from repro.core.tasks import resolve_task
 
 
-def layer_grad_norms(W_all, Xl, Yl, cfg: SURFConfig):
+def layer_grad_norms(W_all, Xl, Yl, cfg: SURFConfig, task=None):
     """‖∇f(W_l)‖ for l=0..L. W_all (L+1,n,d); Xl (L,n,b,F); Yl (L,n,b).
     Layer l>0 is evaluated on the batch that produced it (B_l); W_0 on B_1."""
+    task = resolve_task(cfg, task)
     Xe = jnp.concatenate([Xl[:1], Xl], axis=0)        # (L+1, n, b, F)
     Ye = jnp.concatenate([Yl[:1], Yl], axis=0)
-    def gn(W, X, Y):
-        return T.grad_norm(W, X, Y, cfg.feature_dim, cfg.n_classes)
-    return jax.vmap(gn)(W_all, Xe, Ye)                # (L+1,)
+    return jax.vmap(task.grad_norm)(W_all, Xe, Ye)    # (L+1,)
+
+
+def robust_layer_grad_norms(W_all, Xl, Yl, cfg: SURFConfig, key,
+                            task=None, nominal=None):
+    """RSDUN perturbation-sampled grad norms: elementwise max of the
+    nominal ‖∇f(W_l)‖ and ``cfg.robust_samples`` draws ‖∇f(W_l + σδ)‖
+    with δ ~ N(0, I), σ = cfg.robust_sigma. Returns (L+1,); reduces to
+    the nominal norms when σ=0 or no samples are drawn."""
+    task = resolve_task(cfg, task)
+    if nominal is None:
+        nominal = layer_grad_norms(W_all, Xl, Yl, cfg, task=task)
+    sigma, n_pert = cfg.robust_sigma, cfg.robust_samples
+    if sigma == 0.0 or n_pert <= 0:
+        return nominal
+    Xe = jnp.concatenate([Xl[:1], Xl], axis=0)
+    Ye = jnp.concatenate([Yl[:1], Yl], axis=0)
+
+    def perturbed(k):
+        delta = jax.random.normal(k, W_all.shape, W_all.dtype)
+        return jax.vmap(task.grad_norm)(W_all + sigma * delta, Xe, Ye)
+    pert = jax.vmap(perturbed)(jax.random.split(key, n_pert))  # (n_pert, L+1)
+    return jnp.maximum(nominal, jnp.max(pert, axis=0))
 
 
 def slacks(gnorms, eps):
     """slack_l = ‖∇f(W_l)‖ − (1−ε)‖∇f(W_{l−1})‖, l=1..L."""
     return gnorms[1:] - (1.0 - eps) * gnorms[:-1]
+
+
+def robust_slacks(gnorms_robust, gnorms_nominal, eps):
+    """RSDUN slack: the ROBUST norm of layer l must descend relative to the
+    NOMINAL norm of layer l−1 (the reference point the trajectory actually
+    visits): slack_l = robust_l − (1−ε)·nominal_{l−1}. Since
+    robust_l ≥ nominal_l elementwise, this upper-bounds ``slacks``."""
+    return gnorms_robust[1:] - (1.0 - eps) * gnorms_nominal[:-1]
 
 
 def lagrangian(test_loss, slack, lam):

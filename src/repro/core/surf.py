@@ -23,8 +23,9 @@ import numpy as np
 from repro import engine as TR
 from repro.configs.base import SURFConfig
 from repro.core import graph as G
-from repro.core import task as T
 from repro.core import unroll as U
+from repro.core.tasks import (classification_task, resolve_task,  # noqa: F401
+                              sparse_recovery_task)
 from repro.data.pipeline import stack_meta_datasets
 
 
@@ -117,7 +118,8 @@ def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
                constrained=True, activation="relu", log_every=10,
                init="dgd", engine="scan", mix_fn=None, mix=None, mesh=None,
                scenario=None, schedule=None, seeds=None, eval_every=0,
-               eval_datasets=None, checkpoint_every=0, checkpoint_dir=None):
+               eval_datasets=None, checkpoint_every=0, checkpoint_dir=None,
+               task=None):
     """Meta-train U-DGD on the config's topology. ``scenario`` (a name
     from ``SCENARIOS``) or ``schedule`` (an explicit
     ``TopologySchedule``) trains under TIME-VARYING graphs — the
@@ -149,11 +151,18 @@ def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
     (state, hist, snapshots, S) / (states, hist, snapshots, S_stack).
 
     ``checkpoint_every``/``checkpoint_dir``: PERIODIC in-scan
-    checkpointing (single-seed scan engine) — the carried state is
-    written as ``ckpt_<step>`` at the cadence via an ``io_callback``
-    without leaving the compiled scan, and
-    ``engine.resume.resume_train_scan`` restores from those checkpoints
-    bit-exactly."""
+    checkpointing — the carried state is written at the cadence via an
+    ``io_callback`` without leaving the compiled scan: ``ckpt_<step>``
+    payloads for the single-seed engine
+    (``engine.resume.resume_train_scan`` restores bit-exactly) and
+    ``ckpt_<step>/seeds`` stacked per-seed payloads when combined with
+    ``seeds=`` (``engine.resume.resume_train_scan_seeds``).
+
+    ``task``: the inner FL problem (a ``core.tasks`` Task object, e.g.
+    ``classification_task(cfg)`` / ``sparse_recovery_task(...)``); None
+    resolves ``cfg.task`` (legacy classification by default). Every
+    engine path — dense/ring/halo mixers, schedules, seed batching —
+    is task-generic."""
     if engine not in ("scan", "python"):
         raise ValueError(f"engine must be 'scan' or 'python', got {engine!r}")
     if mesh is not None and engine != "scan":
@@ -181,13 +190,6 @@ def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
                              "checkpointing) requires engine='scan'")
         if not checkpoint_dir:
             raise ValueError("checkpoint_every > 0 needs checkpoint_dir")
-        if seeds is not None:
-            raise ValueError(
-                "checkpoint_every is single-seed: the stacked per-seed "
-                "TrainState has no scalar step to key ckpt_<step> files "
-                "by — checkpoint per-seed runs individually, or slice "
-                "rows out with engine.seeds.state_for_seed and save "
-                "them via engine.resume.save_state")
     if seeds is not None:
         if engine != "scan":
             raise ValueError("seed batching requires engine='scan'")
@@ -220,7 +222,9 @@ def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
             constrained=constrained, activation=activation,
             log_every=log_every, init=init, mesh=mesh, mix_fn=mix_fn,
             eval_every=eval_every, eval_datasets=eval_datasets,
-            S_eval_stack=S_stack if eval_every else None)
+            S_eval_stack=S_stack if eval_every else None,
+            checkpoint_every=checkpoint_every,
+            checkpoint_dir=checkpoint_dir, task=task)
         return (*out, S_stack)
     _, S = make_problem(cfg, seed)
     if schedule is None:
@@ -241,7 +245,7 @@ def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
     driver = TR.train_scan if engine == "scan" else TR.train
     out = driver(cfg, S_train, meta_datasets, steps, key,
                  constrained=constrained, activation=activation,
-                 log_every=log_every, init=init, **kw)
+                 log_every=log_every, init=init, task=task, **kw)
     return (*out, S)
 
 
@@ -261,15 +265,16 @@ _EVAL_CACHE: dict = {}
 _ASYNC_CACHE: dict = {}
 
 
-def _batched_eval(cfg: SURFConfig, activation, mix_fn=None):
+def _batched_eval(cfg: SURFConfig, activation, mix_fn=None, task=None):
     """One compiled evaluator per config: inner vmap over the stacked
     dataset axis Q, OUTER vmap over a batch of evaluation keys — called
     with keys (n_seeds, Q, 2), returns (n_seeds, Q, ...) metric stacks."""
     def build():
-        ev_s = TR._eval_core(cfg, activation, None, mix_fn)
+        ev_s = TR._eval_core(cfg, activation, None, mix_fn, task)
         per_q = jax.vmap(ev_s, in_axes=(None, None, 0, 0))
         return jax.jit(jax.vmap(per_q, in_axes=(None, None, None, 0)))
-    key = TR._engine_cache_key(cfg, "eval", activation, None, mix_fn=mix_fn)
+    key = TR._engine_cache_key(cfg, "eval", activation, None, mix_fn=mix_fn,
+                               task=task)
     if key is None:
         return build()
     if key not in _EVAL_CACHE:
@@ -289,7 +294,8 @@ def _seed_batch(seed, seeds):
 
 
 def evaluate_surf(cfg: SURFConfig, state, S, datasets, seed=0,
-                  activation="relu", seeds=None, mix_fn=None, mesh=None):
+                  activation="relu", seeds=None, mix_fn=None, mesh=None,
+                  task=None):
     """Per-layer loss/acc trajectories averaged over downstream datasets —
     one vmapped computation over the stacked dataset axis.
 
@@ -312,32 +318,31 @@ def evaluate_surf(cfg: SURFConfig, state, S, datasets, seed=0,
     seed_arr, single = _seed_batch(seed, seeds)
     keys = jnp.stack([_eval_keys(jax.random.PRNGKey(1000 + int(s)), n_q)
                       for s in seed_arr])
-    outs = _batched_eval(cfg, activation, mix_fn)(S, state.theta, stacked,
-                                                  keys)
+    outs = _batched_eval(cfg, activation, mix_fn, task)(S, state.theta,
+                                                        stacked, keys)
     res = {k: np.asarray(v).mean(1) for k, v in outs.items()}
     return {k: v[0] for k, v in res.items()} if single else res
 
 
-def _async_core(cfg: SURFConfig, activation):
+def _async_core(cfg: SURFConfig, activation, task=None):
     """S-as-argument async-inference body (see ``make_async_run``)."""
+    task = resolve_task(cfg, task)
     layer_fn = U.udgd_layer_star if cfg.topology == "star" else U.udgd_layer
 
     def run_s(S, theta, batch, key, async_mask):
         kw, kb = jax.random.split(key)
-        W0 = U.sample_w0(kw, cfg)
+        W0 = U.sample_w0(kw, cfg, task=task)
         Xl, Yl = U.sample_layer_batches(kb, batch["Xtr"], batch["Ytr"], cfg)
 
         def body(carry, xs):
             W_prev, W = carry
             p_l, Xb, Yb = xs
             W_seen = jnp.where(async_mask[:, None], W_prev, W)
-            Wn = layer_fn(p_l, S, W_seen, Xb, Yb, cfg, activation)
+            Wn = layer_fn(p_l, S, W_seen, Xb, Yb, cfg, activation, task=task)
             # async agents also skip their own update this layer
             Wn = jnp.where(async_mask[:, None], W, Wn)
-            loss = T.fl_loss(Wn, batch["Xte"], batch["Yte"],
-                             cfg.feature_dim, cfg.n_classes)
-            acc = T.fl_accuracy(Wn, batch["Xte"], batch["Yte"],
-                                cfg.feature_dim, cfg.n_classes)
+            loss = task.fl_loss(Wn, batch["Xte"], batch["Yte"])
+            acc = task.fl_metric(Wn, batch["Xte"], batch["Yte"])
             return (W, Wn), (loss, acc)
         (_, W_L), (losses, accs) = jax.lax.scan(body, (W0, W0),
                                                 (theta, Xl, Yl))
@@ -346,13 +351,13 @@ def _async_core(cfg: SURFConfig, activation):
     return run_s
 
 
-def make_async_run(cfg: SURFConfig, S, activation="relu"):
+def make_async_run(cfg: SURFConfig, S, activation="relu", task=None):
     """Single-dataset async-inference body (paper Fig. 8): agents flagged in
     ``async_mask`` fail to update in sync — their neighbours consume the
     estimate communicated at the previous layer (one-layer-stale rows in
     the graph filter input). Unjitted; the batched path is
     ``evaluate_async``."""
-    run_s = _async_core(cfg, activation)
+    run_s = _async_core(cfg, activation, task)
 
     def run(theta, batch, key, async_mask):
         return run_s(S, theta, batch, key, async_mask)
@@ -370,13 +375,13 @@ def async_masks(cfg: SURFConfig, n_datasets, n_async, seed=0):
     return masks
 
 
-def _batched_async(cfg: SURFConfig, activation):
+def _batched_async(cfg: SURFConfig, activation, task=None):
     """One compiled async evaluator per config: inner vmap over datasets
     (per-dataset masks preserved), outer vmap over seed keys+masks —
     called with keys (n_seeds, Q, 2) and masks (n_seeds, Q, n)."""
-    key = TR._engine_cache_key(cfg, "async", activation, None)
+    key = TR._engine_cache_key(cfg, "async", activation, None, task=task)
     if key not in _ASYNC_CACHE:
-        run_s = _async_core(cfg, activation)
+        run_s = _async_core(cfg, activation, task)
         per_q = jax.vmap(run_s, in_axes=(None, None, 0, 0, 0))
         _ASYNC_CACHE[key] = jax.jit(
             jax.vmap(per_q, in_axes=(None, None, None, 0, 0)))
@@ -384,7 +389,7 @@ def _batched_async(cfg: SURFConfig, activation):
 
 
 def evaluate_async(cfg: SURFConfig, state, S, datasets, n_async, seed=0,
-                   activation="relu", seeds=None):
+                   activation="relu", seeds=None, task=None):
     """Asynchronous communications (paper Fig. 8) over all downstream
     datasets in one vmapped computation, each dataset with its own mask.
 
@@ -401,7 +406,7 @@ def evaluate_async(cfg: SURFConfig, state, S, datasets, n_async, seed=0,
                        for s in seed_arr])
     keys = jnp.stack([_eval_keys(jax.random.PRNGKey(2000 + int(s)), n_q)
                       for s in seed_arr])
-    losses, accs = _batched_async(cfg, activation)(
+    losses, accs = _batched_async(cfg, activation, task)(
         S, state.theta, stacked, keys, masks)
     losses = np.asarray(losses).mean(1)      # (n_seeds, L)
     accs = np.asarray(accs).mean(1)

@@ -1,76 +1,28 @@
-"""The downstream FL task (paper §6): collaboratively train a softmax
-classifier head on frozen backbone features.
+"""Compat shim: the legacy classification-task API.
 
-Per-agent head weights are flattened into rows of W ∈ R^{n×d},
-d = F·C + C. The paper freezes a ResNet18; here features come from
-``data/synthetic.py`` (offline container) or from any assigned
-architecture's final hidden state via ``features_from_backbone``.
+The downstream FL task became a first-class interface in
+``repro.core.tasks`` (classification + sparse recovery through the one
+engine); the classification math that used to live here moved verbatim
+to ``core/tasks/classification.py``. This module keeps the historical
+``task.fl_loss(W, X, Y, feat_dim, n_classes)``-style entry points alive
+for existing callers and tests.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+from repro.core.tasks.classification import (  # noqa: F401
+    features_from_backbone,
+    fl_accuracy,
+    fl_grad,
+    fl_loss,
+    grad_norm,
+    head_dim,
+    local_accuracy,
+    local_loss,
+    unflatten,
+)
 
-
-def head_dim(feat_dim, n_classes):
-    return feat_dim * n_classes + n_classes
-
-
-def unflatten(w, feat_dim, n_classes):
-    Wm = w[: feat_dim * n_classes].reshape(feat_dim, n_classes)
-    b = w[feat_dim * n_classes:]
-    return Wm, b
-
-
-def local_loss(w, X, Y, feat_dim, n_classes):
-    """CE of one agent's head on its batch. X (b, F), Y (b,) int."""
-    Wm, b = unflatten(w, feat_dim, n_classes)
-    logits = X @ Wm + b
-    logp = jax.nn.log_softmax(logits, axis=-1)
-    return -jnp.mean(jnp.take_along_axis(logp, Y[:, None], axis=-1))
-
-
-def local_accuracy(w, X, Y, feat_dim, n_classes):
-    Wm, b = unflatten(w, feat_dim, n_classes)
-    return jnp.mean((jnp.argmax(X @ Wm + b, -1) == Y).astype(jnp.float32))
-
-
-def fl_loss(W, X, Y, feat_dim, n_classes):
-    """f(W) = (1/n) Σ_i f_i(w_i).  X (n, b, F), Y (n, b)."""
-    losses = jax.vmap(local_loss, (0, 0, 0, None, None))(
-        W, X, Y, feat_dim, n_classes)
-    return jnp.mean(losses)
-
-
-def fl_accuracy(W, X, Y, feat_dim, n_classes):
-    accs = jax.vmap(local_accuracy, (0, 0, 0, None, None))(
-        W, X, Y, feat_dim, n_classes)
-    return jnp.mean(accs)
-
-
-def fl_grad(W, X, Y, feat_dim, n_classes):
-    """Stochastic ∇f(W) ∈ R^{n×d} — row i is ∇f_i(w_i)/n (matches f's 1/n)."""
-    g = jax.vmap(jax.grad(local_loss), (0, 0, 0, None, None))(
-        W, X, Y, feat_dim, n_classes)
-    return g / W.shape[0]
-
-
-def grad_norm(W, X, Y, feat_dim, n_classes):
-    """‖∇f(W)‖_F — the quantity the descending constraints control."""
-    g = fl_grad(W, X, Y, feat_dim, n_classes)
-    return jnp.sqrt(jnp.sum(jnp.square(g)) + 1e-12)
-
-
-def features_from_backbone(cfg, params, tokens):
-    """Frozen-feature extraction from an assigned architecture: the final
-    pre-logits hidden state, mean-pooled over the sequence."""
-    from repro.models import model as M
-    from repro.models import stack as ST
-    from repro.models import layers as L
-    x = L.embed(params["embed"], tokens)
-    ctx = ST.Ctx(mode="full")
-    for name, reps, kinds in ST.build_segments(cfg):
-        x, _, _ = ST.apply_segment(cfg, kinds, params["segments"][name],
-                                   x, None, ctx)
-    x = L.apply_norm(cfg.norm, params["final_norm"], x)
-    return jnp.mean(x, axis=1)
+__all__ = [
+    "head_dim", "unflatten", "local_loss", "local_accuracy",
+    "fl_loss", "fl_accuracy", "fl_grad", "grad_norm",
+    "features_from_backbone",
+]

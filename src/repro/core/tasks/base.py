@@ -1,0 +1,117 @@
+"""The ``Task`` interface: the inner FL problem the unrolled optimizer
+solves, as a first-class object.
+
+A ``Task`` is a FROZEN dataclass (hashable, compared by value) so it can
+sit inside jit static arguments and the engine/eval cache keys.
+Subclasses define the per-agent ``local_loss`` / ``local_metric`` on one
+agent's weight row, how a mini-batch flattens into the perceptron input
+(``batch_vector``), the dataset synthesis hook, and a stable
+``cache_tag``; the federated lifts (``fl_loss`` / ``fl_metric`` /
+``fl_grad`` / ``grad_norm``) and the W0 sampler (``init_state``) are
+shared here and reproduce the legacy ``core/task.py`` math bit-exactly.
+
+The engine never branches on the task kind — it only calls this
+interface — which is what makes classification and sparse recovery run
+through the identical meta-step/mixers/schedules/2-D mesh.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Task:
+    kind = "abstract"
+    metric_name = "metric"       # what fl_metric measures (accuracy / nmse)
+    metric_higher_better = True
+    label_dtype = jnp.int32      # dtype of Ytr/Yte leaves
+
+    # ------------------------------------------------ subclass contract
+    @property
+    def dim(self) -> int:
+        """Per-agent weight dimension d (rows of W ∈ R^{n×d})."""
+        raise NotImplementedError
+
+    @property
+    def feat_dim(self) -> int:
+        """Per-example feature dimension F (trailing axis of Xtr/Xte)."""
+        raise NotImplementedError
+
+    @property
+    def batch_feat(self) -> int:
+        """Per-example width in the flattened perceptron input b_i —
+        features plus the label channel(s)."""
+        raise NotImplementedError
+
+    @property
+    def cache_tag(self):
+        """Hashable tag folded into every engine/eval cache key. Two tasks
+        with equal tags MUST trace identical computations."""
+        raise NotImplementedError
+
+    def local_loss(self, w, X, Y):
+        """f_i(w): one agent's loss on its batch. w (d,), X (b,F), Y (b,)."""
+        raise NotImplementedError
+
+    def local_metric(self, w, X, Y):
+        """Per-agent reporting metric (accuracy, NMSE, ...)."""
+        raise NotImplementedError
+
+    def batch_vector(self, Xb, Yb):
+        """Flatten per-agent mini-batches into the perceptron input:
+        Xb (n,b,F), Yb (n,b) -> (n, b*batch_feat)."""
+        raise NotImplementedError
+
+    def synth_datasets(self, cfg, Q, seed=0, **kw):
+        """Q synthetic downstream datasets (list of Xtr/Ytr/Xte/Yte dicts
+        in the engine's (n, m, F)/(n, m) layout)."""
+        raise NotImplementedError
+
+    # ------------------------------------------------- shared FL lifts
+    def fl_loss(self, W, X, Y):
+        """f(W) = (1/n) Σ_i f_i(w_i).  W (n,d), X (n,b,F), Y (n,b)."""
+        return jnp.mean(jax.vmap(self.local_loss)(W, X, Y))
+
+    def fl_metric(self, W, X, Y):
+        return jnp.mean(jax.vmap(self.local_metric)(W, X, Y))
+
+    def fl_grad(self, W, X, Y):
+        """Stochastic ∇f(W) ∈ R^{n×d} — row i is ∇f_i(w_i)/n."""
+        g = jax.vmap(jax.grad(self.local_loss))(W, X, Y)
+        return g / W.shape[0]
+
+    def grad_norm(self, W, X, Y):
+        """‖∇f(W)‖_F — the quantity the descending constraints control."""
+        g = self.fl_grad(W, X, Y)
+        return jnp.sqrt(jnp.sum(jnp.square(g)) + 1e-12)
+
+    def init_state(self, key, cfg):
+        """W0 ~ N(w0_mean, w0_std²) ∈ R^{n×d} — the unrolled net's input."""
+        return cfg.w0_mean + cfg.w0_std * jax.random.normal(
+            key, (cfg.n_agents, self.dim))
+
+
+def resolve_task(cfg, task=None):
+    """The one task-resolution point: an explicit ``task`` object wins;
+    otherwise ``cfg.task`` (a ``configs.base.TaskConfig``) is materialized;
+    ``cfg.task is None`` yields the legacy classification task built from
+    ``cfg.feature_dim``/``cfg.n_classes`` (bit-exact default path)."""
+    if task is not None:
+        return task
+    tc = getattr(cfg, "task", None)
+    kind = getattr(tc, "kind", "classification")
+    if kind == "classification":
+        from repro.core.tasks.classification import ClassificationTask
+        if tc is None:
+            return ClassificationTask(feat_dim=cfg.feature_dim,
+                                      n_classes=cfg.n_classes)
+        return ClassificationTask(feat_dim=tc.feature_dim,
+                                  n_classes=tc.n_classes)
+    if kind == "sparse_recovery":
+        from repro.core.tasks.sparse_recovery import SparseRecoveryTask
+        return SparseRecoveryTask(signal_dim=tc.signal_dim, rho=tc.rho,
+                                  sparsity=tc.sparsity, noise=tc.noise)
+    raise ValueError(f"unknown task kind {kind!r}")

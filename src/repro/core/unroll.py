@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SURFConfig
-from repro.core import task as T
+from repro.core.tasks import resolve_task
 
 
 def graph_filter(S, W, h):
@@ -33,19 +33,20 @@ def graph_filter(S, W, h):
 
 
 def batch_vector(Xb, Yb, n_classes):
-    """Flatten an agent's mini-batch into the perceptron input b_i:
-    each example's features and one-hot label follow each other.
-    Xb (n, b, F), Yb (n, b) -> (n, b*(F+C))."""
+    """Legacy classification flattening (compat; layers now use
+    ``task.batch_vector``): each example's features and one-hot label
+    follow each other. Xb (n, b, F), Yb (n, b) -> (n, b*(F+C))."""
     oh = jax.nn.one_hot(Yb, n_classes, dtype=Xb.dtype)
     packed = jnp.concatenate([Xb, oh], axis=-1)          # (n, b, F+C)
     return packed.reshape(Xb.shape[0], -1)
 
 
-def perceptron_in_dim(cfg: SURFConfig) -> int:
-    return cfg.head_dim + cfg.batch_per_agent * (cfg.feature_dim + cfg.n_classes)
+def perceptron_in_dim(cfg: SURFConfig, task=None) -> int:
+    task = resolve_task(cfg, task)
+    return task.dim + cfg.batch_per_agent * task.batch_feat
 
 
-def init_udgd(key, cfg: SURFConfig, dtype=jnp.float32, init="dgd"):
+def init_udgd(key, cfg: SURFConfig, dtype=jnp.float32, init="dgd", task=None):
     """Stacked per-layer parameters {h (L,K+1), M (L,din,d), d (L,d)}.
 
     init='dgd' starts h at the DGD point (pure one-hop mixing h=[0,1,0..],
@@ -53,9 +54,10 @@ def init_udgd(key, cfg: SURFConfig, dtype=jnp.float32, init="dgd"):
     beyond-paper stabilisation; init='random' is the generic init the
     paper's constraint-ablation story assumes (see fig7 benchmark).
     """
+    task = resolve_task(cfg, task)
     L_, K = cfg.n_layers, cfg.filter_taps
-    d = cfg.head_dim
-    din = perceptron_in_dim(cfg)
+    d = task.dim
+    din = perceptron_in_dim(cfg, task)
     k1, k2 = jax.random.split(key)
     if init == "dgd":
         h0 = jnp.zeros((L_, K + 1)).at[:, min(1, K)].set(1.0)
@@ -69,25 +71,29 @@ def init_udgd(key, cfg: SURFConfig, dtype=jnp.float32, init="dgd"):
 
 
 def udgd_layer(params_l, S, W, Xb, Yb, cfg: SURFConfig, activation="relu",
-               mix_fn=None):
+               mix_fn=None, task=None):
     """One unrolled layer. W (n,d); Xb (n,b,F); Yb (n,b). ``mix_fn(W, h)``
     overrides the dense graph filter (e.g. the ring ppermute path)."""
+    task = resolve_task(cfg, task)
     h, M, d = params_l["h"], params_l["M"], params_l["d"]
     mixed = mix_fn(W, h) if mix_fn is not None else graph_filter(S, W, h)
-    b_in = batch_vector(Xb, Yb, cfg.n_classes)
+    b_in = task.batch_vector(Xb, Yb)
     z = jnp.concatenate([W, b_in], axis=-1) @ M + d      # (n, d)
     act = {"relu": jax.nn.relu, "tanh": jnp.tanh}[activation]
     return mixed - act(z)
 
 
 def udgd_forward(params, S, W0, Xl, Yl, cfg: SURFConfig, activation="relu",
-                 mix_fn=None):
+                 mix_fn=None, task=None):
     """Run L layers. Xl (L,n,b,F), Yl (L,n,b).
     Returns (W_L, W_all (L+1,n,d) including W0). ``mix_fn`` overrides the
     dense graph filter in every layer (ring ppermute path)."""
+    task = resolve_task(cfg, task)
+
     def body(W, xs):
         p_l, Xb, Yb = xs
-        Wn = udgd_layer(p_l, S, W, Xb, Yb, cfg, activation, mix_fn=mix_fn)
+        Wn = udgd_layer(p_l, S, W, Xb, Yb, cfg, activation, mix_fn=mix_fn,
+                        task=task)
         return Wn, Wn
     W_L, Ws = jax.lax.scan(body, W0, (params, Xl, Yl))
     W_all = jnp.concatenate([W0[None], Ws], axis=0)
@@ -104,19 +110,19 @@ def star_filter_mask(cfg: SURFConfig):
 
 
 def udgd_layer_star(params_l, S, W, Xb, Yb, cfg: SURFConfig,
-                    activation="relu", mix_fn=None):
+                    activation="relu", mix_fn=None, task=None):
     """Classical-FL layer: server node only aggregates (no local update)."""
+    task = resolve_task(cfg, task)
     h, M, d = params_l["h"], params_l["M"], params_l["d"]
     mixed = mix_fn(W, h) if mix_fn is not None else graph_filter(S, W, h)
-    b_in = batch_vector(Xb, Yb, cfg.n_classes)
+    b_in = task.batch_vector(Xb, Yb)
     z = jnp.concatenate([W, b_in], axis=-1) @ M + d
     act = {"relu": jax.nn.relu, "tanh": jnp.tanh}[activation]
     return mixed - star_filter_mask(cfg) * act(z)
 
 
-def sample_w0(key, cfg: SURFConfig):
-    return cfg.w0_mean + cfg.w0_std * jax.random.normal(
-        key, (cfg.n_agents, cfg.head_dim))
+def sample_w0(key, cfg: SURFConfig, task=None):
+    return resolve_task(cfg, task).init_state(key, cfg)
 
 
 def sample_layer_batches(key, Xtr, Ytr, cfg: SURFConfig):

@@ -61,3 +61,49 @@ def make_meta_dataset(cfg: SURFConfig, Q, seed=0, **kw):
     mu = class_means(cfg)
     return [sample_dataset(cfg, seed * 100003 + q, mu=mu, **kw)
             for q in range(Q)]
+
+
+# ------------------------------------------------- sparse recovery (LASSO)
+def sample_sparse_dataset(cfg: SURFConfig, task, seed, *,
+                          return_truth=False):
+    """One federated-LASSO downstream problem: a shared k-sparse ground
+    truth w* ∈ R^p (nonzeros ~ N(0, signal_scale²)), per-agent Gaussian
+    sensing rows A_i (scaled 1/√p so row energy is O(1)) and
+    measurements y_i = A_i w* + noise. Flat-dict layout matches the
+    classification pipeline — Xtr (n, m, p) float32 sensing rows, Ytr
+    (n, m) float32 measurements — so stacking, layer batch sampling and
+    the engine are unchanged."""
+    rng = np.random.default_rng(seed)
+    n, p = cfg.n_agents, task.signal_dim
+    w_star = np.zeros(p, np.float32)
+    support = rng.choice(p, size=task.sparsity, replace=False)
+    w_star[support] = (task.signal_scale
+                       * rng.normal(size=task.sparsity)).astype(np.float32)
+
+    def measure(m):
+        A = (rng.normal(size=(n, m, p)) / np.sqrt(p)).astype(np.float32)
+        y = (A @ w_star + task.noise * rng.normal(size=(n, m))
+             ).astype(np.float32)
+        return A, y
+    Xtr, Ytr = measure(cfg.train_per_agent)
+    Xte, Yte = measure(cfg.test_per_agent)
+    out = {"Xtr": Xtr, "Ytr": Ytr, "Xte": Xte, "Yte": Yte}
+    if return_truth:
+        return out, w_star
+    return out
+
+
+def make_sparse_meta_dataset(cfg: SURFConfig, Q, task, seed=0,
+                             return_truth=False):
+    """Q sparse-recovery downstream problems, each with its own ground
+    truth and sensing matrices (same seed stream shape as
+    ``make_meta_dataset``). ``return_truth`` additionally returns the
+    stacked (Q, p) ground-truth signals for NMSE-vs-truth metrics."""
+    outs = [sample_sparse_dataset(cfg, task, seed * 100003 + q,
+                                  return_truth=return_truth)
+            for q in range(Q)]
+    if return_truth:
+        datasets = [d for d, _ in outs]
+        truths = np.stack([w for _, w in outs])
+        return datasets, truths
+    return outs

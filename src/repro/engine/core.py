@@ -38,8 +38,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import SURFConfig
 from repro.core import constraints as C
-from repro.core import task as T
 from repro.core import unroll as U
+from repro.core.tasks import resolve_task
 from repro.optim import adam, apply_updates, clip_by_global_norm
 from repro.topology.schedule import TopologySchedule
 
@@ -59,14 +59,15 @@ class TrainState(NamedTuple):
     step: jnp.ndarray
 
 
-def init_state(key, cfg: SURFConfig, init="dgd"):
-    theta = U.init_udgd(key, cfg, init=init)
+def init_state(key, cfg: SURFConfig, init="dgd", task=None):
+    theta = U.init_udgd(key, cfg, init=init, task=task)
     opt = adam(cfg.lr_theta)
     return TrainState(theta=theta, lam=jnp.zeros((cfg.n_layers,)),
                       opt_state=opt.init(theta), step=jnp.zeros((), jnp.int32))
 
 
-def _meta_step_core(cfg: SURFConfig, constrained, activation, star, mix_fn):
+def _meta_step_core(cfg: SURFConfig, constrained, activation, star, mix_fn,
+                    task=None):
     """S-as-argument meta step: ``meta_step_s(S, state, batch, key)`` and
     ``forward_s(S, theta, W0, Xl, Yl)``. Keeping S out of the closure lets
     one jitted engine serve every topology/seed of the same config.
@@ -74,7 +75,12 @@ def _meta_step_core(cfg: SURFConfig, constrained, activation, star, mix_fn):
     A scheduled ``mix_fn`` (``.scheduled`` attribute) is re-bound every
     call via ``mix_fn.at_step(state.step)`` — the carried step counter
     selects the step-t coefficient blocks, so checkpoint-restored states
-    resume the exact mixing stream."""
+    resume the exact mixing stream.
+
+    ``task`` is the inner problem (``core.tasks``); None resolves the
+    config's task (legacy classification by default). The body only calls
+    the Task interface — no task-specific branches live here."""
+    task = resolve_task(cfg, task)
     opt = adam(cfg.lr_theta)
     use_star = cfg.topology == "star" if star is None else star
     layer_fn = U.udgd_layer_star if use_star else U.udgd_layer
@@ -82,11 +88,16 @@ def _meta_step_core(cfg: SURFConfig, constrained, activation, star, mix_fn):
     scheduled = (bool(getattr(mix_fn, "scheduled", False))
                  and not seed_batched)
     static_mix = None if (scheduled or seed_batched) else mix_fn
+    # RSDUN robust constraints: an extra perturbation key is split off the
+    # step key ONLY when enabled, so the default path's RNG stream (and
+    # therefore its trajectory) is untouched.
+    robust = cfg.robust_sigma > 0.0 and cfg.robust_samples > 0
 
     def _forward(S, theta, W0, Xl, Yl, mf):
         def body(W, xs):
             p_l, Xb, Yb = xs
-            Wn = layer_fn(p_l, S, W, Xb, Yb, cfg, activation, mix_fn=mf)
+            Wn = layer_fn(p_l, S, W, Xb, Yb, cfg, activation, mix_fn=mf,
+                          task=task)
             return Wn, Wn
         W_L, Ws = jax.lax.scan(body, W0, (theta, Xl, Yl))
         return W_L, jnp.concatenate([W0[None], Ws], axis=0)
@@ -101,11 +112,16 @@ def _meta_step_core(cfg: SURFConfig, constrained, activation, star, mix_fn):
                 "blocks)")
         return _forward(S, theta, W0, Xl, Yl, static_mix)
 
-    def lagrangian_fn(theta, lam, S, W0, Xl, Yl, Xte, Yte, mf):
+    def lagrangian_fn(theta, lam, S, W0, Xl, Yl, Xte, Yte, mf, kp):
         W_L, W_all = _forward(S, theta, W0, Xl, Yl, mf)
-        test_loss = T.fl_loss(W_L, Xte, Yte, cfg.feature_dim, cfg.n_classes)
-        gnorms = C.layer_grad_norms(W_all, Xl, Yl, cfg)
-        slack = C.slacks(gnorms, cfg.eps)
+        test_loss = task.fl_loss(W_L, Xte, Yte)
+        gnorms = C.layer_grad_norms(W_all, Xl, Yl, cfg, task=task)
+        if robust:
+            g_rob = C.robust_layer_grad_norms(W_all, Xl, Yl, cfg, kp,
+                                              task=task, nominal=gnorms)
+            slack = C.robust_slacks(g_rob, gnorms, cfg.eps)
+        else:
+            slack = C.slacks(gnorms, cfg.eps)
         lag = C.lagrangian(test_loss, lam, slack) if constrained else test_loss
         return lag, (test_loss, slack, gnorms, W_L)
 
@@ -122,19 +138,23 @@ def _meta_step_core(cfg: SURFConfig, constrained, activation, star, mix_fn):
             mf = mix_fn.at_step(state.step)
         else:
             mf = mix_fn
-        kw, kb = jax.random.split(key)
-        W0 = U.sample_w0(kw, cfg)
+        if robust:
+            kw, kb, kp = jax.random.split(key, 3)
+        else:
+            kw, kb = jax.random.split(key)
+            kp = None
+        W0 = U.sample_w0(kw, cfg, task=task)
         Xl, Yl = U.sample_layer_batches(kb, batch["Xtr"], batch["Ytr"], cfg)
         (lag, (tl, slack, gnorms, W_L)), grads = jax.value_and_grad(
             lagrangian_fn, has_aux=True)(state.theta, state.lam, S, W0, Xl,
-                                         Yl, batch["Xte"], batch["Yte"], mf)
+                                         Yl, batch["Xte"], batch["Yte"], mf,
+                                         kp)
         grads, gn = clip_by_global_norm(grads, 10.0)
         upd, opt_state = opt.update(grads, state.opt_state)
         theta = apply_updates(state.theta, upd)
         lam = (C.dual_ascent(state.lam, slack, cfg.lr_lambda)
                if constrained else state.lam)
-        test_acc = T.fl_accuracy(W_L, batch["Xte"], batch["Yte"],
-                                 cfg.feature_dim, cfg.n_classes)
+        test_acc = task.fl_metric(W_L, batch["Xte"], batch["Yte"])
         metrics = {"lagrangian": lag, "test_loss": tl, "test_acc": test_acc,
                    "slack_max": jnp.max(slack), "slack_mean": jnp.mean(slack),
                    "gnorm_first": gnorms[0], "gnorm_last": gnorms[-1],
@@ -168,7 +188,8 @@ def _check_static_s(S, where):
 
 
 def make_meta_step(cfg: SURFConfig, S, *, constrained=True,
-                   activation="relu", star=None, mix_fn=None, jit=True):
+                   activation="relu", star=None, mix_fn=None, jit=True,
+                   task=None):
     """Build the meta-training step (jitted unless ``jit=False`` — the scan
     engine embeds the raw body in its own jit).
 
@@ -177,11 +198,12 @@ def make_meta_step(cfg: SURFConfig, S, *, constrained=True,
     ``mix_fn``: override the dense graph filter (ring/halo ppermute path;
     a scheduled mixer is legal here too — it indexes its own stacked
     blocks by ``state.step`` and ignores the static ``S``).
+    ``task``: inner problem override (``core.tasks``); None resolves cfg.
     """
     _check_static_s(S, "make_meta_step")
     _reject_seed_batched_mix(mix_fn, "make_meta_step")
     meta_step_s, forward_s = _meta_step_core(cfg, constrained, activation,
-                                             star, mix_fn)
+                                             star, mix_fn, task)
 
     def meta_step(state, batch, key):
         return meta_step_s(S, state, batch, key)
@@ -192,28 +214,29 @@ def make_meta_step(cfg: SURFConfig, S, *, constrained=True,
     return (jax.jit(meta_step) if jit else meta_step), forward
 
 
-def _eval_core(cfg: SURFConfig, activation, star, mix_fn=None):
+def _eval_core(cfg: SURFConfig, activation, star, mix_fn=None, task=None):
     """S-as-argument evaluation body ``evaluate_s(S, theta, batch, key)`` —
     keeping S out of the closure lets ``core.surf`` cache one jitted vmapped
     evaluator per config across topologies/seeds, and ``engine.snapshots``
     embed the same body inside the training scan. ``mix_fn`` replaces the
-    dense graph filter (ring ppermute path), same contract as the trainer."""
+    dense graph filter (ring ppermute path), same contract as the trainer.
+    The ``acc`` slots carry ``task.fl_metric`` (accuracy / NMSE)."""
+    task = resolve_task(cfg, task)
     use_star = cfg.topology == "star" if star is None else star
     layer_fn = U.udgd_layer_star if use_star else U.udgd_layer
 
     def evaluate_s(S, theta, batch, key):
         TRACE_COUNTS["eval"] += 1
         kw, kb = jax.random.split(key)
-        W0 = U.sample_w0(kw, cfg)
+        W0 = U.sample_w0(kw, cfg, task=task)
         Xl, Yl = U.sample_layer_batches(kb, batch["Xtr"], batch["Ytr"], cfg)
 
         def body(W, xs):
             p_l, Xb, Yb = xs
-            Wn = layer_fn(p_l, S, W, Xb, Yb, cfg, activation, mix_fn=mix_fn)
-            loss = T.fl_loss(Wn, batch["Xte"], batch["Yte"],
-                             cfg.feature_dim, cfg.n_classes)
-            acc = T.fl_accuracy(Wn, batch["Xte"], batch["Yte"],
-                                cfg.feature_dim, cfg.n_classes)
+            Wn = layer_fn(p_l, S, W, Xb, Yb, cfg, activation, mix_fn=mix_fn,
+                          task=task)
+            loss = task.fl_loss(Wn, batch["Xte"], batch["Yte"])
+            acc = task.fl_metric(Wn, batch["Xte"], batch["Yte"])
             return Wn, (loss, acc)
         W_L, (losses, accs) = jax.lax.scan(body, W0, (theta, Xl, Yl))
         return {"loss_per_layer": losses, "acc_per_layer": accs,
@@ -223,13 +246,13 @@ def _eval_core(cfg: SURFConfig, activation, star, mix_fn=None):
 
 
 def make_eval(cfg: SURFConfig, S, *, activation="relu", star=None, jit=True,
-              mix_fn=None):
+              mix_fn=None, task=None):
     """Per-layer loss/accuracy trajectory on a downstream dataset — the
     evaluation used for every paper figure. ``jit=False`` returns the raw
     body for embedding under vmap (see ``core.surf.evaluate_surf``);
     ``mix_fn`` routes mixing through the ring ppermute filter."""
     _check_static_s(S, "make_eval")
-    evaluate_s = _eval_core(cfg, activation, star, mix_fn)
+    evaluate_s = _eval_core(cfg, activation, star, mix_fn, task)
 
     def evaluate(theta, batch, key):
         return evaluate_s(S, theta, batch, key)
@@ -254,7 +277,7 @@ def _mix_tag(mix_fn):
 
 
 def _engine_cache_key(cfg: SURFConfig, variant, activation, star,
-                      mesh=None, mix_fn=None):
+                      mesh=None, mix_fn=None, task=None):
     """Normalize cfg to the fields that shape the traced computation: on the
     non-star path the topology/degree/er_p fields only affect how S was
     BUILT (S itself is a jit argument), so 'regular' and 'er' experiments
@@ -265,16 +288,19 @@ def _engine_cache_key(cfg: SURFConfig, variant, activation, star,
     snapshot cadence).
 
     The full key is (cfg, variant, activation, star, mesh-fingerprint,
-    mix-tag): engines lowered with different explicit shardings or a
-    different ring geometry are different executables. Returns None
-    (uncacheable) for an untagged custom ``mix_fn``."""
+    mix-tag, task-tag): engines lowered with different explicit shardings,
+    a different ring geometry, or a different inner problem
+    (``resolve_task(cfg, task).cache_tag``) are different executables.
+    Returns None (uncacheable) for an untagged custom ``mix_fn``."""
     import dataclasses
     from repro.sharding.surf_rules import mesh_fingerprint
     mt = _mix_tag(mix_fn)
     if mt is None:
         return None
+    task_tag = resolve_task(cfg, task).cache_tag
     use_star = cfg.topology == "star" if star is None else star
     if not use_star:
         cfg = dataclasses.replace(cfg, topology="regular", degree=0,
                                   er_p=0.0)
-    return (cfg, variant, activation, use_star, mesh_fingerprint(mesh), mt)
+    return (cfg, variant, activation, use_star, mesh_fingerprint(mesh), mt,
+            task_tag)

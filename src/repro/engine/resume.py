@@ -20,6 +20,7 @@ from __future__ import annotations
 import os
 
 import jax
+import numpy as np
 
 from repro.checkpoint import io
 from repro.configs.base import SURFConfig
@@ -31,10 +32,11 @@ from repro.engine.snapshots import decimate_snapshots
 PREFIX = "ckpt_"
 
 
-def state_template(cfg: SURFConfig):
+def state_template(cfg: SURFConfig, task=None):
     """ShapeDtypeStruct tree of the engine's TrainState — the restore
-    template (init values never materialize)."""
-    return jax.eval_shape(lambda k: init_state(k, cfg),
+    template (init values never materialize). ``task`` shapes the θ
+    dimensions for non-default inner problems (``core.tasks``)."""
+    return jax.eval_shape(lambda k: init_state(k, cfg, task=task),
                           jax.random.PRNGKey(0))
 
 
@@ -52,7 +54,7 @@ def save_state(directory, state, prefix=PREFIX):
 
 
 def restore_state(directory, cfg: SURFConfig, step=None, mesh=None,
-                  prefix=PREFIX):
+                  prefix=PREFIX, task=None):
     """Reconstitute a TrainState as device buffers ready for the donated
     engine: latest checkpoint under ``directory`` (or ``step``'s), leaves
     placed with the engine's in-shardings (replicated on ``mesh`` when
@@ -62,7 +64,7 @@ def restore_state(directory, cfg: SURFConfig, step=None, mesh=None,
         if step is None:
             raise FileNotFoundError(
                 f"no checkpoints under {directory!r} (prefix {prefix!r})")
-    template = state_template(cfg)
+    template = state_template(cfg, task=task)
     shardings = None
     if mesh is not None:
         from repro.sharding.surf_rules import train_state_shardings
@@ -82,7 +84,7 @@ def resume_train_scan(cfg: SURFConfig, S, meta_datasets, steps, key,
                       log_every=0, mix_fn=None, mesh=None, eval_every=0,
                       eval_datasets=None, S_eval=None, step=None,
                       prefix=PREFIX, checkpoint_every=0,
-                      checkpoint_dir=None):
+                      checkpoint_dir=None, task=None):
     """Resume a ``steps``-long training run from its latest checkpoint:
     restore with engine placement, run the REMAINING meta-steps through
     the donated scan. History/snapshot entries record ABSOLUTE steps
@@ -96,7 +98,7 @@ def resume_train_scan(cfg: SURFConfig, S, meta_datasets, steps, key,
     saving on the same ckpt_<step> grid. The checkpoints restored FROM
     may themselves have been written by that in-scan cadence — the
     round-trip is bit-exact either way."""
-    state = restore_state(directory, cfg, step=step, mesh=mesh)
+    state = restore_state(directory, cfg, step=step, mesh=mesh, task=task)
     start = int(state.step)
     remaining = int(steps) - start
     if remaining < 0:
@@ -110,10 +112,118 @@ def resume_train_scan(cfg: SURFConfig, S, meta_datasets, steps, key,
                           stacked=stacked, eval_every=eval_every,
                           eval_stacked=ev_stacked, S_eval=S_eval,
                           checkpoint_every=checkpoint_every,
-                          checkpoint_dir=checkpoint_dir)
+                          checkpoint_dir=checkpoint_dir, task=task)
     state, metrics, snaps = run(state, stacked, key, remaining)
     hist = _decimate_history(metrics, remaining, log_every, start=start)
     if eval_every:
         return state, hist, decimate_snapshots(snaps, remaining,
                                                eval_every, start=start)
     return state, hist
+
+
+# ------------------------------------------------------- seed-batched
+def seed_checkpoint_path(directory, step, prefix=PREFIX):
+    """Path (sans extensions) of the stacked per-seed payload the seed
+    engine's in-scan cadence writes: ``<directory>/<prefix><step>/seeds``."""
+    return os.path.join(directory, f"{prefix}{int(step)}", "seeds")
+
+
+def latest_seed_step(directory, prefix=PREFIX):
+    """Highest seed-batched checkpoint step under ``directory`` (the
+    ``<prefix><step>/`` subdirectories holding a ``seeds`` payload), or
+    None when there are none."""
+    if not directory or not os.path.isdir(directory):
+        return None
+    steps = []
+    for d in os.listdir(directory):
+        if not (d.startswith(prefix)
+                and os.path.isfile(os.path.join(directory, d, "seeds.json"))):
+            continue
+        try:
+            steps.append(int(d[len(prefix):]))
+        except ValueError:
+            continue
+    return max(steps) if steps else None
+
+
+def seed_state_template(cfg: SURFConfig, n_seeds, task=None):
+    """ShapeDtypeStruct tree of the STACKED per-seed TrainState — the
+    restore template for seed-batched checkpoints."""
+    from repro.engine.seeds import init_states
+    keys_spec = jax.ShapeDtypeStruct((int(n_seeds), 2), "uint32")
+    return jax.eval_shape(lambda ks: init_states(cfg, ks, task=task),
+                          keys_spec)
+
+
+def restore_seed_states(directory, cfg: SURFConfig, n_seeds, step=None,
+                        mesh=None, prefix=PREFIX, task=None):
+    """Reconstitute the stacked per-seed TrainState from a seed-batched
+    checkpoint (``ckpt_<step>/seeds``): latest under ``directory`` or
+    ``step``'s, leaves placed with the seed engine's in-shardings (seed
+    axis sharded on ``mesh`` when given)."""
+    if step is None:
+        step = latest_seed_step(directory, prefix)
+        if step is None:
+            raise FileNotFoundError(
+                f"no seed-batched checkpoints under {directory!r} "
+                f"(prefix {prefix!r})")
+    template = seed_state_template(cfg, n_seeds, task=task)
+    shardings = None
+    if mesh is not None:
+        from repro.sharding.surf_rules import seed_sharding
+        sh = seed_sharding(mesh, int(n_seeds))
+        shardings = jax.tree_util.tree_map(lambda _: sh, template)
+    states = io.restore(seed_checkpoint_path(directory, step, prefix),
+                        template, shardings=shardings)
+    got = np.asarray(states.step)
+    if not (got == int(step)).all():
+        raise ValueError(
+            f"seed checkpoint {seed_checkpoint_path(directory, step, prefix)!r}"
+            f" carries steps {got.tolist()}, expected lockstep {int(step)} — "
+            "was it saved by the seed engine's in-scan cadence?")
+    return states
+
+
+def resume_train_scan_seeds(cfg: SURFConfig, S_stack, meta_datasets, steps,
+                            seeds, directory, *, constrained=True,
+                            activation="relu", log_every=0, star=None,
+                            mix_fn=None, mesh=None, eval_every=0,
+                            eval_datasets=None, S_eval_stack=None, step=None,
+                            prefix=PREFIX, checkpoint_every=0,
+                            checkpoint_dir=None, task=None):
+    """Resume a seed-batched ``steps``-long run from its latest stacked
+    checkpoint: restore every lane with seed-engine placement and run the
+    REMAINING lockstep meta-steps through the donated seed scan — the
+    per-seed fold_in streams, batch cycling, schedules and snapshot
+    cadence all index the restored carried step, so the round-trip equals
+    the uninterrupted run bit for bit. History/snapshot entries record
+    ABSOLUTE steps. ``checkpoint_every``/``checkpoint_dir`` re-arm the
+    in-scan cadence on the same ckpt_<step> grid."""
+    from repro.engine.seeds import make_seed_train_scan, seed_keys
+    seeds = [int(s) for s in seeds]
+    states = restore_seed_states(directory, cfg, len(seeds), step=step,
+                                 mesh=mesh, prefix=prefix, task=task)
+    start = int(np.asarray(states.step).reshape(-1)[0])
+    remaining = int(steps) - start
+    if remaining < 0:
+        raise ValueError(f"checkpoint is at step {start}, beyond the "
+                         f"requested {steps}-step run")
+    keys = seed_keys(seeds)
+    stacked = stack_meta_datasets(meta_datasets)
+    ev_stacked = (stack_meta_datasets(eval_datasets) if eval_every
+                  else None)
+    run = make_seed_train_scan(cfg, S_stack, constrained=constrained,
+                               activation=activation, star=star, mesh=mesh,
+                               mix_fn=mix_fn, stacked=stacked,
+                               eval_every=eval_every,
+                               eval_stacked=ev_stacked,
+                               S_eval_stack=S_eval_stack,
+                               checkpoint_every=checkpoint_every,
+                               checkpoint_dir=checkpoint_dir, task=task)
+    states, metrics, snaps = run(states, stacked, keys, remaining)
+    hist = _decimate_history(metrics, remaining, log_every, start=start)
+    if eval_every:
+        return states, hist, decimate_snapshots(snaps, remaining,
+                                                eval_every, start=start,
+                                                t_axis=1)
+    return states, hist

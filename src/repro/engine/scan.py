@@ -129,7 +129,8 @@ def _scan_run(meta_step_s, snap_fn, eval_every, n_layers, state, stacked,
 def make_train_scan(cfg: SURFConfig, S, *, constrained=True,
                     activation="relu", star=None, mix_fn=None, mesh=None,
                     stacked=None, eval_every=0, eval_stacked=None,
-                    S_eval=None, checkpoint_every=0, checkpoint_dir=None):
+                    S_eval=None, checkpoint_every=0, checkpoint_dir=None,
+                    task=None):
     """Build the device-resident meta-training engine: one jitted
     ``lax.scan`` over meta-steps.
 
@@ -207,7 +208,7 @@ def make_train_scan(cfg: SURFConfig, S, *, constrained=True,
                + (("ckpt", int(checkpoint_every), str(checkpoint_dir))
                   if checkpoint_every else ()))
     cache_key = _engine_cache_key(cfg, variant, activation,
-                                  star, mesh=mesh, mix_fn=mix_fn)
+                                  star, mesh=mesh, mix_fn=mix_fn, task=task)
     if cache_key is not None and mesh is not None and stacked is not None:
         from repro.sharding.surf_rules import stacked_sharded_flags
         cache_key = cache_key + (
@@ -225,9 +226,9 @@ def make_train_scan(cfg: SURFConfig, S, *, constrained=True,
         return bind(_ENGINE_CACHE[cache_key])
 
     meta_step_s, _ = _meta_step_core(cfg, constrained, activation, star,
-                                     mix_fn)
-    snap_fn = (make_snapshot_fn(cfg, activation, star) if eval_every
-               else None)
+                                     mix_fn, task)
+    snap_fn = (make_snapshot_fn(cfg, activation, star, task=task)
+               if eval_every else None)
     ckpt_cb = None
     if checkpoint_every:
         from repro.checkpoint.io import state_save_callback
@@ -282,7 +283,8 @@ def _decimate_history(metrics, steps, log_every, start=0):
 def train_scan(cfg: SURFConfig, S, meta_datasets, steps, key,
                constrained=True, activation="relu", log_every=0, init="dgd",
                mix_fn=None, mesh=None, eval_every=0, eval_datasets=None,
-               S_eval=None, checkpoint_every=0, checkpoint_dir=None):
+               S_eval=None, checkpoint_every=0, checkpoint_dir=None,
+               task=None):
     """Run Algorithm 1 as ONE compiled scan over ``steps`` meta-iterations,
     cycling the meta-training datasets on device. Returns (state, history)
     — or (state, history, snapshots) when ``eval_every`` > 0 — with
@@ -293,7 +295,7 @@ def train_scan(cfg: SURFConfig, S, meta_datasets, steps, key,
     with a scheduled halo mixer to keep the ppermute savings);
     ``checkpoint_every``/``checkpoint_dir`` checkpoint the carried state
     at a cadence WITHOUT leaving the scan."""
-    state = init_state(key, cfg, init=init)
+    state = init_state(key, cfg, init=init, task=task)
     stacked = stack_meta_datasets(meta_datasets)
     ev_stacked = (stack_meta_datasets(eval_datasets) if eval_every
                   else None)
@@ -302,7 +304,7 @@ def train_scan(cfg: SURFConfig, S, meta_datasets, steps, key,
                           stacked=stacked, eval_every=eval_every,
                           eval_stacked=ev_stacked, S_eval=S_eval,
                           checkpoint_every=checkpoint_every,
-                          checkpoint_dir=checkpoint_dir)
+                          checkpoint_dir=checkpoint_dir, task=task)
     state, metrics, snaps = run(state, stacked, key, int(steps))
     hist = _decimate_history(metrics, int(steps), log_every)
     if eval_every:
@@ -314,7 +316,7 @@ def train_scan(cfg: SURFConfig, S, meta_datasets, steps, key,
 
 def train(cfg: SURFConfig, S, meta_datasets, steps, key,
           constrained=True, activation="relu", log_every=0, init="dgd",
-          mix_fn=None):
+          mix_fn=None, task=None):
     """Step-wise Algorithm 1: a thin Python loop over the same jitted
     ``meta_step`` and fold_in RNG stream as ``train_scan`` — use when you
     need host access to metrics every iteration (interactive logging,
@@ -323,11 +325,11 @@ def train(cfg: SURFConfig, S, meta_datasets, steps, key,
     exact reference stream for the schedule-aware scan engine, including
     the scheduled-halo combination (a ``make_scheduled_halo_mix`` mixer
     binds its per-step blocks by the carried ``state.step`` here too)."""
-    state = init_state(key, cfg, init=init)
+    state = init_state(key, cfg, init=init, task=task)
     if isinstance(S, TopologySchedule):
         _check_schedule_mix(S, mix_fn)
         meta_step_s, _ = _meta_step_core(cfg, constrained, activation,
-                                         None, mix_fn)
+                                         None, mix_fn, task)
         jit_step = jax.jit(meta_step_s)
         T_s, S_stack = S.steps, S.S
 
@@ -336,7 +338,8 @@ def train(cfg: SURFConfig, S, meta_datasets, steps, key,
     else:
         from repro.engine.core import make_meta_step
         step_fn, _ = make_meta_step(cfg, S, constrained=constrained,
-                                    activation=activation, mix_fn=mix_fn)
+                                    activation=activation, mix_fn=mix_fn,
+                                    task=task)
 
         def meta_step(st, batch, k, t):
             return step_fn(st, batch, k)

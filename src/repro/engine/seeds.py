@@ -63,11 +63,11 @@ def seed_keys(seeds):
     return jnp.stack([jax.random.PRNGKey(s) for s in seeds])
 
 
-def init_states(cfg: SURFConfig, keys, init="dgd"):
+def init_states(cfg: SURFConfig, keys, init="dgd", task=None):
     """Per-seed initial ``TrainState`` stack: vmapped ``init_state`` over
     the key batch (elementwise in the key, so row i equals the sequential
     ``init_state(PRNGKey(seeds[i]))``)."""
-    return jax.vmap(lambda k: init_state(k, cfg, init=init))(keys)
+    return jax.vmap(lambda k: init_state(k, cfg, init=init, task=task))(keys)
 
 
 def state_for_seed(states, i):
@@ -142,7 +142,9 @@ def _check_seed_mix(S_stack, sched, n_seeds, mesh, mix_fn):
 def make_seed_train_scan(cfg: SURFConfig, S_stack, *, constrained=True,
                          activation="relu", star=None, mesh=None,
                          mix_fn=None, stacked=None, eval_every=0,
-                         eval_stacked=None, S_eval_stack=None):
+                         eval_stacked=None, S_eval_stack=None,
+                         checkpoint_every=0, checkpoint_dir=None,
+                         task=None):
     """Build the seed-batched engine:
     ``run(states, stacked, keys, steps) -> (states, metrics, snaps)``.
 
@@ -161,7 +163,16 @@ def make_seed_train_scan(cfg: SURFConfig, S_stack, *, constrained=True,
     the halo ``ppermute`` exchange over the agent sub-axis — the vmap
     carries its per-seed blocks with ``spmd_axis_name='seed'``. Pass the
     ``stacked`` pytree along with a 2-D mesh so the pool's agent-axis
-    shardings are leaf-aware."""
+    shardings are leaf-aware.
+
+    ``checkpoint_every`` > 0 folds periodic checkpointing into the scan,
+    mirroring ``make_train_scan``: after every ``checkpoint_every``-th
+    lockstep meta-step an ``io_callback`` hands the STACKED per-seed
+    state tree to ``checkpoint.io.stacked_state_save_callback`` — one
+    ``ckpt_<step>/seeds`` payload holding every lane (seeds advance in
+    lockstep, so one scalar step names them all). The cadence indexes
+    the ABSOLUTE carried step; ``engine.resume.resume_train_scan_seeds``
+    restores bit-exactly."""
     S_stack = jnp.asarray(S_stack, jnp.float32)
     if S_stack.ndim not in (3, 4):
         raise ValueError("S_stack must be (n_seeds, n, n) or "
@@ -196,10 +207,17 @@ def make_seed_train_scan(cfg: SURFConfig, S_stack, *, constrained=True,
                 f"{tuple(S_eval_stack.shape)} (a single (n, n) matrix "
                 "would be vmapped over its rows)")
 
+    if checkpoint_every and not checkpoint_dir:
+        raise ValueError("checkpoint_every > 0 needs checkpoint_dir (the "
+                         "directory the in-scan ckpt_<step> payloads are "
+                         "written to)")
     variant = ("train-seeds", constrained, n_seeds, sched,
-               int(eval_every))
+               int(eval_every)) + (
+                   # save directory baked into the callback closure
+                   ("ckpt", int(checkpoint_every), str(checkpoint_dir))
+                   if checkpoint_every else ())
     cache_key = _engine_cache_key(cfg, variant, activation, star,
-                                  mesh=mesh, mix_fn=mix_fn)
+                                  mesh=mesh, mix_fn=mix_fn, task=task)
     if cache_key is not None and mesh is not None and stacked is not None:
         from repro.sharding.surf_rules import stacked_sharded_flags
         cache_key = cache_key + (
@@ -216,9 +234,13 @@ def make_seed_train_scan(cfg: SURFConfig, S_stack, *, constrained=True,
         return bind(_ENGINE_CACHE[cache_key])
 
     meta_step_s, _ = _meta_step_core(cfg, constrained, activation, star,
-                                     mix_fn)
-    snap_fn = (make_snapshot_fn(cfg, activation, star) if eval_every
-               else None)
+                                     mix_fn, task)
+    snap_fn = (make_snapshot_fn(cfg, activation, star, task=task)
+               if eval_every else None)
+    ckpt_cb = None
+    if checkpoint_every:
+        from repro.checkpoint.io import stacked_state_save_callback
+        ckpt_cb = stacked_state_save_callback(str(checkpoint_dir))
 
     jit_kwargs = {}
     if mesh is not None:
@@ -264,6 +286,14 @@ def make_seed_train_scan(cfg: SURFConfig, S_stack, *, constrained=True,
                         blk_i),
                     in_axes=(0, 0, 0, 0),
                     spmd_axis_name=spmd)(S_t, sts, keys, mix_fn.blocks)
+            if checkpoint_every:
+                from jax.experimental import io_callback
+
+                def do_save(s):
+                    io_callback(ckpt_cb, None, s, ordered=True)
+                    return 0
+                jax.lax.cond((t + 1) % int(checkpoint_every) == 0, do_save,
+                             lambda s: 0, sts2)
             if not eval_every:
                 return sts2, (m, {})
 
@@ -298,21 +328,24 @@ def make_seed_train_scan(cfg: SURFConfig, S_stack, *, constrained=True,
 def train_scan_seeds(cfg: SURFConfig, S_stack, meta_datasets, steps, seeds,
                      constrained=True, activation="relu", log_every=0,
                      init="dgd", star=None, mesh=None, mix_fn=None,
-                     eval_every=0, eval_datasets=None, S_eval_stack=None):
+                     eval_every=0, eval_datasets=None, S_eval_stack=None,
+                     checkpoint_every=0, checkpoint_dir=None, task=None):
     """Seed-batched Algorithm 1: ONE compiled scan trains every seed in
     ``seeds`` (per-seed init/RNG/topology), returning (states, history) —
     or (states, history, snapshots) when ``eval_every`` > 0 — where
     history/snapshot entries carry (n_seeds,) / (n_seeds, ...) arrays.
     Row i of every stack matches the sequential ``seed=seeds[i]`` run.
     ``mesh``/``mix_fn`` compose seed AND agent parallelism on a 2-D
-    ('seed', 'agent') mesh (see ``make_seed_train_scan``)."""
+    ('seed', 'agent') mesh; ``checkpoint_every``/``checkpoint_dir``
+    periodically save the stacked per-seed state tree inside the scan
+    (see ``make_seed_train_scan``)."""
     seeds = [int(s) for s in seeds]
     S_stack = jnp.asarray(S_stack, jnp.float32)
     if int(S_stack.shape[0]) != len(seeds):
         raise ValueError(f"S_stack has {S_stack.shape[0]} seed rows but "
                          f"{len(seeds)} seeds were given")
     keys = seed_keys(seeds)
-    states = init_states(cfg, keys, init=init)
+    states = init_states(cfg, keys, init=init, task=task)
     stacked = stack_meta_datasets(meta_datasets)
     ev_stacked = (stack_meta_datasets(eval_datasets) if eval_every
                   else None)
@@ -321,7 +354,9 @@ def train_scan_seeds(cfg: SURFConfig, S_stack, meta_datasets, steps, seeds,
                                mix_fn=mix_fn, stacked=stacked,
                                eval_every=eval_every,
                                eval_stacked=ev_stacked,
-                               S_eval_stack=S_eval_stack)
+                               S_eval_stack=S_eval_stack,
+                               checkpoint_every=checkpoint_every,
+                               checkpoint_dir=checkpoint_dir, task=task)
     states, metrics, snaps = run(states, stacked, keys, int(steps))
     hist = _decimate_history(metrics, int(steps), log_every)
     if eval_every:

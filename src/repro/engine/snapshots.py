@@ -52,13 +52,13 @@ def nan_snapshot(n_layers: int):
 
 
 def make_snapshot_fn(cfg: SURFConfig, activation="relu", star=None,
-                     mix_fn=None):
+                     mix_fn=None, task=None):
     """``snap(S, theta, eval_stacked, key_t)`` -> eval-pool-mean snapshot
     dict — the body embedded in the scan's cond branch. Maps the shared
     ``_eval_core`` over the stacked eval pool's Q axis with per-dataset
     ``fold_in(key_t, q)`` keys, then means over the pool — the same
     aggregation as ``core.surf.evaluate_surf``."""
-    ev_s = _eval_core(cfg, activation, star, mix_fn)
+    ev_s = _eval_core(cfg, activation, star, mix_fn, task)
 
     def snap(S, theta, eval_stacked, key_t):
         n_q = jax.tree_util.tree_leaves(eval_stacked)[0].shape[0]
@@ -72,11 +72,11 @@ def make_snapshot_fn(cfg: SURFConfig, activation="relu", star=None,
 
 
 def snapshot_reference(cfg: SURFConfig, theta, S, eval_datasets, key, t,
-                       activation="relu", star=None):
+                       activation="relu", star=None, task=None):
     """Offline recomputation of the in-scan snapshot emitted after
     meta-step ``t`` of a run keyed by ``key`` — the parity oracle for
     tests and the post-hoc tool for analysing a checkpointed θ."""
-    snap = make_snapshot_fn(cfg, activation, star)
+    snap = make_snapshot_fn(cfg, activation, star, task=task)
     stacked = stack_meta_datasets(eval_datasets)
     out = snap(jnp.asarray(S, jnp.float32), theta, stacked,
                snapshot_key(key, jnp.asarray(t, jnp.int32)))

@@ -25,17 +25,22 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
 
 
-def surf_batch_specs(cfg):
+def surf_batch_specs(cfg, task=None):
     """ShapeDtypeStructs of one meta-training batch (the Xtr/Ytr/Xte/Yte
     dict every SURF lowering harness needs) — single source of truth for
-    the dry-run, the sharded-engine tests and the scan-engine bench."""
+    the dry-run, the sharded-engine tests and the scan-engine bench.
+    ``task`` shapes the per-example feature dim and label dtype for
+    non-default inner problems (``core.tasks``)."""
+    from repro.core.tasks import resolve_task
+    task = resolve_task(cfg, task)
     n, m, t, F_ = (cfg.n_agents, cfg.train_per_agent, cfg.test_per_agent,
-                   cfg.feature_dim)
+                   task.feat_dim)
+    ldt = task.label_dtype
     return {
         "Xtr": jax.ShapeDtypeStruct((n, m, F_), jnp.float32),
-        "Ytr": jax.ShapeDtypeStruct((n, m), jnp.int32),
+        "Ytr": jax.ShapeDtypeStruct((n, m), ldt),
         "Xte": jax.ShapeDtypeStruct((n, t, F_), jnp.float32),
-        "Yte": jax.ShapeDtypeStruct((n, t), jnp.int32),
+        "Yte": jax.ShapeDtypeStruct((n, t), ldt),
     }
 
 

@@ -465,9 +465,8 @@ def test_checkpoint_cadence_validation(mds, tmp_path):
     _, S = surf.make_problem(CFG, seed=0)
     with pytest.raises(ValueError, match="checkpoint_dir"):
         E.make_train_scan(CFG, S, checkpoint_every=5)
-    with pytest.raises(ValueError, match="single-seed"):
-        surf.train_surf(CFG, mds, steps=4, seeds=[0, 1],
-                        checkpoint_every=2, checkpoint_dir=str(tmp_path))
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        E.make_seed_train_scan(CFG, jnp.stack([S, S]), checkpoint_every=5)
     with pytest.raises(ValueError, match="engine='scan'"):
         surf.train_surf(CFG, mds, steps=4, engine="python",
                         checkpoint_every=2, checkpoint_dir=str(tmp_path))
@@ -477,6 +476,36 @@ def test_train_surf_checkpoint_passthrough(mds, tmp_path):
     surf.train_surf(CFG, mds, steps=10, log_every=0, checkpoint_every=4,
                     checkpoint_dir=str(tmp_path))
     assert ckpt.latest_step(str(tmp_path)) == 8
+
+
+def test_seed_batched_checkpoint_and_resume(mds, tmp_path):
+    """Satellite acceptance: ``checkpoint_every`` with ``seeds=`` writes
+    the STACKED per-seed tree under ``ckpt_<step>/`` at the cadence, and
+    ``resume_train_scan_seeds`` from a mid-run stacked checkpoint equals
+    the uninterrupted run bit for bit (state leaves AND history)."""
+    seeds = [0, 1]
+    d = str(tmp_path)
+    states, hist, S_stack = surf.train_surf(
+        CFG, mds, steps=10, seeds=seeds, log_every=5,
+        checkpoint_every=4, checkpoint_dir=d)
+    assert E.resume.latest_seed_step(d) == 8
+    assert os.path.isdir(os.path.join(d, "ckpt_4"))
+    restored = E.resume.restore_seed_states(d, CFG, len(seeds), step=4)
+    np.testing.assert_array_equal(np.asarray(restored.step), [4, 4])
+    S_stack2 = jnp.stack([surf.make_problem(CFG, s)[1] for s in seeds])
+    states_r, hist_r = E.resume.resume_train_scan_seeds(
+        CFG, S_stack2, mds, 10, seeds, d, log_every=5, step=4)
+    for x, y in zip(jax.tree_util.tree_leaves(states),
+                    jax.tree_util.tree_leaves(states_r)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    tail = [h for h in hist if h["step"] > 4]
+    assert [h["step"] for h in hist_r] == [h["step"] for h in tail]
+    for hb, hr in zip(tail, hist_r):
+        for k in hb:
+            if k == "step":
+                continue
+            np.testing.assert_array_equal(np.asarray(hb[k]),
+                                          np.asarray(hr[k]))
 
 
 # -------------------------------------------- multi-device (sharded lane)
