@@ -25,11 +25,18 @@
 #                       NMSE decreases monotonically with unrolled depth
 #                       L in {3, 6, 10} (best of 3 training restarts per
 #                       depth): BENCH_tasks.json
+#   make bench-kernels — graph-filter Pallas kernel vs jnp Horner, forward
+#                       + grad over an (n, d) grid incl. the paper scale
+#                       (n=100, d=650, K=2): ASSERTS forward/(dS, dW, dh)
+#                       parity and trace-count==1 for a mix="pallas"
+#                       engine run; stamps backend + interpret mode (CPU
+#                       numbers are interpret-mode correctness timings):
+#                       BENCH_kernels.json
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-fast test-sharded bench bench-scan bench-topology \
-	bench-engine bench-mesh2d bench-tasks
+	bench-engine bench-mesh2d bench-tasks bench-kernels
 
 test:
 	$(PY) -m pytest -x -q
@@ -58,3 +65,6 @@ bench-mesh2d:
 
 bench-tasks:
 	sh scripts/bench.sh tasks
+
+bench-kernels:
+	sh scripts/bench.sh kernels

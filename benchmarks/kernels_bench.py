@@ -1,0 +1,125 @@
+"""Graph-filter kernel perf tracking + smoke assertions
+(``make bench-kernels`` / ``scripts/bench.sh kernels``), as machine-
+readable JSON (``bench_out/BENCH_kernels.json``).
+
+Times the fused Pallas graph filter (``kernels.graph_filter``) against
+the jnp Horner reference — forward AND value_and_grad (the meta-training
+hot path differentiates through the mixer) — over an (n, d) grid
+spanning the paper scale (n=100, d=650, K=2) and a small MXU-unfriendly
+shape, and ASSERTS the two claims that make the numbers trustworthy:
+
+  1. parity — every timed (impl, shape) pair is allclose to the jnp
+     reference for both the forward value and (dS, dW, dh);
+  2. trace-count == 1 — a ``train_surf(mix="pallas")`` run traces
+     ``meta_step`` exactly once (the kernel path rides the one cached
+     scan engine, no per-step retrace).
+
+The backend and resolved interpret mode are stamped into the JSON: on
+this CPU container Pallas runs in INTERPRET mode, so absolute times are
+correctness-path numbers, not TPU perf (``interpret: true`` in the
+output marks them; see ROADMAP.md's wall-clock caveat). TPU/GPU runs
+compile the kernel and the same file reports real numbers.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import OUT_DIR, time_us
+from repro import engine as E
+from repro.configs.surf_paper import SMOKE
+from repro.core import surf
+from repro.data import synthetic
+from repro.kernels.graph_filter import graph_filter, graph_filter_ref
+from repro.kernels.graph_filter.ops import pick_block_d, resolve_interpret
+
+SHAPES = [(32, 64), (32, 650), (100, 64), (100, 650)]
+K = 2
+ENGINE_STEPS = 8
+
+
+def _inputs(n, d):
+    key = jax.random.PRNGKey(n * 1000 + d)
+    S = jax.random.uniform(key, (n, n))
+    S = S / S.sum(1, keepdims=True)
+    W = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    h = jax.random.normal(jax.random.PRNGKey(2), (K + 1,)) * 0.5
+    return S, W, h
+
+
+def bench_shapes():
+    recs = []
+    loss_p = jax.jit(jax.value_and_grad(
+        lambda S, W, h: jnp.sum(graph_filter(S, W, h, impl="pallas") ** 2),
+        argnums=(0, 1, 2)))
+    loss_r = jax.jit(jax.value_and_grad(
+        lambda S, W, h: jnp.sum(graph_filter_ref(S, W, h) ** 2),
+        argnums=(0, 1, 2)))
+    for n, d in SHAPES:
+        S, W, h = _inputs(n, d)
+        y_p = graph_filter(S, W, h, impl="pallas")
+        y_r = jax.jit(graph_filter_ref)(S, W, h)
+        np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_r),
+                                   atol=5e-5, rtol=5e-5)       # claim 1
+        v_p, g_p = loss_p(S, W, h)
+        v_r, g_r = loss_r(S, W, h)
+        for a, b, name in zip(g_p, g_r, ("dS", "dW", "dh")):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=5e-3, rtol=5e-3,
+                                       err_msg=f"{name} @ n={n} d={d}")
+        fwd_p = time_us(lambda: graph_filter(S, W, h, impl="pallas"))
+        fwd_r = time_us(lambda: jax.jit(graph_filter_ref)(S, W, h))
+        grad_p = time_us(lambda: loss_p(S, W, h))
+        grad_r = time_us(lambda: loss_r(S, W, h))
+        rec = {"n": n, "d": d, "K": K, "block_d": pick_block_d(n, d),
+               "fwd_pallas_us": round(fwd_p, 1),
+               "fwd_jnp_us": round(fwd_r, 1),
+               "grad_pallas_us": round(grad_p, 1),
+               "grad_jnp_us": round(grad_r, 1),
+               "fwd_ratio_pallas_over_jnp": round(fwd_p / fwd_r, 3)}
+        print(f"n={n:4d} d={d:4d} K={K}  fwd pallas {fwd_p:9.1f}us "
+              f"jnp {fwd_r:9.1f}us   grad pallas {grad_p:9.1f}us "
+              f"jnp {grad_r:9.1f}us")
+        recs.append(rec)
+    return recs
+
+
+def bench_engine_trace_count():
+    mds = synthetic.make_meta_dataset(SMOKE, 3, seed=0)
+    E.TRACE_COUNTS["meta_step"] = 0
+    st, _, _ = surf.train_surf(SMOKE, mds, steps=ENGINE_STEPS, seed=0,
+                               mix="pallas", log_every=0)
+    traces = E.TRACE_COUNTS["meta_step"]
+    assert traces <= 1, (                                      # claim 2
+        f"mix='pallas' retraced meta_step {traces}x in one run")
+    assert int(st.step) == ENGINE_STEPS
+    print(f"mix='pallas' engine run: {ENGINE_STEPS} steps, "
+          f"{traces} meta_step trace(s)")
+    return {"steps": ENGINE_STEPS, "meta_step_traces": int(traces)}
+
+
+def main():
+    interpret = resolve_interpret(None)
+    backend = jax.default_backend()
+    label = "INTERPRET (correctness-path timing)" if interpret \
+        else "compiled"
+    print(f"graph-filter kernel bench: backend={backend}, pallas={label}")
+    out = {"backend": backend, "interpret": bool(interpret),
+           "timing_caveat": ("Pallas in interpret mode on CPU: absolute "
+                             "times are NOT accelerator perf"
+                             if interpret else "compiled Pallas kernel"),
+           "K": K, "shapes": bench_shapes(),
+           "engine": bench_engine_trace_count()}
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "BENCH_kernels.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,7 +28,7 @@ def bench_kernels():
     S = jax.random.uniform(key, (n, n)); S = S / S.sum(1, keepdims=True)
     W = jax.random.normal(key, (n, d))
     h = jnp.array([0.2, 0.7, 0.1])
-    us = common.time_us(lambda: graph_filter(h, S, W))
+    us = common.time_us(lambda: graph_filter(S, W, h))
     rows.append(("kernel/graph_filter_n100_d650_K2", us,
                  f"gflops={2*2*n*n*d/us/1e3:.2f}"))
 

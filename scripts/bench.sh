@@ -22,6 +22,12 @@
 #                              # depth L in {3,6,10}, best of 3 training
 #                              # restarts per depth (asserted) ->
 #                              # bench_out/BENCH_tasks.json
+#   scripts/bench.sh kernels   # graph-filter Pallas kernel vs jnp Horner
+#                              # (forward + grad over an (n, d) grid,
+#                              # parity ASSERTED, trace-count==1 for a
+#                              # mix="pallas" engine run ASSERTED;
+#                              # backend + interpret mode stamped) ->
+#                              # bench_out/BENCH_kernels.json
 #   scripts/bench.sh all       # full paper-figure battery (benchmarks.run)
 set -e
 cd "$(dirname "$0")/.."
@@ -41,9 +47,13 @@ case "${1:-scan}" in
     exec python -m benchmarks.mesh2d_bench ;;
   tasks)
     exec python -m benchmarks.tasks_bench ;;
+  kernels)
+    # no simulated-device XLA flags: the kernel bench times single-device
+    # compute and must not inherit an 8-way host-device split
+    exec python -m benchmarks.kernels_bench ;;
   all)
     exec python -m benchmarks.run ;;
   *)
-    echo "usage: scripts/bench.sh [scan|topology|engine|mesh2d|tasks|all]" >&2
+    echo "usage: scripts/bench.sh [scan|topology|engine|mesh2d|tasks|kernels|all]" >&2
     exit 2 ;;
 esac

@@ -71,7 +71,7 @@ def make_scenario(cfg: SURFConfig, scenario, steps, seed=0, *,
     raise ValueError(f"unknown scenario {scenario!r}; one of {SCENARIOS}")
 
 
-MIXES = (None, "dense", "ring", "halo")
+MIXES = (None, "dense", "pallas", "ring", "halo", "halo-pallas")
 
 
 def _resolve_mix(mix, mesh, cfg, *, S=None, schedule=None, S_stack=None):
@@ -79,15 +79,26 @@ def _resolve_mix(mix, mesh, cfg, *, S=None, schedule=None, S_stack=None):
     actual topology stack and the mesh's AGENT-role axis — exactly one of
     ``S`` (single-seed static), ``schedule`` (single-seed time-varying)
     or ``S_stack`` (seed-batched, static (n_seeds, n, n) or schedule
-    (n_seeds, T, n, n)) describes the run."""
+    (n_seeds, T, n, n)) describes the run.
+
+    ``"pallas"`` is the DENSE path through the fused Pallas graph-filter
+    kernel (``kernels.graph_filter.make_pallas_mix``): S stays a jit
+    argument, so it needs no mesh and composes with schedules and seed
+    batches like the dense matmul. ``"halo-pallas"`` keeps the halo
+    ``ppermute`` boundary exchange but runs each shard's RESIDENT block
+    through the same kernel (``topology.halo`` ``resident="pallas"``)."""
     if mix in (None, "dense"):
         return None
     if mix not in MIXES:
         raise ValueError(f"mix must be one of {MIXES}, got {mix!r}")
+    if mix == "pallas":
+        from repro.kernels.graph_filter import make_pallas_mix
+        return make_pallas_mix()
     if mesh is None:
         raise ValueError(
             f"mix={mix!r} needs mesh= (the mesh whose agent axis the "
-            "ppermute exchange runs over — launch.mesh.make_surf_mesh)")
+            "ppermute exchange runs over — launch.mesh.make_surf_mesh); "
+            "for the meshless dense kernel path use mix='pallas'")
     from repro.sharding.surf_rules import axis_for_role
     axis = axis_for_role(mesh, "agent")
     if mix == "ring":
@@ -104,14 +115,16 @@ def _resolve_mix(mix, mesh, cfg, *, S=None, schedule=None, S_stack=None):
                              max(1, cfg.degree // 2))
     from repro.topology.halo import (make_halo_mix, make_scheduled_halo_mix,
                                      make_seed_halo_mix)
+    resident = "pallas" if mix == "halo-pallas" else "dense"
     if S_stack is not None:
         # pass the stack OBJECT through: the mixer weakrefs it, so the
         # engine's content-digest guard short-circuits on identity
         # instead of re-hashing the full per-seed stack
-        return make_seed_halo_mix(mesh, axis, S_stack)
+        return make_seed_halo_mix(mesh, axis, S_stack, resident=resident)
     if schedule is not None:
-        return make_scheduled_halo_mix(mesh, axis, schedule)
-    return make_halo_mix(mesh, axis, np.asarray(S))
+        return make_scheduled_halo_mix(mesh, axis, schedule,
+                                       resident=resident)
+    return make_halo_mix(mesh, axis, np.asarray(S), resident=resident)
 
 
 def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
@@ -138,11 +151,14 @@ def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
     sub-axis — both axes from one compiled scan.
 
     ``mix``: convenience string building the right mixer for the run —
-    "dense"/None (matmul path), "ring" (circulant ``ppermute``,
-    single-seed static ring only) or "halo" (block-sparse exchange;
-    composes with schedules via the scheduled mixer and with ``seeds``
-    via the seed-batched mixer). Mutually exclusive with an explicit
-    ``mix_fn``.
+    "dense"/None (matmul path), "pallas" (the dense filter fused into
+    the Pallas graph-filter kernel, ``kernels.graph_filter`` — no mesh
+    needed, composes with schedules/seeds exactly like dense), "ring"
+    (circulant ``ppermute``, single-seed static ring only), "halo"
+    (block-sparse exchange; composes with schedules via the scheduled
+    mixer and with ``seeds`` via the seed-batched mixer) or
+    "halo-pallas" (halo boundary exchange + Pallas-resident on-shard
+    block). Mutually exclusive with an explicit ``mix_fn``.
 
     ``eval_every``: fold held-out evaluation snapshots into the scan
     every that many meta-steps (``engine.snapshots``; needs
@@ -198,13 +214,16 @@ def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
                 "pass either seed= (one run) or seeds= (a seed-batched "
                 "run), not both — the batch defines every per-seed "
                 "init/topology/RNG stream")
-        if mix_fn is not None and not getattr(mix_fn, "seed_batched",
-                                              False):
+        if (mix_fn is not None
+                and not getattr(mix_fn, "seed_batched", False)
+                and not getattr(mix_fn, "takes_S", False)):
             raise ValueError(
                 "seed-batched training needs a SEED-BATCHED mixer "
-                "(topology.halo.make_seed_halo_mix / mix='halo') or the "
-                "dense path — a static mix_fn bakes one topology and "
-                "would silently override the per-seed S_i stream")
+                "(topology.halo.make_seed_halo_mix / mix='halo'), an "
+                "S-as-argument mixer (kernels.graph_filter."
+                "make_pallas_mix / mix='pallas') or the dense path — a "
+                "static mix_fn bakes one topology and would silently "
+                "override the per-seed S_i stream")
         seed_list = [int(s) for s in seeds]
         S_stack = jnp.stack([make_problem(cfg, s)[1] for s in seed_list])
         if schedule is not None:

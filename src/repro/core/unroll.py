@@ -32,6 +32,25 @@ def graph_filter(S, W, h):
     return Y
 
 
+def _mix(mix_fn, S, W, h):
+    """Apply the layer's graph filter through the mixer protocol:
+
+      * ``mix_fn is None`` — the dense jnp Horner loop above;
+      * ``mix_fn.takes_S`` — ``mix_fn(S, W, h)``: an S-as-ARGUMENT filter
+        (``kernels.graph_filter.make_pallas_mix``) that fuses the K hops
+        in one Pallas kernel; S stays a jit argument, so it composes
+        with schedules (S_t) and the seed-batched vmap (per-lane S_i)
+        exactly like the dense path;
+      * otherwise — ``mix_fn(W, h)``: a baked-S collective exchange
+        (ring / halo ``ppermute`` paths of ``core.ring`` /
+        ``topology.halo``)."""
+    if mix_fn is None:
+        return graph_filter(S, W, h)
+    if getattr(mix_fn, "takes_S", False):
+        return mix_fn(S, W, h)
+    return mix_fn(W, h)
+
+
 def batch_vector(Xb, Yb, n_classes):
     """Legacy classification flattening (compat; layers now use
     ``task.batch_vector``): each example's features and one-hot label
@@ -73,10 +92,12 @@ def init_udgd(key, cfg: SURFConfig, dtype=jnp.float32, init="dgd", task=None):
 def udgd_layer(params_l, S, W, Xb, Yb, cfg: SURFConfig, activation="relu",
                mix_fn=None, task=None):
     """One unrolled layer. W (n,d); Xb (n,b,F); Yb (n,b). ``mix_fn(W, h)``
-    overrides the dense graph filter (e.g. the ring ppermute path)."""
+    overrides the dense graph filter (e.g. the ring ppermute path); a
+    ``takes_S`` mixer is called ``mix_fn(S, W, h)`` instead — the Pallas
+    kernel path (see ``_mix``)."""
     task = resolve_task(cfg, task)
     h, M, d = params_l["h"], params_l["M"], params_l["d"]
-    mixed = mix_fn(W, h) if mix_fn is not None else graph_filter(S, W, h)
+    mixed = _mix(mix_fn, S, W, h)
     b_in = task.batch_vector(Xb, Yb)
     z = jnp.concatenate([W, b_in], axis=-1) @ M + d      # (n, d)
     act = {"relu": jax.nn.relu, "tanh": jnp.tanh}[activation]
@@ -111,10 +132,11 @@ def star_filter_mask(cfg: SURFConfig):
 
 def udgd_layer_star(params_l, S, W, Xb, Yb, cfg: SURFConfig,
                     activation="relu", mix_fn=None, task=None):
-    """Classical-FL layer: server node only aggregates (no local update)."""
+    """Classical-FL layer: server node only aggregates (no local update).
+    Same mixer protocol as ``udgd_layer`` (see ``_mix``)."""
     task = resolve_task(cfg, task)
     h, M, d = params_l["h"], params_l["M"], params_l["d"]
-    mixed = mix_fn(W, h) if mix_fn is not None else graph_filter(S, W, h)
+    mixed = _mix(mix_fn, S, W, h)
     b_in = task.batch_vector(Xb, Yb)
     z = jnp.concatenate([W, b_in], axis=-1) @ M + d
     act = {"relu": jax.nn.relu, "tanh": jnp.tanh}[activation]

@@ -55,11 +55,16 @@ def _check_schedule_mix(S, mix_fn):
     stream)."""
     _reject_seed_batched_mix(mix_fn, "the single-seed engine")
     scheduled_mix = bool(getattr(mix_fn, "scheduled", False))
-    if mix_fn is not None and not scheduled_mix:
+    if (mix_fn is not None and not scheduled_mix
+            and not getattr(mix_fn, "takes_S", False)):
+        # an S-as-ARGUMENT mixer (takes_S, e.g. kernels.graph_filter.
+        # make_pallas_mix) is schedule-safe by construction — the scan
+        # body hands it each step's S_t
         raise ValueError(
-            "a TopologySchedule requires the dense mixing path or a "
-            "SCHEDULED mixer (topology.halo.make_scheduled_halo_mix): the "
-            "static halo/ring mix_fn bakes one S and would silently "
+            "a TopologySchedule requires the dense mixing path, an "
+            "S-as-argument mixer (kernels.graph_filter.make_pallas_mix) "
+            "or a SCHEDULED mixer (topology.halo.make_scheduled_halo_mix): "
+            "the static halo/ring mix_fn bakes one S and would silently "
             "ignore the schedule")
     if scheduled_mix:
         if mix_fn.steps != S.steps:

@@ -96,11 +96,18 @@ def _check_seed_mix(S_stack, sched, n_seeds, mesh, mix_fn):
     over."""
     if mix_fn is None:
         return
+    if (getattr(mix_fn, "takes_S", False)
+            and not getattr(mix_fn, "seed_batched", False)):
+        # S-as-argument mixers (kernels.graph_filter.make_pallas_mix)
+        # receive each lane's S_i from the engine vmap — they follow the
+        # per-seed stream by construction and carry no baked blocks
+        return
     if not getattr(mix_fn, "seed_batched", False):
         raise ValueError(
             "the seed-batched engine needs a SEED-BATCHED mixer "
-            "(topology.halo.make_seed_halo_mix) or the dense path — a "
-            "static make_halo_mix/make_ring_mix bakes ONE topology and "
+            "(topology.halo.make_seed_halo_mix), an S-as-argument mixer "
+            "(kernels.graph_filter.make_pallas_mix) or the dense path — "
+            "a static make_halo_mix/make_ring_mix bakes ONE topology and "
             "would silently override the per-seed S_i stream")
     if mesh is None or not {"seed", "agent"} <= set(mesh.axis_names):
         raise ValueError(
@@ -249,10 +256,15 @@ def make_seed_train_scan(cfg: SURFConfig, S_stack, *, constrained=True,
                                             n_agents=cfg.n_agents,
                                             stacked=stacked)
         jit_kwargs = {"in_shardings": in_sh, "out_shardings": out_sh}
+    # only a SEED-BATCHED mixer carries per-lane coefficient blocks for
+    # the vmap; takes_S mixers (Pallas dense path) receive each lane's
+    # S_i like the dense path does
+    seed_blocked = bool(mix_fn is not None
+                        and getattr(mix_fn, "seed_batched", False))
     # shard_map under vmap: the spmd axis name tells the batching rule to
     # shard the lane dim of the mixer's shard_map over 'seed' instead of
     # replicating every lane on every device
-    spmd = ("seed" if (mix_fn is not None and mesh is not None
+    spmd = ("seed" if (seed_blocked and mesh is not None
                        and "seed" in mesh.axis_names) else None)
 
     @partial(jax.jit, static_argnames=("steps",), donate_argnums=(0,),
@@ -274,7 +286,7 @@ def make_seed_train_scan(cfg: SURFConfig, S_stack, *, constrained=True,
             S_t = (jax.lax.dynamic_index_in_dim(
                 S_stack, t % S_stack.shape[1], 1, keepdims=False)
                 if sched else S_stack)
-            if mix_fn is None:
+            if not seed_blocked:
                 sts2, m = jax.vmap(
                     lambda S_i, st_i, k_i: meta_step_s(
                         S_i, st_i, batch, jax.random.fold_in(k_i, t)),

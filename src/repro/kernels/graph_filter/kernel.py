@@ -8,6 +8,11 @@ MXU-aligned column blocks; the Horner recursion runs entirely in VMEM.
 Arithmetic intensity per W block rises from O(1) to O(K·n) flops/byte.
 
 Grid: (d // bd,). Block shapes: S full (n,n); W/Y (n, bd); taps (K+1, 1).
+
+This is the RAW kernel entry: inputs must already be padded to (8, 128)
+tile multiples and ``interpret`` must be resolved — ``ops.graph_filter``
+owns the pad→kernel→slice wrapper, the backend-aware interpret default,
+the ``block_d`` heuristic and the custom VJP; call that, not this.
 """
 from __future__ import annotations
 
@@ -16,10 +21,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401  (TPU lowering)
 
 
-def _kernel(K, h_ref, s_ref, w_ref, o_ref):
+def _kernel(K, s_ref, w_ref, h_ref, o_ref):
     S = s_ref[...]
     W = w_ref[...].astype(jnp.float32)
     Y = h_ref[K, 0] * W
@@ -28,8 +33,8 @@ def _kernel(K, h_ref, s_ref, w_ref, o_ref):
     o_ref[...] = Y.astype(o_ref.dtype)
 
 
-def graph_filter_pallas(h, S, W, *, block_d=128, interpret=True):
-    """h (K+1,), S (n,n) f32, W (n,d). n and d must be padded by ops.py to
+def graph_filter_pallas(S, W, h, *, block_d=128, interpret=True):
+    """S (n,n) f32, W (n,d), h (K+1,). n and d must be padded by ops.py to
     (8, 128) multiples. Returns Σ_k h_k S^k W with f32 accumulation."""
     K = h.shape[0] - 1
     n, d = W.shape
@@ -40,11 +45,11 @@ def graph_filter_pallas(h, S, W, *, block_d=128, interpret=True):
         functools.partial(_kernel, K),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((K + 1, 1), lambda j: (0, 0)),
             pl.BlockSpec((n, n), lambda j: (0, 0)),
             pl.BlockSpec((n, bd), lambda j: (0, j)),
+            pl.BlockSpec((K + 1, 1), lambda j: (0, 0)),
         ],
         out_specs=pl.BlockSpec((n, bd), lambda j: (0, j)),
         out_shape=jax.ShapeDtypeStruct((n, d), W.dtype),
         interpret=interpret,
-    )(h.reshape(-1, 1).astype(jnp.float32), S.astype(jnp.float32), W)
+    )(S.astype(jnp.float32), W, h.reshape(-1, 1).astype(jnp.float32))

@@ -2,8 +2,8 @@
 import jax.numpy as jnp
 
 
-def graph_filter_ref(h, S, W):
-    """h (K+1,), S (n,n), W (n,d). Horner evaluation (exact same order of
+def graph_filter_ref(S, W, h):
+    """S (n,n), W (n,d), h (K+1,). Horner evaluation (exact same order of
     operations the kernel uses, so tolerances stay tight)."""
     K = h.shape[0] - 1
     Y = h[K].astype(jnp.float32) * W.astype(jnp.float32)

@@ -83,7 +83,29 @@ def _check_divisible(n, nshards, what="halo plan"):
                   f"n_agents={n})")
 
 
-def _halo_filter_smapped(mesh, axis, row_sets, perms):
+RESIDENTS = ("dense", "pallas")
+
+
+def _resident_matmul(resident):
+    """The per-hop RESIDENT block product ``S0_loc @ Y`` of the halo
+    filter: a plain einsum (``resident="dense"``) or the Pallas
+    graph-filter kernel called as its 1-tap special case
+    ``h=[0, 1] → 0·Y + 1·S0 Y`` (``resident="pallas"``) — S0 stays
+    VMEM-resident and the product runs through the kernel's custom VJP,
+    so meta-gradients flow the same fused path the dense ``mix="pallas"``
+    variant uses. Boundary rows keep the ``ppermute`` exchange either
+    way; only the communication-free on-shard block changes engines."""
+    if resident not in RESIDENTS:
+        raise ValueError(f"resident must be one of {RESIDENTS}, got "
+                         f"{resident!r}")
+    if resident == "dense":
+        return lambda S0, Y: S0 @ Y
+    from repro.kernels.graph_filter import graph_filter
+    one_hop = jnp.array([0.0, 1.0], jnp.float32)
+    return lambda S0, Y: graph_filter(S0, Y, one_hop, impl="pallas")
+
+
+def _halo_filter_smapped(mesh, axis, row_sets, perms, resident="dense"):
     """The shared shard-mapped K-tap Horner graph filter
     ``(W_loc, h, S0_loc, Sd_locs) -> Y_loc`` over the AGENT sub-axis
     ``axis``: one ``ppermute`` per active shard offset, carrying only
@@ -95,10 +117,13 @@ def _halo_filter_smapped(mesh, axis, row_sets, perms):
     spmd_axis_name='seed')`` on a 2-D ('seed', 'agent') mesh): the
     batching rule inserts 'seed' at the lane dim and each seed row of
     the mesh ppermutes its own lanes' boundary rows over its agent
-    sub-axis."""
+    sub-axis. ``resident`` selects the on-shard block engine
+    (``_resident_matmul``)."""
+    res_mm = _resident_matmul(resident)
+
     def apply_S(Y, S0_loc, Sd_locs):
         # Y (nl, d) local block; S0_loc (1, nl, nl); Sd_locs[i] (1, nl, r_i)
-        out = S0_loc[0] @ Y
+        out = res_mm(S0_loc[0], Y)
         for rows, perm, Sd in zip(row_sets, perms, Sd_locs):
             recv = jax.lax.ppermute(Y[rows], axis, perm)
             out = out + Sd[0] @ recv
@@ -111,10 +136,14 @@ def _halo_filter_smapped(mesh, axis, row_sets, perms):
             Y = apply_S(Y, S0_loc, Sd_locs) + h[k] * W_loc
         return Y
 
+    # jax has no replication rule for pallas_call inside shard_map; the
+    # specs here are fully explicit (every input/output names its axis),
+    # so disabling the redundant rep check for the pallas resident is
+    # safe — the dense resident keeps the default checking.
     return _shard_map(
         filter_local, mesh=mesh,
         in_specs=(P(axis), P(), P(axis), tuple(P(axis) for _ in row_sets)),
-        out_specs=P(axis))
+        out_specs=P(axis), check_rep=(resident == "dense"))
 
 
 def _offset_perms(plans, nshards):
@@ -158,7 +187,7 @@ def halo_exchange_rows(plans):
     return sum(len(rows) for _, rows, _ in plans)
 
 
-def make_halo_mix(mesh, axis: str, S, *, tag=None):
+def make_halo_mix(mesh, axis: str, S, *, tag=None, resident="dense"):
     """Shard-mapped block-sparse Horner graph filter ``mix_fn(W, h)``
     reproducing ``unroll.graph_filter(S, W, h)`` with the agent axis of
     ``W`` sharded over mesh axis ``axis``.
@@ -166,7 +195,11 @@ def make_halo_mix(mesh, axis: str, S, *, tag=None):
     Works for ANY (n, n) mixing matrix with n divisible by the shard
     count — including nshards=1, where it reduces to the local dense
     matmul. ``tag`` overrides the content-hash cache tag (e.g.
-    ``core.ring`` re-tags its circulant special case)."""
+    ``core.ring`` re-tags its circulant special case).
+    ``resident="pallas"`` runs each shard's on-shard block product
+    through the Pallas graph-filter kernel (``_resident_matmul``) —
+    the ``mix="halo-pallas"`` variant of ``core.surf.train_surf`` —
+    and the cache tag keys apart as ``"halo-pallas"``."""
     S = np.asarray(S, np.float32)
     n = S.shape[0]
     nshards = int(mesh.shape[axis])
@@ -175,7 +208,8 @@ def make_halo_mix(mesh, axis: str, S, *, tag=None):
     Sd_devs = tuple(jnp.asarray(Sd) for _, _, Sd in plans)
     smapped = _halo_filter_smapped(mesh, axis,
                                    [rows for _, rows, _ in plans],
-                                   _offset_perms(plans, nshards))
+                                   _offset_perms(plans, nshards),
+                                   resident=resident)
 
     def mix_fn(W, h):
         return smapped(W, h, S0_dev, Sd_devs)
@@ -183,7 +217,8 @@ def make_halo_mix(mesh, axis: str, S, *, tag=None):
     if tag is None:
         from repro.sharding.surf_rules import mesh_fingerprint
         digest = hashlib.sha256(S.tobytes()).hexdigest()[:16]
-        tag = ("halo", axis, n, nshards, digest, mesh_fingerprint(mesh))
+        kind = "halo" if resident == "dense" else "halo-pallas"
+        tag = (kind, axis, n, nshards, digest, mesh_fingerprint(mesh))
     mix_fn.tag = tag
     mix_fn.plan = (S0, plans)
     return mix_fn
@@ -233,7 +268,7 @@ class ScheduledHaloMix:
 
     scheduled = True
 
-    def __init__(self, mesh, axis, S_stack, *, tag=None):
+    def __init__(self, mesh, axis, S_stack, *, tag=None, resident="dense"):
         S_stack = np.asarray(S_stack, np.float32)
         T, n, _ = S_stack.shape
         nshards = int(mesh.shape[axis])
@@ -242,7 +277,8 @@ class ScheduledHaloMix:
         self._Sd = tuple(jnp.asarray(Sd) for _, _, Sd in plans)
         self._smapped = _halo_filter_smapped(mesh, axis,
                                              [rows for _, rows, _ in plans],
-                                             _offset_perms(plans, nshards))
+                                             _offset_perms(plans, nshards),
+                                             resident=resident)
         self.steps = T
         self.plan = (S0_t, plans)
         # content identity of the schedule the blocks were built from —
@@ -253,7 +289,9 @@ class ScheduledHaloMix:
             S_stack.tobytes()).hexdigest()[:16]
         if tag is None:
             from repro.sharding.surf_rules import mesh_fingerprint
-            tag = ("halo-sched", axis, n, T, nshards,
+            kind = ("halo-sched" if resident == "dense"
+                    else "halo-sched-pallas")
+            tag = (kind, axis, n, T, nshards,
                    self.schedule_digest, mesh_fingerprint(mesh))
         self.tag = tag
 
@@ -267,14 +305,17 @@ class ScheduledHaloMix:
         return lambda W, h: self._smapped(W, h, S0, Sds)
 
 
-def make_scheduled_halo_mix(mesh, axis: str, schedule, *, tag=None):
+def make_scheduled_halo_mix(mesh, axis: str, schedule, *, tag=None,
+                            resident="dense"):
     """Build the time-constant-plan halo mixer for a
     ``topology.schedule.TopologySchedule`` (or a raw (T, n, n) stack):
     pass it as ``mix_fn`` TOGETHER with the schedule to
     ``engine.make_train_scan`` and time-varying training keeps the
-    ppermute exchange instead of the dense ``S_t @ W`` fallback."""
+    ppermute exchange instead of the dense ``S_t @ W`` fallback.
+    ``resident="pallas"`` fuses each step's on-shard block into the
+    Pallas kernel (see ``_resident_matmul``)."""
     S_stack = schedule.S if hasattr(schedule, "S") else schedule
-    return ScheduledHaloMix(mesh, axis, S_stack, tag=tag)
+    return ScheduledHaloMix(mesh, axis, S_stack, tag=tag, resident=resident)
 
 
 class SeedHaloMix:
@@ -303,7 +344,7 @@ class SeedHaloMix:
 
     seed_batched = True
 
-    def __init__(self, mesh, axis, S_stack, *, tag=None):
+    def __init__(self, mesh, axis, S_stack, *, tag=None, resident="dense"):
         # remember WHICH array object the blocks were built from: the
         # engine's content-digest guard short-circuits on identity, so
         # the common build-mixer-then-train path (train_surf(mix="halo"))
@@ -343,7 +384,7 @@ class SeedHaloMix:
                           np.ascontiguousarray(blk[:, :, :, rows])))
         self._smapped = _halo_filter_smapped(
             mesh, axis, [rows for _, rows, _ in plans],
-            _offset_perms(plans, nshards))
+            _offset_perms(plans, nshards), resident=resident)
         S0 = S0.reshape(lead + S0.shape[1:])
         plans = [(d, rows, Sd.reshape(lead + Sd.shape[1:]))
                  for d, rows, Sd in plans]
@@ -359,7 +400,9 @@ class SeedHaloMix:
             S_stack.tobytes()).hexdigest()[:16]
         if tag is None:
             from repro.sharding.surf_rules import mesh_fingerprint
-            tag = ("halo-seeds", axis, n, n_seeds,
+            kind = ("halo-seeds" if resident == "dense"
+                    else "halo-seeds-pallas")
+            tag = (kind, axis, n, n_seeds,
                    T if scheduled else 0, nshards, self.stack_digest,
                    mesh_fingerprint(mesh))
         self.tag = tag
@@ -379,13 +422,16 @@ class SeedHaloMix:
         return lambda W, h: self._smapped(W, h, S0, Sds)
 
 
-def make_seed_halo_mix(mesh, axis: str, S_stack, *, tag=None):
+def make_seed_halo_mix(mesh, axis: str, S_stack, *, tag=None,
+                       resident="dense"):
     """Build the per-seed halo mixer for ``train_surf(seeds=...)`` /
     ``engine.seeds.make_seed_train_scan`` on a 2-D ('seed', 'agent')
     mesh. ``S_stack``: the per-seed (n_seeds, n, n) static stack or
     (n_seeds, T, n, n) schedule stack the engine trains with (also
-    accepts a list of per-seed ``TopologySchedule``s)."""
+    accepts a list of per-seed ``TopologySchedule``s).
+    ``resident="pallas"`` fuses each lane's on-shard block into the
+    Pallas kernel (see ``_resident_matmul``)."""
     if isinstance(S_stack, (list, tuple)):
         S_stack = np.stack([np.asarray(s.S if hasattr(s, "S") else s,
                                        np.float32) for s in S_stack])
-    return SeedHaloMix(mesh, axis, S_stack, tag=tag)
+    return SeedHaloMix(mesh, axis, S_stack, tag=tag, resident=resident)

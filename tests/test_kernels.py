@@ -5,38 +5,100 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import unroll
 from repro.kernels.flash_attention import attention_ref, flash_attention
-from repro.kernels.graph_filter import graph_filter, graph_filter_ref
+from repro.kernels.graph_filter import (graph_filter, graph_filter_hsw,
+                                        graph_filter_ref)
+from repro.kernels.graph_filter.ops import pallas_profitable, pick_block_d
 from repro.kernels.ssm_scan import wkv, wkv_ref
 
 TOL = {jnp.float32: 5e-5, jnp.bfloat16: 5e-2}
 
 
-# ------------------------------------------------------------ graph filter
-@pytest.mark.parametrize("n,d,K", [(8, 16, 1), (100, 650, 2), (64, 128, 3),
-                                   (33, 100, 2)])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_graph_filter_sweep(n, d, K, dtype):
+def _gf_inputs(n, d, K, dtype=jnp.float32):
     key = jax.random.PRNGKey(n + d + K)
     S = jax.random.uniform(key, (n, n))
-    S = S / S.sum(1, keepdims=True)
+    S = (S / S.sum(1, keepdims=True)).astype(dtype)
     W = (jax.random.normal(jax.random.PRNGKey(1), (n, d))).astype(dtype)
-    h = jax.random.normal(jax.random.PRNGKey(2), (K + 1,)) * 0.5
-    y = graph_filter(h, S, W)
-    yr = graph_filter_ref(h, S.astype(dtype), W)
+    h = (jax.random.normal(jax.random.PRNGKey(2), (K + 1,)) * 0.5
+         ).astype(dtype)
+    return S, W, h
+
+
+# ------------------------------------------------------------ graph filter
+# shapes deliberately include non-aligned n (not ×8) and d (not ×128):
+# the pad→kernel→slice contract must be exact, not just tile-friendly.
+GF_SHAPES = [(8, 16, 1), (100, 650, 2), (64, 128, 4), (33, 100, 2),
+             (9, 5, 1)]
+
+
+@pytest.mark.parametrize("n,d,K", GF_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_graph_filter_sweep(n, d, K, dtype):
+    S, W, h = _gf_inputs(n, d, K, dtype)
+    y = graph_filter(S, W, h, impl="pallas")
+    yr = graph_filter_ref(S, W, h)
+    yu = unroll.graph_filter(S, W, h)
     np.testing.assert_allclose(np.asarray(y, np.float32),
                                np.asarray(yr, np.float32),
                                atol=TOL[dtype], rtol=TOL[dtype])
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yu, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
 
 
-def test_graph_filter_grad():
-    n, d = 16, 32
-    S = jnp.eye(n) * 0.5 + 0.5 / n
-    W = jax.random.normal(jax.random.PRNGKey(0), (n, d))
-    h = jnp.array([0.3, 0.7])
-    g = jax.grad(lambda hh: jnp.sum(graph_filter(hh, S, W) ** 2))(h)
-    gr = jax.grad(lambda hh: jnp.sum(graph_filter_ref(hh, S, W) ** 2))(h)
-    np.testing.assert_allclose(g, gr, rtol=1e-4)
+@pytest.mark.parametrize("n,d,K", [(8, 16, 1), (33, 100, 2), (64, 128, 4)])
+def test_graph_filter_vjp_parity(n, d, K):
+    """Custom VJP vs autodiff-through-ref AND autodiff-through-unroll for
+    ALL THREE cotangents (dS, dW, dh) — the meta-gradient path of
+    ``mix="pallas"`` must not silently stop any gradient."""
+    S, W, h = _gf_inputs(n, d, K)
+
+    def loss(fn):
+        return lambda S, W, h: jnp.sum(fn(S, W, h) ** 2)
+
+    g = jax.grad(loss(lambda S, W, h: graph_filter(S, W, h, impl="pallas")),
+                 argnums=(0, 1, 2))(S, W, h)
+    gr = jax.grad(loss(graph_filter_ref), argnums=(0, 1, 2))(S, W, h)
+    gu = jax.grad(loss(unroll.graph_filter), argnums=(0, 1, 2))(S, W, h)
+    for got, want_r, want_u, name in zip(g, gr, gu, ("dS", "dW", "dh")):
+        np.testing.assert_allclose(got, want_r, atol=5e-4, rtol=5e-4,
+                                   err_msg=f"{name} vs ref")
+        np.testing.assert_allclose(got, want_u, atol=5e-4, rtol=5e-4,
+                                   err_msg=f"{name} vs unroll")
+
+
+def test_graph_filter_auto_dispatch():
+    """impl='auto' falls back to the jitted ref for unprofitable shapes
+    (bit-exact with it) and stays parity-close on kernel-worthy ones."""
+    S, W, h = _gf_inputs(4, 6, 1)            # tiny: pad waste > 4x
+    assert not pallas_profitable(4, 6)
+    y = graph_filter(S, W, h, impl="auto")
+    yr = jax.jit(graph_filter_ref)(S, W, h)
+    assert np.array_equal(np.asarray(y), np.asarray(yr))
+    S, W, h = _gf_inputs(100, 650, 2)        # profitable: kernel path
+    assert pallas_profitable(100, 650)
+    np.testing.assert_allclose(graph_filter(S, W, h, impl="auto"),
+                               graph_filter_ref(S, W, h), atol=5e-5,
+                               rtol=5e-5)
+    with pytest.raises(ValueError, match="impl must be one of"):
+        graph_filter(S, W, h, impl="horner")
+
+
+def test_graph_filter_block_d_invariance():
+    """Same result for any valid column block size (and the auto pick)."""
+    S, W, h = _gf_inputs(33, 300, 2)
+    y_auto = graph_filter(S, W, h, impl="pallas")
+    y_128 = graph_filter(S, W, h, impl="pallas", block_d=128)
+    assert pick_block_d(33, 300) in (128, 256)
+    np.testing.assert_allclose(y_auto, y_128, atol=1e-6)
+
+
+def test_graph_filter_hsw_alias():
+    """Deprecated (h, S, W)-order alias forwards to the unified API."""
+    S, W, h = _gf_inputs(16, 24, 2)
+    np.testing.assert_allclose(graph_filter_hsw(h, S, W),
+                               graph_filter(S, W, h), atol=0)
 
 
 # --------------------------------------------------------- flash attention

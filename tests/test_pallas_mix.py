@@ -1,0 +1,168 @@
+"""The fused Pallas mix variants end-to-end through the engine:
+``mix="pallas"`` (dense S through the graph-filter kernel, S still a jit
+argument) and ``mix="halo-pallas"`` (kernel resident block inside the
+shard-mapped halo exchange). Each variant must be trajectory-parity with
+its jnp counterpart — meta-gradients flow through the kernel's custom
+VJP, so any stop_gradient leak shows up as diverging theta within a few
+meta-steps — compile ONE meta-step trace, and key apart in the engine
+cache.
+
+Multi-device halo-pallas parity needs the sharded lane
+(``make test-sharded``); the 1-shard and dense-pallas tests run in every
+lane (Pallas executes in interpret mode on CPU).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine as E
+from repro.configs.surf_paper import SMOKE
+from repro.core import surf
+from repro.data import synthetic
+from repro.kernels.graph_filter import make_pallas_mix
+from repro.launch.mesh import host_device_count, make_surf_mesh
+from repro.topology.halo import make_halo_mix
+
+NDEV = host_device_count()
+multi_device = pytest.mark.skipif(
+    NDEV < 8, reason="needs 8 devices: run via `make test-sharded` "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+STEPS = 6
+
+
+@pytest.fixture(scope="module")
+def mds():
+    return synthetic.make_meta_dataset(SMOKE, 3, seed=0)
+
+
+def _theta_close(a, b, atol=5e-6, rtol=5e-6):
+    for k in a:
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                   atol=atol, rtol=rtol, err_msg=f"theta.{k}")
+
+
+def _hist_close(a, b, atol=5e-6):
+    assert len(a) == len(b)
+    for t, (ra, rb) in enumerate(zip(a, b)):
+        for k in ra:
+            np.testing.assert_allclose(np.asarray(ra[k]), np.asarray(rb[k]),
+                                       atol=atol, err_msg=f"hist[{t}].{k}")
+
+
+# ------------------------------------------------------- dense mix="pallas"
+def test_pallas_train_matches_dense(mds):
+    """ISSUE acceptance: mix='pallas' reproduces the mix='dense' training
+    trajectory (state AND logged history) with ONE meta-step trace."""
+    st_d, h_d, _ = surf.train_surf(SMOKE, mds, steps=STEPS, seed=0,
+                                   mix="dense", log_every=1)
+    E.TRACE_COUNTS["meta_step"] = 0
+    st_p, h_p, _ = surf.train_surf(SMOKE, mds, steps=STEPS, seed=0,
+                                   mix="pallas", log_every=1)
+    assert E.TRACE_COUNTS["meta_step"] <= 1
+    _theta_close(st_d.theta, st_p.theta)
+    _hist_close(h_d, h_p)
+    assert int(st_p.step) == STEPS
+
+
+def test_pallas_meta_gradients_move_theta(mds):
+    """The custom VJP actually carries meta-gradients: theta moves away
+    from its init (a stop_gradient leak would freeze h/M)."""
+    st, _, _ = surf.train_surf(SMOKE, mds, steps=STEPS, seed=0,
+                               mix="pallas", log_every=0)
+    st0, _, _ = surf.train_surf(SMOKE, mds, steps=0, seed=0,
+                                mix="pallas", log_every=0)
+    moved = sum(float(jnp.sum(jnp.abs(st.theta[k] - st0.theta[k])))
+                for k in st.theta)
+    assert moved > 1e-3
+
+
+def test_pallas_mix_cache_keys_apart(mds):
+    """pallas and dense engines are DIFFERENT cached executables (the
+    mixer tag carries backend/block/interpret identity)."""
+    mix = make_pallas_mix()
+    k_p = E._engine_cache_key(SMOKE, "train", "relu", False, mix_fn=mix)
+    k_d = E._engine_cache_key(SMOKE, "train", "relu", False, mix_fn=None)
+    assert k_p is not None and k_p != k_d
+    assert mix.tag[0] == "pallas" and mix.takes_S
+
+
+def test_pallas_seed_batched_matches_sequential(mds):
+    """mix='pallas' through the seed-batched engine: each vmap lane's S_i
+    feeds the kernel as an argument; lanes match sequential runs."""
+    sts, _, _ = surf.train_surf(SMOKE, mds, steps=STEPS, seeds=[0, 1],
+                                mix="pallas", log_every=0)
+    for i, s in enumerate([0, 1]):
+        st_i, _, _ = surf.train_surf(SMOKE, mds, steps=STEPS, seed=s,
+                                     mix="dense", log_every=0)
+        _theta_close({k: v[i] for k, v in sts.theta.items()}, st_i.theta)
+
+
+def test_pallas_composes_with_schedule(mds):
+    """A takes_S mixer rides a TopologySchedule: the scan body hands it
+    S_t, so scenario runs match the dense scheduled path."""
+    st_p, _, _ = surf.train_surf(SMOKE, mds, steps=STEPS, seed=0,
+                                 scenario="link-failure", mix="pallas",
+                                 log_every=0)
+    st_d, _, _ = surf.train_surf(SMOKE, mds, steps=STEPS, seed=0,
+                                 scenario="link-failure", log_every=0)
+    _theta_close(st_p.theta, st_d.theta)
+
+
+# ------------------------------------------------------ mix="halo-pallas"
+def test_halo_pallas_single_shard_matches_dense(mds):
+    """On a 1-shard mesh the halo filter is all resident block — the
+    kernel path must reproduce the dense trajectory exactly."""
+    mesh = make_surf_mesh(1, 1)
+    st_d, h_d, _ = surf.train_surf(SMOKE, mds, steps=STEPS, seed=0,
+                                   mix="dense", log_every=1)
+    st_h, h_h, _ = surf.train_surf(SMOKE, mds, steps=STEPS, seed=0,
+                                   mix="halo-pallas", mesh=mesh, log_every=1)
+    _theta_close(st_d.theta, st_h.theta)
+    _hist_close(h_d, h_h)
+
+
+def test_halo_pallas_tags_key_apart():
+    """halo and halo-pallas mixers over the SAME S get different cache
+    tags (different traced computation, same exchange plan)."""
+    mesh = make_surf_mesh(1, 1)
+    S = np.eye(SMOKE.n_agents, dtype=np.float32)
+    m_d = make_halo_mix(mesh, "agent", S)
+    m_p = make_halo_mix(mesh, "agent", S, resident="pallas")
+    assert m_d.tag[0] == "halo" and m_p.tag[0] == "halo-pallas"
+    assert m_d.tag[1:] == m_p.tag[1:]
+    with pytest.raises(ValueError, match="resident must be one of"):
+        make_halo_mix(mesh, "agent", S, resident="mxu")
+
+
+@multi_device
+def test_halo_pallas_sharded_matches_halo(mds):
+    """Sharded lane: the kernel resident block composes with the real
+    ppermute boundary exchange — halo-pallas == halo == dense on a
+    4-shard agent mesh."""
+    mesh = make_surf_mesh(1, 4, n_agents=SMOKE.n_agents)
+    st_d, h_d, _ = surf.train_surf(SMOKE, mds, steps=STEPS, seed=0,
+                                   mix="dense", log_every=1)
+    st_h, h_h, _ = surf.train_surf(SMOKE, mds, steps=STEPS, seed=0,
+                                   mix="halo", mesh=mesh, log_every=1)
+    st_p, h_p, _ = surf.train_surf(SMOKE, mds, steps=STEPS, seed=0,
+                                   mix="halo-pallas", mesh=mesh, log_every=1)
+    _theta_close(st_h.theta, st_p.theta)
+    _theta_close(st_d.theta, st_p.theta, atol=2e-5, rtol=2e-5)
+    _hist_close(h_h, h_p)
+
+
+@multi_device
+def test_halo_pallas_seed_batched_sharded(mds):
+    """2-D ('seed', 'agent') mesh: per-lane halo-pallas residents under
+    the spmd seed vmap match the sequential dense runs."""
+    seeds = [0, 1]
+    mesh = make_surf_mesh(2, 4, n_seeds=len(seeds), n_agents=SMOKE.n_agents)
+    sts, _, _ = surf.train_surf(SMOKE, mds, steps=STEPS, seeds=seeds,
+                                mix="halo-pallas", mesh=mesh, log_every=0)
+    for i, s in enumerate(seeds):
+        st_i, _, _ = surf.train_surf(SMOKE, mds, steps=STEPS, seed=s,
+                                     mix="dense", log_every=0)
+        _theta_close({k: v[i] for k, v in sts.theta.items()}, st_i.theta,
+                     atol=2e-5, rtol=2e-5)
