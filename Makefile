@@ -32,11 +32,19 @@
 #                       engine run; stamps backend + interpret mode (CPU
 #                       numbers are interpret-mode correctness timings):
 #                       BENCH_kernels.json
+#   make bench-serve  — amortized-solver serving: replays a >=200-request
+#                       synthetic trace (>=2 shape buckets) through the
+#                       continuous-batching server; ASSERTS one serve
+#                       trace per warm bucket, zero replay traces, and
+#                       per-request parity vs the single-cohort reference
+#                       solve; stamps federations/s, p50/p99 latency,
+#                       pad-waste, backend + interpret mode:
+#                       BENCH_serve.json
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-fast test-sharded bench bench-scan bench-topology \
-	bench-engine bench-mesh2d bench-tasks bench-kernels
+	bench-engine bench-mesh2d bench-tasks bench-kernels bench-serve
 
 test:
 	$(PY) -m pytest -x -q
@@ -68,3 +76,6 @@ bench-tasks:
 
 bench-kernels:
 	sh scripts/bench.sh kernels
+
+bench-serve:
+	sh scripts/bench.sh serve

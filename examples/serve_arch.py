@@ -9,9 +9,12 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.launch.serve import main as serve_main
+from repro.launch.serve import build_parser, main as serve_main
 
 if __name__ == "__main__":
-    args = sys.argv[1:] or ["--arch", "jamba-1.5-large-398b", "--batch", "2",
-                            "--prompt-len", "12", "--tokens", "8"]
-    serve_main(args)
+    # same parser as the driver — only the defaults differ, so new
+    # launch/serve.py flags are picked up here without duplication
+    parser = build_parser()
+    parser.set_defaults(arch="jamba-1.5-large-398b", batch=2, prompt_len=12,
+                        tokens=8)
+    serve_main(sys.argv[1:], parser=parser)

@@ -28,6 +28,15 @@
 #                              # mix="pallas" engine run ASSERTED;
 #                              # backend + interpret mode stamped) ->
 #                              # bench_out/BENCH_kernels.json
+#   scripts/bench.sh serve     # amortized-solver serving: replay a >=200
+#                              # request synthetic trace through the
+#                              # continuous-batching server (>=2 shape
+#                              # buckets; trace-count==1 per warm bucket
+#                              # and zero replay traces ASSERTED; every
+#                              # request parity-checked against the
+#                              # single-cohort reference solve; stamps
+#                              # federations/s + p50/p99 latency +
+#                              # pad-waste) -> bench_out/BENCH_serve.json
 #   scripts/bench.sh all       # full paper-figure battery (benchmarks.run)
 set -e
 cd "$(dirname "$0")/.."
@@ -51,9 +60,13 @@ case "${1:-scan}" in
     # no simulated-device XLA flags: the kernel bench times single-device
     # compute and must not inherit an 8-way host-device split
     exec python -m benchmarks.kernels_bench ;;
+  serve)
+    # no simulated-device XLA flags: serving times single-device request
+    # batching and must not inherit an 8-way host-device split
+    exec python -m benchmarks.serve_bench ;;
   all)
     exec python -m benchmarks.run ;;
   *)
-    echo "usage: scripts/bench.sh [scan|topology|engine|mesh2d|tasks|kernels|all]" >&2
+    echo "usage: scripts/bench.sh [scan|topology|engine|mesh2d|tasks|kernels|serve|all]" >&2
     exit 2 ;;
 esac

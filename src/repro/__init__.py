@@ -1,0 +1,18 @@
+"""Reproduction of *Stochastic Unrolled Federated Learning* grown into a
+jax_pallas system: ``core``/``engine`` (the meta-training scan),
+``topology``/``sharding``/``launch`` (graphs, meshes, drivers),
+``kernels`` (Pallas hot paths), ``serve`` (amortized-solver serving).
+
+The package root stays import-light; it only re-exports the cache
+hygiene entry points — every compiled-executable cache in the process
+(engine, evaluators, serve bucket solvers) is a registered
+``utils.cache.BoundedLRU``:
+
+    import repro
+    repro.clear_caches()          # drop every cached executable
+    repro.clear_caches("engine")  # ... or just the named cache(s)
+    repro.cache_stats()           # {name: {size, hits, misses, ...}}
+"""
+from repro.utils.cache import cache_stats, clear_caches  # noqa: F401
+
+__all__ = ["clear_caches", "cache_stats"]

@@ -27,6 +27,7 @@ from repro.core import unroll as U
 from repro.core.tasks import (classification_task, resolve_task,  # noqa: F401
                               sparse_recovery_task)
 from repro.data.pipeline import stack_meta_datasets
+from repro.utils.cache import BoundedLRU
 
 
 def make_problem(cfg: SURFConfig, seed=0):
@@ -279,9 +280,10 @@ def _eval_keys(base_key, n):
 # executable; the key also carries the mesh fingerprint and mix tag (see
 # trainer._engine_cache_key), so ring-mix evaluators don't collide with
 # dense ones. An untagged custom mix_fn is uncacheable and rebuilt per
-# call.
-_EVAL_CACHE: dict = {}
-_ASYNC_CACHE: dict = {}
+# call. Both caches are bounded LRUs registered for
+# ``repro.clear_caches()`` / ``cache_stats()``.
+_EVAL_CACHE = BoundedLRU(maxsize=64, name="surf-eval")
+_ASYNC_CACHE = BoundedLRU(maxsize=32, name="surf-async")
 
 
 def _batched_eval(cfg: SURFConfig, activation, mix_fn=None, task=None):
@@ -296,9 +298,7 @@ def _batched_eval(cfg: SURFConfig, activation, mix_fn=None, task=None):
                                task=task)
     if key is None:
         return build()
-    if key not in _EVAL_CACHE:
-        _EVAL_CACHE[key] = build()
-    return _EVAL_CACHE[key]
+    return _EVAL_CACHE.get_or_build(key, build)
 
 
 def _seed_batch(seed, seeds):
@@ -343,15 +343,26 @@ def evaluate_surf(cfg: SURFConfig, state, S, datasets, seed=0,
     return {k: v[0] for k, v in res.items()} if single else res
 
 
+def solve_federation(cfg: SURFConfig, state, S, dataset, seed=0,
+                     activation="relu", mix_fn=None, task=None):
+    """Solve ONE new federation with the trained model — the amortization
+    primitive (paper §4) as a single call, and the reference the serving
+    layer (``repro.serve``) is parity-tested against:
+    ``FederationServer.submit(S, dataset, seed=seed)`` reproduces this
+    result exactly (identical ``fold_in(PRNGKey(1000+seed), 0)`` RNG
+    stream).  Reuses the cached ``evaluate_surf`` executable for the
+    config (``cfg.n_agents`` must match the cohort)."""
+    return evaluate_surf(cfg, state, S, [dataset], seed=seed,
+                         activation=activation, mix_fn=mix_fn, task=task)
+
+
 def _async_core(cfg: SURFConfig, activation, task=None):
     """S-as-argument async-inference body (see ``make_async_run``)."""
     task = resolve_task(cfg, task)
     layer_fn = U.udgd_layer_star if cfg.topology == "star" else U.udgd_layer
 
     def run_s(S, theta, batch, key, async_mask):
-        kw, kb = jax.random.split(key)
-        W0 = U.sample_w0(kw, cfg, task=task)
-        Xl, Yl = U.sample_layer_batches(kb, batch["Xtr"], batch["Ytr"], cfg)
+        W0, Xl, Yl = U.featurize_cohort(key, batch, cfg, task=task)
 
         def body(carry, xs):
             W_prev, W = carry
@@ -399,12 +410,13 @@ def _batched_async(cfg: SURFConfig, activation, task=None):
     (per-dataset masks preserved), outer vmap over seed keys+masks —
     called with keys (n_seeds, Q, 2) and masks (n_seeds, Q, n)."""
     key = TR._engine_cache_key(cfg, "async", activation, None, task=task)
-    if key not in _ASYNC_CACHE:
+
+    def build():
         run_s = _async_core(cfg, activation, task)
         per_q = jax.vmap(run_s, in_axes=(None, None, 0, 0, 0))
-        _ASYNC_CACHE[key] = jax.jit(
-            jax.vmap(per_q, in_axes=(None, None, None, 0, 0)))
-    return _ASYNC_CACHE[key]
+        return jax.jit(jax.vmap(per_q, in_axes=(None, None, None, 0, 0)))
+
+    return _ASYNC_CACHE.get_or_build(key, build)
 
 
 def evaluate_async(cfg: SURFConfig, state, S, datasets, n_async, seed=0,

@@ -93,6 +93,44 @@ class Task:
         return cfg.w0_mean + cfg.w0_std * jax.random.normal(
             key, (cfg.n_agents, self.dim))
 
+    # -------------------------------------------- padded-row corrections
+    # The serving layer (``repro.serve``) pads each agent's eval rows up
+    # to a bucket size t_pad by REPLICATING ROW 0 (so padded rows are
+    # in-distribution and shape-stable), then un-biases the padded value
+    # here. The default corrections are EXACT whenever local_loss /
+    # local_metric is a mean over rows plus a row-independent term
+    # (classification CE/accuracy; the LASSO loss's ρ‖w‖₁ is row-free):
+    # with t_pad rows of which t_pad − t_real are copies of row 0,
+    #     t_pad·mean_pad = t_real·mean_real + (t_pad − t_real)·stat(row 0)
+    # which solves to
+    #     L_real = (t_pad·L_pad − (t_pad − t_real)·L_0) / t_real
+    # where L_0 is the statistic on an all-row-0 batch. Ratio-of-sums
+    # metrics (sparse NMSE) must override ``padded_local_metric``.
+
+    def padded_local_loss(self, w, X, Y, t_real):
+        """``local_loss`` on a row-0-padded batch, corrected back to the
+        value on the first ``t_real`` rows. X (t_pad,F), Y (t_pad,)."""
+        t_pad = X.shape[0]
+        Lp = self.local_loss(w, X, Y)
+        X0 = jnp.broadcast_to(X[:1], X.shape)
+        Y0 = jnp.broadcast_to(Y[:1], Y.shape)
+        L0 = self.local_loss(w, X0, Y0)
+        tr = jnp.maximum(t_real, 1.0)
+        Lr = (t_pad * Lp - (t_pad - t_real) * L0) / tr
+        return jnp.where(t_real == t_pad, Lp, Lr)
+
+    def padded_local_metric(self, w, X, Y, t_real):
+        """``local_metric`` on a row-0-padded batch, corrected back to the
+        value on the first ``t_real`` rows (mean-over-rows default)."""
+        t_pad = X.shape[0]
+        Mp = self.local_metric(w, X, Y)
+        X0 = jnp.broadcast_to(X[:1], X.shape)
+        Y0 = jnp.broadcast_to(Y[:1], Y.shape)
+        M0 = self.local_metric(w, X0, Y0)
+        tr = jnp.maximum(t_real, 1.0)
+        Mr = (t_pad * Mp - (t_pad - t_real) * M0) / tr
+        return jnp.where(t_real == t_pad, Mp, Mr)
+
 
 def resolve_task(cfg, task=None):
     """The one task-resolution point: an explicit ``task`` object wins;

@@ -87,6 +87,22 @@ class SparseRecoveryTask(Task):
         r = X @ w - Y
         return jnp.sum(jnp.square(r)) / (jnp.sum(jnp.square(Y)) + 1e-12)
 
+    def padded_local_metric(self, w, X, Y, t_real):
+        """NMSE is a RATIO of row sums, not a row mean, so the base-class
+        mean correction does not apply. With t_pad − t_real row-0 copies
+        appended, subtract their contribution from numerator and
+        denominator separately:
+            (Σe_pad − k·e_0) / (Σy²_pad − k·y_0² + 1e-12),  k = t_pad − t_real.
+        Exact for any padding count (row 0 of a real batch is real data)."""
+        t_pad = X.shape[0]
+        r = X @ w - Y
+        e_sum = jnp.sum(jnp.square(r))
+        y_sum = jnp.sum(jnp.square(Y))
+        k = t_pad - t_real
+        e0 = jnp.square(X[0] @ w - Y[0])
+        y0 = jnp.square(Y[0])
+        return (e_sum - k * e0) / (y_sum - k * y0 + 1e-12)
+
     def batch_vector(self, Xb, Yb):
         """Each gradient-at-zero direction x_j·y_j (the LISTA input
         Aᵀy, row by row) next to its observation:

@@ -147,6 +147,24 @@ def sample_w0(key, cfg: SURFConfig, task=None):
     return resolve_task(cfg, task).init_state(key, cfg)
 
 
+def featurize_cohort(key, batch, cfg: SURFConfig, task=None):
+    """The stochastic featurization ONE solve of a cohort consumes: split
+    the solve key into (W0, minibatch) streams, draw W0 ~ N(μ0, σ0²I)
+    and the L per-layer per-agent mini-batches from the cohort's
+    training split. Returns (W0 (n,d), Xl (L,n,b,F), Yl (L,n,b)).
+
+    This is the exact stream ``engine.core._eval_core`` /
+    ``core.surf._async_core`` consume per dataset, factored out so the
+    serving layer (``repro.serve``) can featurize a request at its TRUE
+    cohort shape at admission time and stay bit-identical to the
+    ``evaluate_surf`` solve of the same (cfg, key) — shape buckets pad
+    AFTER this step, so padding never perturbs the RNG stream."""
+    kw, kb = jax.random.split(key)
+    W0 = sample_w0(kw, cfg, task=task)
+    Xl, Yl = sample_layer_batches(kb, batch["Xtr"], batch["Ytr"], cfg)
+    return W0, Xl, Yl
+
+
 def sample_layer_batches(key, Xtr, Ytr, cfg: SURFConfig):
     """Stochastic unrolling: one independent uniform mini-batch per layer per
     agent. Xtr (n, m, F), Ytr (n, m) -> (L, n, b, F), (L, n, b)."""

@@ -42,14 +42,17 @@ from repro.core import unroll as U
 from repro.core.tasks import resolve_task
 from repro.optim import adam, apply_updates, clip_by_global_norm
 from repro.topology.schedule import TopologySchedule
+from repro.utils.cache import BoundedLRU
 
-# Incremented each time a meta_step / eval body is TRACED (not executed) —
-# the scan engines' contract is that an entire training run (seed-batched
-# or not, scheduled or not, with or without in-scan snapshots) traces
-# meta_step at most twice (once for the scan, possibly once for a
-# standalone jit), and the multi-seed evaluator's is that one batched
-# evaluate call traces the body exactly once regardless of seed count.
-TRACE_COUNTS = {"meta_step": 0, "eval": 0}
+# Incremented each time a meta_step / eval / serve body is TRACED (not
+# executed) — the scan engines' contract is that an entire training run
+# (seed-batched or not, scheduled or not, with or without in-scan
+# snapshots) traces meta_step at most twice (once for the scan, possibly
+# once for a standalone jit), the multi-seed evaluator's is that one
+# batched evaluate call traces the body exactly once regardless of seed
+# count, and the serving layer's is one trace per warm shape bucket
+# (``serve.buckets``; replaying requests through warm buckets adds zero).
+TRACE_COUNTS = {"meta_step": 0, "eval": 0, "serve": 0}
 
 
 class TrainState(NamedTuple):
@@ -227,9 +230,7 @@ def _eval_core(cfg: SURFConfig, activation, star, mix_fn=None, task=None):
 
     def evaluate_s(S, theta, batch, key):
         TRACE_COUNTS["eval"] += 1
-        kw, kb = jax.random.split(key)
-        W0 = U.sample_w0(kw, cfg, task=task)
-        Xl, Yl = U.sample_layer_batches(kb, batch["Xtr"], batch["Ytr"], cfg)
+        W0, Xl, Yl = U.featurize_cohort(key, batch, cfg, task=task)
 
         def body(W, xs):
             p_l, Xb, Yb = xs
@@ -263,9 +264,11 @@ def make_eval(cfg: SURFConfig, S, *, activation="relu", star=None, jit=True,
 # One compiled scan engine per distinct traced computation — the benchmarks
 # call train_surf repeatedly with the same config and must not pay a
 # re-trace/re-compile per experiment. S is a jit ARGUMENT, so every
-# topology/seed of a config reuses the same executable. See
-# ``engine/README.md`` for the full key anatomy.
-_ENGINE_CACHE: dict = {}
+# topology/seed of a config reuses the same executable. Bounded LRU
+# (registered as "engine" — ``repro.clear_caches()``/``cache_stats()``):
+# an evicted engine recompiles on its next use. See ``engine/README.md``
+# for the full key anatomy.
+_ENGINE_CACHE = BoundedLRU(maxsize=64, name="engine")
 
 
 def _mix_tag(mix_fn):

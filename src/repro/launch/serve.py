@@ -17,14 +17,21 @@ from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import model as M
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
+    """The serve CLI's parser, exposed so wrappers (examples/serve_arch.py)
+    override defaults via ``parser.set_defaults(...)`` instead of
+    duplicating argument strings that drift."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--full", action="store_true")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None, parser=None):
+    args = (parser or build_parser()).parse_args(argv)
 
     cfg = get_config(args.arch)
     if not args.full:

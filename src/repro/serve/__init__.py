@@ -1,0 +1,30 @@
+"""Amortized-solver serving: batch-solve NEW federations at request
+rate.
+
+SURF's trained unrolled network solves an unseen federation in one
+forward pass (amortization, paper §4).  This package operationalizes
+that: requests (a mixing matrix + a cohort dataset) are featurized at
+their true shape, padded into shape buckets, continuously batched and
+solved through per-bucket compiled executables — one trace per bucket,
+zero at request rate.
+
+    server = FederationServer(cfg, state.theta, mix="pallas")
+    server.warm([(n, t), ...])           # compile ahead of traffic
+    fut = server.submit(S, dataset, seed=0)
+    server.tick()                        # or drain()
+    fut.result()["final_acc"]
+
+Layers: ``solver`` (the jitted request-vmapped masked forward),
+``buckets`` (shape bucketing + provably-inert padding), ``queue``
+(continuous batching + futures), ``metrics`` (throughput/latency/
+pad-waste telemetry).  The CLI driver is ``repro.launch.surf_serve``.
+"""
+from repro.serve.buckets import Bucket, BucketSpec, pad_cohort
+from repro.serve.metrics import ServeMetrics
+from repro.serve.queue import FederationServer, ServeFuture
+from repro.serve.solver import (SERVE_MIXES, make_bucket_solver,
+                                resolve_serve_mix, serve_cache_key)
+
+__all__ = ["Bucket", "BucketSpec", "pad_cohort", "ServeMetrics",
+           "FederationServer", "ServeFuture", "SERVE_MIXES",
+           "make_bucket_solver", "resolve_serve_mix", "serve_cache_key"]

@@ -1,0 +1,99 @@
+"""Shape bucketing: map ragged cohorts onto a small set of padded
+shapes so the whole request stream runs through a handful of compiled
+executables.
+
+A request is bucketed by ``(n_agents_bucket, rows_bucket)`` — the
+smallest configured sizes that fit its true agent count and
+test-rows-per-agent — and the full executable identity additionally
+carries ``task.cache_tag`` and the mix tag (see
+``solver.serve_cache_key``).  Padding is constructed so it is PROVABLY
+inert:
+
+  * agents — S gets zero rows/cols for padded agents (they contribute
+    nothing to any real agent's graph-filter sum) and every W/X/Y agent
+    row past ``n_real`` is zero; the solver re-zeroes W rows per layer;
+  * test rows — padded rows are COPIES OF ROW 0 (shape-stable,
+    in-distribution), and the task's ``padded_local_loss`` /
+    ``padded_local_metric`` subtract their contribution exactly.
+
+``pad_cohort`` runs AFTER ``core.unroll.featurize_cohort`` — W0 and the
+layer batches were drawn at the true cohort shape, so padding never
+perturbs the RNG stream.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+
+class Bucket(NamedTuple):
+    """One padded serving shape: ``n_agents`` cohort slots x ``rows``
+    test rows per agent."""
+    n_agents: int
+    rows: int
+
+
+class BucketSpec(NamedTuple):
+    """The configured bucket grid (ascending size ladders)."""
+    agent_sizes: tuple = (8, 16, 32, 64, 128)
+    row_sizes: tuple = (4, 8, 16, 32, 64)
+
+    def bucket_for(self, n_agents: int, rows: int) -> Bucket:
+        """Smallest bucket fitting (n_agents, rows); actionable error
+        when the request exceeds the grid."""
+        na = next((a for a in sorted(self.agent_sizes) if a >= n_agents),
+                  None)
+        nr = next((r for r in sorted(self.row_sizes) if r >= rows), None)
+        if na is None or nr is None:
+            raise ValueError(
+                f"cohort (n_agents={n_agents}, rows={rows}) exceeds the "
+                f"bucket grid (agent_sizes={tuple(self.agent_sizes)}, "
+                f"row_sizes={tuple(self.row_sizes)}) — extend BucketSpec "
+                "or split the cohort")
+        return Bucket(na, nr)
+
+    def buckets_for(self, cohorts):
+        """Distinct buckets covering an iterable of (n_agents, rows)
+        pairs, in first-seen order (warm-up helper)."""
+        seen, out = set(), []
+        for n, t in cohorts:
+            b = self.bucket_for(n, t)
+            if b not in seen:
+                seen.add(b)
+                out.append(b)
+        return out
+
+
+def pad_cohort(S, W0, Xl, Yl, Xte, Yte, bucket: Bucket):
+    """Pad one featurized cohort to ``bucket`` shape.  Returns
+    ``(S, W0, Xl, Yl, Xte, Yte, mask, t_real)`` numpy arrays — agent
+    axis padded with zeros (and zero S rows/cols), test-row axis padded
+    with row-0 copies, ``mask`` (n_pad,) bool flagging real agents,
+    ``t_real`` the float true row count the padded-loss corrections
+    consume."""
+    S, W0 = np.asarray(S), np.asarray(W0)
+    Xl, Yl = np.asarray(Xl), np.asarray(Yl)
+    Xte, Yte = np.asarray(Xte), np.asarray(Yte)
+    n, t = S.shape[0], Xte.shape[1]
+    npad, tpad = int(bucket.n_agents), int(bucket.rows)
+    if n > npad or t > tpad:
+        raise ValueError(f"cohort (n={n}, t={t}) does not fit bucket "
+                         f"{bucket}")
+    Sp = np.zeros((npad, npad), S.dtype)
+    Sp[:n, :n] = S
+    W0p = np.zeros((npad,) + W0.shape[1:], W0.dtype)
+    W0p[:n] = W0
+    Xlp = np.zeros((Xl.shape[0], npad) + Xl.shape[2:], Xl.dtype)
+    Xlp[:, :n] = Xl
+    Ylp = np.zeros((Yl.shape[0], npad) + Yl.shape[2:], Yl.dtype)
+    Ylp[:, :n] = Yl
+    Xtep = np.zeros((npad, tpad) + Xte.shape[2:], Xte.dtype)
+    Xtep[:n, :t] = Xte
+    Xtep[:n, t:] = Xte[:, :1]                 # row-0 copies (see module doc)
+    Ytep = np.zeros((npad, tpad) + Yte.shape[2:], Yte.dtype)
+    Ytep[:n, :t] = Yte
+    Ytep[:n, t:] = Yte[:, :1]
+    mask = np.zeros(npad, bool)
+    mask[:n] = True
+    return Sp, W0p, Xlp, Ylp, Xtep, Ytep, mask, np.float32(t)

@@ -1,0 +1,243 @@
+"""Continuous-batching federation server.
+
+``FederationServer`` turns the bucketed request-vmapped solver into a
+request/response loop: ``submit()`` featurizes ONE new federation (its
+mixing matrix + dataset) at its true shape, pads it into its shape
+bucket and enqueues it; ``tick()`` admits up to ``max_batch``
+bucket-compatible requests FIFO-first, stacks them into the bucket's
+fixed ``(B, n_pad, ...)`` batch (empty slots are masked out, so the
+executable never sees a new batch size) and solves them in one jitted
+call, scattering per-request results to their futures.
+
+The admission rule is deliberately simple — the HEAD of the queue
+defines the tick's bucket and only same-bucket requests ride along
+(FIFO between buckets, batching within) — so latency is bounded by
+queue position, never by a scheduler starving a rare shape.
+
+Everything expensive is cached: one executable per (bucket, B, mix,
+task) in a per-server ``BoundedLRU`` (registered as "serve-buckets" for
+``repro.clear_caches()``), warmed ahead of traffic with ``warm()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SURFConfig
+from repro.core import unroll as U
+from repro.core.tasks import resolve_task
+from repro.serve.buckets import BucketSpec, pad_cohort
+from repro.serve.metrics import ServeMetrics
+from repro.serve.solver import make_bucket_solver, resolve_serve_mix
+from repro.utils.cache import BoundedLRU
+
+_REQUIRED = ("Xtr", "Ytr", "Xte", "Yte")
+
+
+class ServeFuture:
+    """Result handle for one submitted federation."""
+
+    def __init__(self):
+        self._result = None
+        self._done = False
+        self.latency = None              # seconds, set at completion
+
+    def done(self) -> bool:
+        return self._done
+
+    def result(self) -> dict:
+        if not self._done:
+            raise RuntimeError("request not solved yet — call "
+                               "FederationServer.tick()/drain() first")
+        return self._result
+
+    def _set(self, result, latency):
+        self._result = result
+        self.latency = latency
+        self._done = True
+
+
+@dataclasses.dataclass
+class _Request:
+    bucket: object
+    arrays: tuple                        # padded (S, W0, Xl, Yl, Xte, Yte)
+    mask: np.ndarray
+    t_real: np.float32
+    n_real: int
+    rows_real: int
+    future: ServeFuture
+    t_submit: float
+
+
+class FederationServer:
+    """Amortized-solver server for one trained model.
+
+    ``cfg``/``theta`` come from meta-training (``train_surf``); the
+    model serves ANY cohort size (the perceptron is shared across
+    agents — permutation equivariance, paper Remark 5.1 — so its
+    parameter shapes never mention n_agents).  ``mix`` is
+    None/"dense"/"pallas" (see ``solver.resolve_serve_mix``)."""
+
+    def __init__(self, cfg: SURFConfig, theta, *, activation="relu",
+                 mix=None, task=None, buckets: BucketSpec = None,
+                 max_batch: int = 8, max_buckets: int = 16):
+        if cfg.topology == "star":
+            raise ValueError(
+                "star-topology serving is unsupported: the server-row "
+                "mask (core.unroll.star_filter_mask) bakes cfg.n_agents "
+                "and breaks under agent padding — serve decentralized "
+                "configs, or evaluate star cohorts via evaluate_surf")
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.cfg = cfg
+        self.theta = theta
+        self.activation = activation
+        self.mix_fn = resolve_serve_mix(mix)
+        self.task = resolve_task(cfg, task)
+        self.buckets = buckets if buckets is not None else BucketSpec()
+        self.max_batch = int(max_batch)
+        self.metrics = ServeMetrics()
+        self._cache = BoundedLRU(maxsize=max_buckets, name="serve-buckets")
+        self._queue = deque()
+
+    # ------------------------------------------------------------ admit
+    def submit(self, S, dataset, *, seed=0, q=0) -> ServeFuture:
+        """Enqueue one federation: mixing matrix ``S`` (n, n) + dataset
+        dict (``Xtr``/``Ytr``/``Xte``/``Yte`` in the (n, m, F)/(n, m)
+        engine layout).  ``seed``/``q`` select the solve's RNG stream —
+        ``fold_in(PRNGKey(1000 + seed), q)``, the exact
+        ``evaluate_surf(..., seed=seed)`` stream for dataset index
+        ``q``, which is what makes serve results parity-testable
+        against single-cohort evaluation.  Featurization (W0 + layer
+        mini-batches) happens NOW at the true cohort shape; padding
+        follows, so it never perturbs the draw."""
+        S = np.asarray(S, np.float32)
+        if S.ndim != 2 or S.shape[0] != S.shape[1]:
+            raise ValueError(f"S must be square (n, n), got {S.shape}")
+        n = S.shape[0]
+        missing = [k for k in _REQUIRED if k not in dataset]
+        if missing:
+            raise ValueError(f"dataset missing keys {missing}")
+        for k in _REQUIRED:
+            if np.asarray(dataset[k]).shape[0] != n:
+                raise ValueError(
+                    f"dataset[{k!r}] leads with {np.asarray(dataset[k]).shape[0]} "
+                    f"agents but S is {n}x{n}")
+        cfg_r = dataclasses.replace(self.cfg, n_agents=n)
+        key = jax.random.fold_in(jax.random.PRNGKey(1000 + int(seed)),
+                                 int(q))
+        batch = {k: jnp.asarray(np.asarray(dataset[k])) for k in _REQUIRED}
+        W0, Xl, Yl = U.featurize_cohort(key, batch, cfg_r, task=self.task)
+        t = int(np.asarray(dataset["Xte"]).shape[1])
+        bucket = self.buckets.bucket_for(n, t)
+        Sp, W0p, Xlp, Ylp, Xtep, Ytep, mask, t_real = pad_cohort(
+            S, W0, Xl, Yl, dataset["Xte"], dataset["Yte"], bucket)
+        fut = ServeFuture()
+        self._queue.append(_Request(
+            bucket=bucket, arrays=(Sp, W0p, Xlp, Ylp, Xtep, Ytep),
+            mask=mask, t_real=t_real, n_real=n, rows_real=t, future=fut,
+            t_submit=time.perf_counter()))
+        return fut
+
+    # ------------------------------------------------------------ solve
+    def _solver(self, bucket):
+        return make_bucket_solver(self.cfg, bucket, self.max_batch,
+                                  activation=self.activation,
+                                  mix_fn=self.mix_fn, task=self.task,
+                                  cache=self._cache)
+
+    def _empty_slot(self, bucket):
+        """All-zero, all-masked batch slot — t_real = t_pad keeps the
+        padded-loss corrections on their identity branch."""
+        d, b = self.task.dim, self.cfg.batch_per_agent
+        F, L = self.task.feat_dim, self.cfg.n_layers
+        n, t = int(bucket.n_agents), int(bucket.rows)
+        ydt = np.dtype(self.task.label_dtype)
+        return ((np.zeros((n, n), np.float32),
+                 np.zeros((n, d), np.float32),
+                 np.zeros((L, n, b, F), np.float32),
+                 np.zeros((L, n, b), ydt),
+                 np.zeros((n, t, F), np.float32),
+                 np.zeros((n, t), ydt)),
+                np.zeros(n, bool), np.float32(t))
+
+    def tick(self) -> int:
+        """One continuous-batching step: admit up to ``max_batch``
+        requests matching the queue head's bucket, solve, complete
+        their futures.  Returns the number of requests completed (0 on
+        an empty queue)."""
+        if not self._queue:
+            return 0
+        bucket = self._queue[0].bucket
+        admitted, rest = [], deque()
+        while self._queue:
+            r = self._queue.popleft()
+            if r.bucket == bucket and len(admitted) < self.max_batch:
+                admitted.append(r)
+            else:
+                rest.append(r)
+        self._queue = rest
+        arrays, mask, t_real = zip(*[(r.arrays, r.mask, r.t_real)
+                                     for r in admitted])
+        empty, e_mask, e_t = self._empty_slot(bucket)
+        n_pad_slots = self.max_batch - len(admitted)
+        arrays = list(arrays) + [empty] * n_pad_slots
+        mask = list(mask) + [e_mask] * n_pad_slots
+        t_real = list(t_real) + [e_t] * n_pad_slots
+        stacked = [np.stack([a[i] for a in arrays]) for i in range(6)]
+        mask = np.stack(mask)
+        t_real = np.asarray(t_real, np.float32)
+        solve = self._solver(bucket)
+        t0 = time.perf_counter()
+        out = solve(stacked[0], self.theta, *stacked[1:], mask, t_real)
+        jax.block_until_ready(out)
+        wall = time.perf_counter() - t0
+        now = time.perf_counter()
+        lats = []
+        for i, r in enumerate(admitted):
+            res = {k: np.asarray(v[i]) for k, v in out.items()}
+            res["W"] = res["W"][:r.n_real]
+            lat = now - r.t_submit
+            r.future._set(res, lat)
+            lats.append(lat)
+        useful = sum(r.n_real * r.rows_real for r in admitted)
+        padded = self.max_batch * int(bucket.n_agents) * int(bucket.rows)
+        self.metrics.record_tick(bucket, len(admitted), self.max_batch,
+                                 useful, padded, lats, wall)
+        return len(admitted)
+
+    def drain(self) -> int:
+        """Tick until the queue is empty; returns requests completed."""
+        done = 0
+        while self._queue:
+            done += self.tick()
+        return done
+
+    # ------------------------------------------------------------- warm
+    def warm(self, cohorts) -> list:
+        """Compile ahead of traffic: ``cohorts`` is an iterable of
+        (n_agents, test_rows) pairs; each distinct bucket they map to
+        gets its executable built and run once on an all-masked zero
+        batch (identical jit signature to real traffic — exactly ONE
+        body trace per bucket, which ``launch.surf_serve`` asserts).
+        Returns the warmed buckets."""
+        warmed = self.buckets.buckets_for(cohorts)
+        for bucket in warmed:
+            solve = self._solver(bucket)
+            empty, e_mask, e_t = self._empty_slot(bucket)
+            stacked = [np.stack([empty[i]] * self.max_batch)
+                       for i in range(6)]
+            mask = np.stack([e_mask] * self.max_batch)
+            t_real = np.full((self.max_batch,), e_t, np.float32)
+            out = solve(stacked[0], self.theta, *stacked[1:], mask, t_real)
+            jax.block_until_ready(out)
+        return warmed
+
+    def cache_stats(self) -> dict:
+        """Stats of this server's bucket-executable cache."""
+        return self._cache.stats()

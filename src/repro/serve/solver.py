@@ -1,0 +1,131 @@
+"""Request-batched amortized solver: the serving hot path.
+
+SURF's headline property is amortization — after meta-training, ONE
+forward pass of the unrolled network solves a brand-new federation
+(paper §4).  Serving turns that into a batched primitive: a REQUEST
+BATCH of cohorts, stacked to a common bucket shape ``(B, n_pad, ...)``
+with per-request mixing matrices, runs through one jitted
+``vmap``-over-requests forward.  Three invariants make it correct and
+fast:
+
+  * S-as-argument — exactly like the engine/eval paths, every request's
+    S rides through jit as data, so one executable serves every
+    topology of a bucket shape;
+  * masked padding — padded AGENT rows are zeroed through every layer
+    (zero S rows/cols make them invisible to the graph filter) and
+    padded TEST rows are row-0 copies un-biased by the task's
+    ``padded_local_*`` corrections, so a padded solve returns the
+    unpadded cohort's numbers;
+  * admission-time featurization — ``core.unroll.featurize_cohort`` ran
+    at the request's TRUE shape before padding (jax RNG draws are
+    shape-dependent), so an exact-fit request reproduces
+    ``evaluate_surf`` bit-for-bit.
+
+The per-bucket executable cache key extends ``engine._engine_cache_key``
+with the bucket dims; ``engine.TRACE_COUNTS["serve"]`` counts body
+traces (the bench asserts one per warm bucket, zero at request rate).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import engine as TR
+from repro.configs.base import SURFConfig
+from repro.core import unroll as U
+from repro.core.tasks import resolve_task
+
+SERVE_MIXES = (None, "dense", "pallas")
+
+
+def resolve_serve_mix(mix):
+    """Serving supports the S-as-argument mixers only: None/"dense" (the
+    jnp Horner filter) or "pallas" (the fused kernel).  Baked-S mixers
+    (ring/halo) close over ONE topology and cannot serve per-request
+    graphs."""
+    if mix in (None, "dense"):
+        return None
+    if mix == "pallas":
+        from repro.kernels.graph_filter import make_pallas_mix
+        return make_pallas_mix()
+    raise ValueError(
+        f"serve mix must be one of {SERVE_MIXES}, got {mix!r} — baked-S "
+        "mixers (ring/halo) cannot serve per-request topologies")
+
+
+def _serve_core(cfg: SURFConfig, activation, mix_fn=None, task=None):
+    """Single-cohort masked forward ``solve_s(S, theta, W0, Xl, Yl, Xte,
+    Yte, mask, t_real)`` at a bucket shape.  ``mask`` (n_pad,) flags real
+    agents; ``t_real`` is the request's true test-rows count (its padded
+    rows are row-0 copies — see ``buckets.pad_cohort``)."""
+    task = resolve_task(cfg, task)
+
+    def masked_scores(W, Xte, Yte, mask, t_real):
+        per_loss = jax.vmap(task.padded_local_loss,
+                            in_axes=(0, 0, 0, None))(W, Xte, Yte, t_real)
+        per_met = jax.vmap(task.padded_local_metric,
+                           in_axes=(0, 0, 0, None))(W, Xte, Yte, t_real)
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = jnp.sum(jnp.where(mask, per_loss, 0.0)) / denom
+        met = jnp.sum(jnp.where(mask, per_met, 0.0)) / denom
+        return loss, met
+
+    def solve_s(S, theta, W0, Xl, Yl, Xte, Yte, mask, t_real):
+        TR.TRACE_COUNTS["serve"] += 1
+
+        def body(W, xs):
+            p_l, Xb, Yb = xs
+            Wn = U.udgd_layer(p_l, S, W, Xb, Yb, cfg, activation,
+                              mix_fn=mix_fn, task=task)
+            # re-zero padded agents: their perceptron term σ(M[0∥b]+d)
+            # is nonzero even on zero inputs (the bias d), and zero S
+            # rows only silence them in the NEXT layer's filter
+            Wn = jnp.where(mask[:, None], Wn, 0.0)
+            loss, met = masked_scores(Wn, Xte, Yte, mask, t_real)
+            return Wn, (loss, met)
+
+        W0 = jnp.where(mask[:, None], W0, 0.0)
+        W_L, (losses, mets) = jax.lax.scan(body, W0, (theta, Xl, Yl))
+        return {"W": W_L, "loss_per_layer": losses, "acc_per_layer": mets,
+                "final_loss": losses[-1], "final_acc": mets[-1]}
+
+    return solve_s
+
+
+def serve_cache_key(cfg: SURFConfig, bucket, max_batch, activation,
+                    mix_fn=None, task=None):
+    """Per-bucket executable key: ``engine._engine_cache_key`` with a
+    ("serve", n_pad, t_pad, B) variant tag and the cohort-shape cfg
+    fields scrubbed (the bucket dims subsume them — requests of any true
+    size share the bucket's executable).  None for an untagged custom
+    mix_fn (uncacheable, same contract as the engine)."""
+    cfg = dataclasses.replace(cfg, n_agents=0, train_per_agent=0,
+                              test_per_agent=0)
+    return TR._engine_cache_key(
+        cfg, ("serve", int(bucket.n_agents), int(bucket.rows),
+              int(max_batch)),
+        activation, False, mix_fn=mix_fn, task=task)
+
+
+def make_bucket_solver(cfg: SURFConfig, bucket, max_batch, *,
+                       activation="relu", mix_fn=None, task=None,
+                       cache=None):
+    """The jitted request-vmapped solver for one shape bucket:
+    ``solve(S (B,n,n), theta, W0 (B,n,d), Xl (B,L,n,b,F), Yl (B,L,n,b),
+    Xte (B,n,t,F), Yte (B,n,t), mask (B,n), t_real (B,))`` → per-request
+    metric stacks with a leading (B,) axis.  ``cache`` (a ``BoundedLRU``)
+    memoizes the executable under ``serve_cache_key``."""
+    def build():
+        solve_s = _serve_core(cfg, activation, mix_fn=mix_fn, task=task)
+        return jax.jit(jax.vmap(
+            solve_s, in_axes=(0, None, 0, 0, 0, 0, 0, 0, 0)))
+
+    if cache is None:
+        return build()
+    key = serve_cache_key(cfg, bucket, max_batch, activation,
+                          mix_fn=mix_fn, task=task)
+    if key is None:
+        return build()
+    return cache.get_or_build(key, build)
