@@ -40,11 +40,22 @@
 #                       solve; stamps federations/s, p50/p99 latency,
 #                       pad-waste, backend + interpret mode:
 #                       BENCH_serve.json
+#   make bench-earlyexit — convergence-adaptive depth: sweeps
+#                       exit_threshold through the early-exit while-loop
+#                       solver; ASSERTS thr=0 parity with the fixed-L
+#                       forward (depth==L, W_L allclose, bit-identical
+#                       RNG stream), one adaptive trace per threshold +
+#                       zero on re-eval, mean realized depth < L at
+#                       matched accuracy (|Δacc| <= eps), and a
+#                       populated serve-path depth histogram; emits the
+#                       fig5 depth-vs-accuracy frontier rows; stamps
+#                       backend + interpret mode: BENCH_earlyexit.json
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-fast test-sharded bench bench-scan bench-topology \
-	bench-engine bench-mesh2d bench-tasks bench-kernels bench-serve
+	bench-engine bench-mesh2d bench-tasks bench-kernels bench-serve \
+	bench-earlyexit
 
 test:
 	$(PY) -m pytest -x -q
@@ -79,3 +90,6 @@ bench-kernels:
 
 bench-serve:
 	sh scripts/bench.sh serve
+
+bench-earlyexit:
+	sh scripts/bench.sh earlyexit

@@ -1,0 +1,14 @@
+"""Convergence-adaptive depth perf tracking (``make bench-earlyexit`` /
+``scripts/bench.sh earlyexit``) — thin delegate to the driver in
+``repro.launch.surf_earlyexit`` so the CLI and the bench lane share one
+implementation (asserts + ``bench_out/BENCH_earlyexit.json`` writer
+live there)."""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import OUT_DIR  # noqa: F401  (sets sys.path to src/)
+from repro.launch.surf_earlyexit import main
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["--out", OUT_DIR])

@@ -37,6 +37,15 @@
 #                              # single-cohort reference solve; stamps
 #                              # federations/s + p50/p99 latency +
 #                              # pad-waste) -> bench_out/BENCH_serve.json
+#   scripts/bench.sh earlyexit # convergence-adaptive depth: sweep
+#                              # exit_threshold through the early-exit
+#                              # while-loop solver (thr=0 parity with the
+#                              # fixed-L forward, one adaptive trace per
+#                              # threshold + zero on re-eval, mean depth
+#                              # < L at matched accuracy, serve depth
+#                              # histogram populated — ALL asserted;
+#                              # fig5 depth-vs-accuracy frontier rows)
+#                              # -> bench_out/BENCH_earlyexit.json
 #   scripts/bench.sh all       # full paper-figure battery (benchmarks.run)
 set -e
 cd "$(dirname "$0")/.."
@@ -64,9 +73,13 @@ case "${1:-scan}" in
     # no simulated-device XLA flags: serving times single-device request
     # batching and must not inherit an 8-way host-device split
     exec python -m benchmarks.serve_bench ;;
+  earlyexit)
+    # no simulated-device XLA flags: the early-exit sweep runs the
+    # single-device solve + serve paths
+    exec python -m benchmarks.earlyexit_bench ;;
   all)
     exec python -m benchmarks.run ;;
   *)
-    echo "usage: scripts/bench.sh [scan|topology|engine|mesh2d|tasks|kernels|serve|all]" >&2
+    echo "usage: scripts/bench.sh [scan|topology|engine|mesh2d|tasks|kernels|serve|earlyexit|all]" >&2
     exit 2 ;;
 esac

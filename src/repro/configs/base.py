@@ -251,6 +251,19 @@ class SURFConfig:
     # (and the nominal point), tightening the slack the dual ascent sees.
     robust_sigma: float = 0.0
     robust_samples: int = 2
+    # Convergence-adaptive depth (solve-time early exit, RSDUN-style
+    # certificate): the adaptive solve paths (depth="adaptive" on
+    # evaluate_surf / solve_federation / FederationServer) stop unrolling
+    # once the probe-batch grad-norm ratio ‖∇f(W_l)‖/‖∇f(W_{l-1})‖
+    # plateaus at or above 1 − exit_threshold (i.e. the layer bought less
+    # than an exit_threshold fractional descent). exit_threshold == 0
+    # disables early exit — the adaptive path then runs all L layers and
+    # reproduces the fixed-depth forward exactly. min_layers floors the
+    # realized depth; probe_size is the held-aside train rows per agent
+    # the certificate is evaluated on (cheap vs the full cohort).
+    exit_threshold: float = 0.0
+    min_layers: int = 1
+    probe_size: int = 4
 
     @property
     def task_config(self) -> TaskConfig:

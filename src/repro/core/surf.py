@@ -286,15 +286,40 @@ _EVAL_CACHE = BoundedLRU(maxsize=64, name="surf-eval")
 _ASYNC_CACHE = BoundedLRU(maxsize=32, name="surf-async")
 
 
-def _batched_eval(cfg: SURFConfig, activation, mix_fn=None, task=None):
+DEPTHS = ("fixed", "adaptive")
+
+
+def _resolve_depth(cfg, depth):
+    """Normalize the ``depth=`` opt-in of the solve paths: None means
+    fixed-L (the paper's forward), "adaptive" selects the early-exit
+    while-loop solver configured by cfg.exit_threshold / min_layers /
+    probe_size."""
+    depth = "fixed" if depth is None else depth
+    if depth not in DEPTHS:
+        raise ValueError(f"depth must be one of {DEPTHS}, got {depth!r}")
+    if depth == "adaptive" and cfg.min_layers > cfg.n_layers:
+        raise ValueError(
+            f"min_layers={cfg.min_layers} exceeds n_layers={cfg.n_layers}")
+    return depth
+
+
+def _batched_eval(cfg: SURFConfig, activation, mix_fn=None, task=None,
+                  depth="fixed"):
     """One compiled evaluator per config: inner vmap over the stacked
     dataset axis Q, OUTER vmap over a batch of evaluation keys — called
-    with keys (n_seeds, Q, 2), returns (n_seeds, Q, ...) metric stacks."""
+    with keys (n_seeds, Q, 2), returns (n_seeds, Q, ...) metric stacks.
+    ``depth="adaptive"`` swaps in the early-exit while-loop body
+    (``engine._adaptive_eval_core``; cfg's exit fields ride the variant
+    tag so thresholds key apart)."""
     def build():
-        ev_s = TR._eval_core(cfg, activation, None, mix_fn, task)
+        core = (TR._adaptive_eval_core if depth == "adaptive"
+                else TR._eval_core)
+        ev_s = core(cfg, activation, None, mix_fn, task)
         per_q = jax.vmap(ev_s, in_axes=(None, None, 0, 0))
         return jax.jit(jax.vmap(per_q, in_axes=(None, None, None, 0)))
-    key = TR._engine_cache_key(cfg, "eval", activation, None, mix_fn=mix_fn,
+    variant = (TR.adaptive_variant(cfg, "eval") if depth == "adaptive"
+               else "eval")
+    key = TR._engine_cache_key(cfg, variant, activation, None, mix_fn=mix_fn,
                                task=task)
     if key is None:
         return build()
@@ -314,7 +339,7 @@ def _seed_batch(seed, seeds):
 
 def evaluate_surf(cfg: SURFConfig, state, S, datasets, seed=0,
                   activation="relu", seeds=None, mix_fn=None, mesh=None,
-                  task=None):
+                  task=None, depth=None):
     """Per-layer loss/acc trajectories averaged over downstream datasets —
     one vmapped computation over the stacked dataset axis.
 
@@ -325,8 +350,19 @@ def evaluate_surf(cfg: SURFConfig, state, S, datasets, seed=0,
     ``mix_fn`` evaluates with the ring ppermute filter instead of S;
     ``mesh`` places the stacked pool with its Q axis sharded over 'data'
     (``sharding.surf_rules.stacked_q_sharding``) — data-parallel
-    evaluation over downstream datasets."""
+    evaluation over downstream datasets.
+
+    ``depth="adaptive"`` solves with the CONVERGENCE-ADAPTIVE early-exit
+    unroll (``core.unroll.udgd_forward_adaptive``): layers stop once the
+    probe-batch grad-norm ratio plateaus at 1 − ``cfg.exit_threshold``
+    (≥ ``cfg.min_layers`` layers). The RNG stream is identical to the
+    fixed path (same pre-sampled per-layer batches), so
+    ``exit_threshold=0`` reproduces the fixed final row exactly. The
+    return drops the per-layer stacks (a while loop has no fixed output
+    axis) and instead carries ``final_loss``/``final_acc`` plus
+    ``depth`` — the realized layer count averaged over datasets."""
     TR._check_static_s(S, "evaluate_surf")
+    depth = _resolve_depth(cfg, depth)
     stacked = stack_meta_datasets(datasets)
     n_q = jax.tree_util.tree_leaves(stacked)[0].shape[0]
     if mesh is not None:
@@ -337,23 +373,26 @@ def evaluate_surf(cfg: SURFConfig, state, S, datasets, seed=0,
     seed_arr, single = _seed_batch(seed, seeds)
     keys = jnp.stack([_eval_keys(jax.random.PRNGKey(1000 + int(s)), n_q)
                       for s in seed_arr])
-    outs = _batched_eval(cfg, activation, mix_fn, task)(S, state.theta,
-                                                        stacked, keys)
+    outs = _batched_eval(cfg, activation, mix_fn, task,
+                         depth=depth)(S, state.theta, stacked, keys)
     res = {k: np.asarray(v).mean(1) for k, v in outs.items()}
     return {k: v[0] for k, v in res.items()} if single else res
 
 
 def solve_federation(cfg: SURFConfig, state, S, dataset, seed=0,
-                     activation="relu", mix_fn=None, task=None):
+                     activation="relu", mix_fn=None, task=None, depth=None):
     """Solve ONE new federation with the trained model — the amortization
     primitive (paper §4) as a single call, and the reference the serving
     layer (``repro.serve``) is parity-tested against:
     ``FederationServer.submit(S, dataset, seed=seed)`` reproduces this
     result exactly (identical ``fold_in(PRNGKey(1000+seed), 0)`` RNG
     stream).  Reuses the cached ``evaluate_surf`` executable for the
-    config (``cfg.n_agents`` must match the cohort)."""
+    config (``cfg.n_agents`` must match the cohort). ``depth="adaptive"``
+    solves with the early-exit unroll and adds the realized ``depth`` to
+    the result — the reference for the adaptive serve path."""
     return evaluate_surf(cfg, state, S, [dataset], seed=seed,
-                         activation=activation, mix_fn=mix_fn, task=task)
+                         activation=activation, mix_fn=mix_fn, task=task,
+                         depth=depth)
 
 
 def _async_core(cfg: SURFConfig, activation, task=None):

@@ -88,6 +88,18 @@ class Task:
         g = self.fl_grad(W, X, Y)
         return jnp.sqrt(jnp.sum(jnp.square(g)) + 1e-12)
 
+    def masked_grad_norm(self, W, X, Y, mask):
+        """``grad_norm`` over the REAL agents of a padded cohort: padded
+        rows are zeroed out of the gradient and the 1/n normalization
+        uses the real agent count, so the value equals ``grad_norm`` on
+        the unpadded cohort exactly (zero rows add exact zeros to the
+        reduction). This is the serve-path early-exit certificate —
+        padding must not perturb the exit decision."""
+        g = jax.vmap(jax.grad(self.local_loss))(W, X, Y)
+        g = jnp.where(mask[:, None], g, 0.0)
+        n_real = jnp.maximum(jnp.sum(mask), 1.0)
+        return jnp.sqrt(jnp.sum(jnp.square(g / n_real)) + 1e-12)
+
     def init_state(self, key, cfg):
         """W0 ~ N(w0_mean, w0_std²) ∈ R^{n×d} — the unrolled net's input."""
         return cfg.w0_mean + cfg.w0_std * jax.random.normal(

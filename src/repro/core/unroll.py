@@ -121,6 +121,74 @@ def udgd_forward(params, S, W0, Xl, Yl, cfg: SURFConfig, activation="relu",
     return W_L, W_all
 
 
+def probe_batch(batch, cfg: SURFConfig):
+    """The held-aside convergence-probe batch: the first
+    ``cfg.probe_size`` TRAINING rows per agent (capped at the split
+    size). Drawn without touching the RNG stream — the pre-sampled
+    per-layer mini-batch stack stays bit-identical to the fixed-depth
+    path — and small, so the early-exit certificate is cheap relative
+    to a full layer."""
+    p = min(int(cfg.probe_size), int(batch["Xtr"].shape[1]))
+    return batch["Xtr"][:, :p], batch["Ytr"][:, :p]
+
+
+def udgd_forward_adaptive(params, S, W0, Xl, Yl, Xp, Yp, cfg: SURFConfig,
+                          activation="relu", mix_fn=None, task=None,
+                          layer_fn=None):
+    """Convergence-adaptive forward: run unrolled layers under
+    ``lax.while_loop`` (fixed-L trip bound — compilation stays bounded)
+    with layer parameters and mini-batches selected by
+    ``lax.dynamic_index_in_dim``, exiting once the probe-batch grad-norm
+    ratio ‖∇f(W_l)‖/‖∇f(W_{l-1})‖ reaches 1 − ``cfg.exit_threshold``
+    (the layer bought less than an ``exit_threshold`` fractional
+    descent — the descending-constraint certificate of
+    ``core.constraints``, repurposed as a STOPPING rule) and at least
+    ``cfg.min_layers`` layers have run.
+
+    Xl/Yl are the SAME pre-sampled (L, n, b) stacks the fixed-depth
+    ``udgd_forward`` consumes (``sample_layer_batches``), so the RNG
+    stream is identical and ``exit_threshold == 0`` (early exit
+    statically disabled) reproduces ``udgd_forward``'s W_L exactly.
+    (Xp, Yp) is the held-aside probe split (``probe_batch``).
+
+    Returns ``(W_L, depth)`` — the final iterate and the realized layer
+    count (an int32 scalar, L when no certificate fired)."""
+    task = resolve_task(cfg, task)
+    if layer_fn is None:
+        layer_fn = (udgd_layer_star if cfg.topology == "star"
+                    else udgd_layer)
+    L_ = cfg.n_layers
+    thr = float(cfg.exit_threshold)
+    min_l = int(cfg.min_layers)
+    adaptive = thr > 0.0
+    g0 = task.grad_norm(W0, Xp, Yp)
+
+    def cond(carry):
+        l, _, _, done = carry
+        return (l < L_) & jnp.logical_not(done)
+
+    def body(carry):
+        l, W, g_prev, _ = carry
+        p_l = jax.tree_util.tree_map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False),
+            params)
+        Xb = jax.lax.dynamic_index_in_dim(Xl, l, 0, keepdims=False)
+        Yb = jax.lax.dynamic_index_in_dim(Yl, l, 0, keepdims=False)
+        Wn = layer_fn(p_l, S, W, Xb, Yb, cfg, activation, mix_fn=mix_fn,
+                      task=task)
+        g = task.grad_norm(Wn, Xp, Yp)
+        if adaptive:
+            ratio = g / jnp.maximum(g_prev, 1e-12)
+            fire = (l + 1 >= min_l) & (ratio >= 1.0 - thr)
+        else:
+            fire = jnp.asarray(False)
+        return (l + 1, Wn, g, fire)
+
+    depth, W_L, _, _ = jax.lax.while_loop(
+        cond, body, (jnp.zeros((), jnp.int32), W0, g0, jnp.asarray(False)))
+    return W_L, depth
+
+
 def star_filter_mask(cfg: SURFConfig):
     """§5.2: in classical FL the server (node 0) has no local data — its
     perceptron update is masked out; it only aggregates."""

@@ -52,7 +52,10 @@ from repro.utils.cache import BoundedLRU
 # batched evaluate call traces the body exactly once regardless of seed
 # count, and the serving layer's is one trace per warm shape bucket
 # (``serve.buckets``; replaying requests through warm buckets adds zero).
-TRACE_COUNTS = {"meta_step": 0, "eval": 0, "serve": 0}
+# "adaptive" counts traces of the early-exit while-loop solve bodies
+# (``_adaptive_eval_core`` + the adaptive serve core) — one per distinct
+# (config, exit params, shape), zero on cache hits.
+TRACE_COUNTS = {"meta_step": 0, "eval": 0, "serve": 0, "adaptive": 0}
 
 
 class TrainState(NamedTuple):
@@ -246,6 +249,45 @@ def _eval_core(cfg: SURFConfig, activation, star, mix_fn=None, task=None):
     return evaluate_s
 
 
+def _adaptive_eval_core(cfg: SURFConfig, activation, star, mix_fn=None,
+                        task=None):
+    """S-as-argument ADAPTIVE-depth evaluation body: same contract as
+    ``_eval_core`` but the unroll runs under the early-exit while loop
+    (``core.unroll.udgd_forward_adaptive``) — layers stop once the
+    probe-batch grad-norm ratio plateaus at 1 − ``cfg.exit_threshold``.
+    No per-layer metric stacks (a while loop has no fixed output axis);
+    returns the final loss/metric plus the realized ``depth``. With
+    ``cfg.exit_threshold == 0`` the body runs all L layers and matches
+    ``_eval_core``'s final row exactly (same pre-sampled layer batches,
+    same layer math)."""
+    task = resolve_task(cfg, task)
+    use_star = cfg.topology == "star" if star is None else star
+    layer_fn = U.udgd_layer_star if use_star else U.udgd_layer
+
+    def evaluate_s(S, theta, batch, key):
+        TRACE_COUNTS["adaptive"] += 1
+        W0, Xl, Yl = U.featurize_cohort(key, batch, cfg, task=task)
+        Xp, Yp = U.probe_batch(batch, cfg)
+        W_L, depth = U.udgd_forward_adaptive(
+            theta, S, W0, Xl, Yl, Xp, Yp, cfg, activation, mix_fn=mix_fn,
+            task=task, layer_fn=layer_fn)
+        loss = task.fl_loss(W_L, batch["Xte"], batch["Yte"])
+        acc = task.fl_metric(W_L, batch["Xte"], batch["Yte"])
+        return {"final_loss": loss, "final_acc": acc,
+                "depth": depth.astype(jnp.float32)}
+
+    return evaluate_s
+
+
+def adaptive_variant(cfg: SURFConfig, base):
+    """Cache-key variant tag for an adaptive-depth computation: the
+    normalizer scrubs the exit fields from cfg (fixed-depth engines
+    ignore them), so every adaptive builder must carry them HERE — two
+    thresholds trace different while-loop bodies."""
+    return (base + "-adaptive", float(cfg.exit_threshold),
+            int(cfg.min_layers), int(cfg.probe_size))
+
+
 def make_eval(cfg: SURFConfig, S, *, activation="relu", star=None, jit=True,
               mix_fn=None, task=None):
     """Per-layer loss/accuracy trajectory on a downstream dataset — the
@@ -305,5 +347,11 @@ def _engine_cache_key(cfg: SURFConfig, variant, activation, star,
     if not use_star:
         cfg = dataclasses.replace(cfg, topology="regular", degree=0,
                                   er_p=0.0)
+    # The adaptive-depth exit fields only shape the EARLY-EXIT solve
+    # bodies, which carry them in their variant tag (``adaptive_variant``)
+    # — scrub them here so fixed-depth engines are shared across
+    # exit_threshold sweeps.
+    cfg = dataclasses.replace(cfg, exit_threshold=0.0, min_layers=1,
+                              probe_size=0)
     return (cfg, variant, activation, use_star, mesh_fingerprint(mesh), mt,
             task_tag)

@@ -19,12 +19,13 @@ Layers: ``solver`` (the jitted request-vmapped masked forward),
 (continuous batching + futures), ``metrics`` (throughput/latency/
 pad-waste telemetry).  The CLI driver is ``repro.launch.surf_serve``.
 """
-from repro.serve.buckets import Bucket, BucketSpec, pad_cohort
+from repro.serve.buckets import Bucket, BucketSpec, pad_cohort, pad_probe
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queue import FederationServer, ServeFuture
 from repro.serve.solver import (SERVE_MIXES, make_bucket_solver,
                                 resolve_serve_mix, serve_cache_key)
 
-__all__ = ["Bucket", "BucketSpec", "pad_cohort", "ServeMetrics",
-           "FederationServer", "ServeFuture", "SERVE_MIXES",
-           "make_bucket_solver", "resolve_serve_mix", "serve_cache_key"]
+__all__ = ["Bucket", "BucketSpec", "pad_cohort", "pad_probe",
+           "ServeMetrics", "FederationServer", "ServeFuture",
+           "SERVE_MIXES", "make_bucket_solver", "resolve_serve_mix",
+           "serve_cache_key"]

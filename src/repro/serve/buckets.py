@@ -97,3 +97,19 @@ def pad_cohort(S, W0, Xl, Yl, Xte, Yte, bucket: Bucket):
     mask = np.zeros(npad, bool)
     mask[:n] = True
     return Sp, W0p, Xlp, Ylp, Xtep, Ytep, mask, np.float32(t)
+
+
+def pad_probe(Xp, Yp, bucket: Bucket):
+    """Pad the convergence-probe split (``core.unroll.probe_batch``) to
+    ``bucket``'s agent count.  Probe ROWS are a config constant
+    (``cfg.probe_size``) so only the agent axis pads — with zeros, which
+    ``task.masked_grad_norm`` zeroes out of the certificate exactly."""
+    Xp, Yp = np.asarray(Xp), np.asarray(Yp)
+    n, npad = Xp.shape[0], int(bucket.n_agents)
+    if n > npad:
+        raise ValueError(f"probe (n={n}) does not fit bucket {bucket}")
+    Xpp = np.zeros((npad,) + Xp.shape[1:], Xp.dtype)
+    Xpp[:n] = Xp
+    Ypp = np.zeros((npad,) + Yp.shape[1:], Yp.dtype)
+    Ypp[:n] = Yp
+    return Xpp, Ypp

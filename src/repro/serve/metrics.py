@@ -14,7 +14,14 @@ per solver tick; ``summary()`` condenses them into the numbers
     occupancy = the stream is too fragmented for ``max_batch``);
   * ``pad_waste`` — 1 − useful/padded compute cells, where a cell is
     one (agent × test-row) unit; waste comes from bucket rounding AND
-    empty batch slots.
+    empty batch slots;
+  * adaptive-depth telemetry (``depth="adaptive"`` servers only) —
+    ``depth_hist`` counts realized per-request depths,
+    ``request_flops_saved`` = 1 − Σdepth/(N·L) is the per-request
+    layer-work fraction the early exit skipped, and
+    ``batch_flops_saved`` = 1 − Σtrip/(ticks·L) is what the BATCH
+    actually saved (a tick's while-loop runs to its slowest request, so
+    batch savings lag request savings under mixed difficulty).
 """
 from __future__ import annotations
 
@@ -35,12 +42,20 @@ class ServeMetrics:
         self.padded_cells = 0.0          # Σ slots * n_pad * t_pad over ticks
         self.per_bucket = {}             # bucket -> tick count
         self._window = deque(maxlen=window)   # (wall, n_admitted) per tick
+        self.depth_hist = {}             # realized depth -> request count
+        self.layers_run = 0              # Σ while-loop trips over ticks
+        self.adaptive_ticks = 0
+        self.n_layers = 0                # L, for flops-saved denominators
 
     def record_tick(self, bucket, n_admitted, slots, useful_cells,
-                    padded_cells, latencies, wall):
+                    padded_cells, latencies, wall, depths=None,
+                    layers_run=None, n_layers=None):
         """One solver invocation: ``n_admitted`` requests in ``slots``
         batch slots of ``bucket``, per-request enqueue→complete
-        ``latencies`` (seconds), ``wall`` seconds in the solve."""
+        ``latencies`` (seconds), ``wall`` seconds in the solve.
+        Adaptive servers also pass per-request realized ``depths``, the
+        tick's while-loop trip count ``layers_run`` and the model depth
+        ``n_layers``."""
         self.ticks += 1
         self.completed += int(n_admitted)
         self.admitted += int(n_admitted)
@@ -52,12 +67,19 @@ class ServeMetrics:
         key = tuple(bucket)
         self.per_bucket[key] = self.per_bucket.get(key, 0) + 1
         self._window.append((float(wall), int(n_admitted)))
+        if depths is not None:
+            self.adaptive_ticks += 1
+            self.layers_run += int(layers_run)
+            self.n_layers = int(n_layers)
+            for d in depths:
+                d = int(d)
+                self.depth_hist[d] = self.depth_hist.get(d, 0) + 1
 
     def summary(self) -> dict:
         lat = np.asarray(self.latencies, np.float64)
         w_wall = sum(w for w, _ in self._window)
         w_n = sum(n for _, n in self._window)
-        return {
+        out = {
             "requests_completed": self.completed,
             "ticks": self.ticks,
             "federations_per_sec": (self.completed / self.solve_time
@@ -76,3 +98,17 @@ class ServeMetrics:
                                  for (n, t), c in
                                  sorted(self.per_bucket.items())},
         }
+        if self.adaptive_ticks:
+            total_depth = sum(d * c for d, c in self.depth_hist.items())
+            n_req = sum(self.depth_hist.values())
+            L_ = max(self.n_layers, 1)
+            out.update({
+                "depth_hist": {str(d): c for d, c in
+                               sorted(self.depth_hist.items())},
+                "mean_depth": total_depth / max(n_req, 1),
+                "request_flops_saved": 1.0 - total_depth / (max(n_req, 1)
+                                                            * L_),
+                "batch_flops_saved": 1.0 - self.layers_run / (
+                    self.adaptive_ticks * L_),
+            })
+        return out

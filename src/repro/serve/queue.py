@@ -9,10 +9,18 @@ fixed ``(B, n_pad, ...)`` batch (empty slots are masked out, so the
 executable never sees a new batch size) and solves them in one jitted
 call, scattering per-request results to their futures.
 
-The admission rule is deliberately simple — the HEAD of the queue
-defines the tick's bucket and only same-bucket requests ride along
-(FIFO between buckets, batching within) — so latency is bounded by
-queue position, never by a scheduler starving a rare shape.
+The admission rule favors batch fullness without starving rare shapes:
+a tick serves the FULLEST bucket in the queue (ties broken by FIFO head
+position, so a uniform stream behaves exactly like head-of-queue FIFO),
+EXCEPT that any bucket whose head request has been passed over for
+``max_wait_ticks`` ticks wins outright (oldest-waiting first) — an
+aging override that bounds every request's wait even when one popular
+shape could otherwise monopolize admission.
+
+``depth="adaptive"`` serves through the batched early-exit solver
+(``solver._serve_core_adaptive``): each request additionally carries a
+padded convergence-probe split, results gain a realized ``depth``, and
+``metrics.summary()`` grows a depth histogram + FLOPs-saved estimates.
 
 Everything expensive is cached: one executable per (bucket, B, mix,
 task) in a per-server ``BoundedLRU`` (registered as "serve-buckets" for
@@ -31,7 +39,7 @@ import numpy as np
 from repro.configs.base import SURFConfig
 from repro.core import unroll as U
 from repro.core.tasks import resolve_task
-from repro.serve.buckets import BucketSpec, pad_cohort
+from repro.serve.buckets import BucketSpec, pad_cohort, pad_probe
 from repro.serve.metrics import ServeMetrics
 from repro.serve.solver import make_bucket_solver, resolve_serve_mix
 from repro.utils.cache import BoundedLRU
@@ -66,12 +74,13 @@ class ServeFuture:
 class _Request:
     bucket: object
     arrays: tuple                        # padded (S, W0, Xl, Yl, Xte, Yte)
-    mask: np.ndarray
+    mask: np.ndarray                     # (+ Xp, Yp when depth="adaptive")
     t_real: np.float32
     n_real: int
     rows_real: int
     future: ServeFuture
     t_submit: float
+    ticks_waited: int = 0                # ticks passed over (aging input)
 
 
 class FederationServer:
@@ -85,7 +94,8 @@ class FederationServer:
 
     def __init__(self, cfg: SURFConfig, theta, *, activation="relu",
                  mix=None, task=None, buckets: BucketSpec = None,
-                 max_batch: int = 8, max_buckets: int = 16):
+                 max_batch: int = 8, max_buckets: int = 16,
+                 depth: str = "fixed", max_wait_ticks: int = 8):
         if cfg.topology == "star":
             raise ValueError(
                 "star-topology serving is unsupported: the server-row "
@@ -94,6 +104,14 @@ class FederationServer:
                 "configs, or evaluate star cohorts via evaluate_surf")
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if depth not in ("fixed", "adaptive"):
+            raise ValueError(f"depth must be 'fixed' or 'adaptive', got "
+                             f"{depth!r}")
+        if max_wait_ticks < 1:
+            raise ValueError(f"max_wait_ticks must be >= 1, got "
+                             f"{max_wait_ticks}")
+        self.depth = depth
+        self.max_wait_ticks = int(max_wait_ticks)
         self.cfg = cfg
         self.theta = theta
         self.activation = activation
@@ -137,9 +155,20 @@ class FederationServer:
         bucket = self.buckets.bucket_for(n, t)
         Sp, W0p, Xlp, Ylp, Xtep, Ytep, mask, t_real = pad_cohort(
             S, W0, Xl, Yl, dataset["Xte"], dataset["Yte"], bucket)
+        arrays = (Sp, W0p, Xlp, Ylp, Xtep, Ytep)
+        if self.depth == "adaptive":
+            m = int(np.asarray(dataset["Xtr"]).shape[1])
+            if m < self.cfg.probe_size:
+                raise ValueError(
+                    f"adaptive serving needs probe_size="
+                    f"{self.cfg.probe_size} training rows per agent for "
+                    f"the convergence probe, got {m} — probe rows must "
+                    "be shape-constant per bucket executable")
+            Xp, Yp = U.probe_batch(batch, cfg_r)
+            arrays = arrays + pad_probe(Xp, Yp, bucket)
         fut = ServeFuture()
         self._queue.append(_Request(
-            bucket=bucket, arrays=(Sp, W0p, Xlp, Ylp, Xtep, Ytep),
+            bucket=bucket, arrays=arrays,
             mask=mask, t_real=t_real, n_real=n, rows_real=t, future=fut,
             t_submit=time.perf_counter()))
         return fut
@@ -149,37 +178,67 @@ class FederationServer:
         return make_bucket_solver(self.cfg, bucket, self.max_batch,
                                   activation=self.activation,
                                   mix_fn=self.mix_fn, task=self.task,
-                                  cache=self._cache)
+                                  cache=self._cache, depth=self.depth)
 
     def _empty_slot(self, bucket):
         """All-zero, all-masked batch slot — t_real = t_pad keeps the
-        padded-loss corrections on their identity branch."""
+        padded-loss corrections on their identity branch.  The all-false
+        mask also starts adaptive slots INACTIVE (depth 0, no layer
+        work charged to them)."""
         d, b = self.task.dim, self.cfg.batch_per_agent
         F, L = self.task.feat_dim, self.cfg.n_layers
         n, t = int(bucket.n_agents), int(bucket.rows)
         ydt = np.dtype(self.task.label_dtype)
-        return ((np.zeros((n, n), np.float32),
-                 np.zeros((n, d), np.float32),
-                 np.zeros((L, n, b, F), np.float32),
-                 np.zeros((L, n, b), ydt),
-                 np.zeros((n, t, F), np.float32),
-                 np.zeros((n, t), ydt)),
-                np.zeros(n, bool), np.float32(t))
+        arrays = (np.zeros((n, n), np.float32),
+                  np.zeros((n, d), np.float32),
+                  np.zeros((L, n, b, F), np.float32),
+                  np.zeros((L, n, b), ydt),
+                  np.zeros((n, t, F), np.float32),
+                  np.zeros((n, t), ydt))
+        if self.depth == "adaptive":
+            p = int(self.cfg.probe_size)
+            arrays = arrays + (np.zeros((n, p, F), np.float32),
+                               np.zeros((n, p), ydt))
+        return arrays, np.zeros(n, bool), np.float32(t)
+
+    def _select_bucket(self):
+        """The tick's bucket, by the aging admission policy:
+
+          1. if any bucket's HEAD request has been passed over for
+             ``max_wait_ticks`` ticks, the oldest-waiting such bucket
+             wins (FIFO position breaks ties) — no shape starves;
+          2. otherwise the FULLEST bucket wins (occupancy capped at
+             ``max_batch`` — surplus beyond one batch confers no
+             advantage), ties broken by FIFO head position, so a
+             single-shape stream degenerates to plain FIFO."""
+        counts, first_pos = {}, {}
+        for i, r in enumerate(self._queue):
+            counts[r.bucket] = counts.get(r.bucket, 0) + 1
+            first_pos.setdefault(r.bucket, i)
+        aged = [b for b, i in first_pos.items()
+                if self._queue[i].ticks_waited >= self.max_wait_ticks]
+        if aged:
+            return max(aged, key=lambda b: (
+                self._queue[first_pos[b]].ticks_waited, -first_pos[b]))
+        return max(counts, key=lambda b: (
+            min(counts[b], self.max_batch), -first_pos[b]))
 
     def tick(self) -> int:
-        """One continuous-batching step: admit up to ``max_batch``
-        requests matching the queue head's bucket, solve, complete
-        their futures.  Returns the number of requests completed (0 on
-        an empty queue)."""
+        """One continuous-batching step: pick a bucket
+        (``_select_bucket``), admit up to ``max_batch`` of its requests
+        FIFO-within-bucket, solve, complete their futures.  Passed-over
+        requests age by one tick.  Returns the number of requests
+        completed (0 on an empty queue)."""
         if not self._queue:
             return 0
-        bucket = self._queue[0].bucket
+        bucket = self._select_bucket()
         admitted, rest = [], deque()
         while self._queue:
             r = self._queue.popleft()
             if r.bucket == bucket and len(admitted) < self.max_batch:
                 admitted.append(r)
             else:
+                r.ticks_waited += 1
                 rest.append(r)
         self._queue = rest
         arrays, mask, t_real = zip(*[(r.arrays, r.mask, r.t_real)
@@ -189,7 +248,8 @@ class FederationServer:
         arrays = list(arrays) + [empty] * n_pad_slots
         mask = list(mask) + [e_mask] * n_pad_slots
         t_real = list(t_real) + [e_t] * n_pad_slots
-        stacked = [np.stack([a[i] for a in arrays]) for i in range(6)]
+        stacked = [np.stack([a[i] for a in arrays])
+                   for i in range(len(arrays[0]))]
         mask = np.stack(mask)
         t_real = np.asarray(t_real, np.float32)
         solve = self._solver(bucket)
@@ -207,8 +267,15 @@ class FederationServer:
             lats.append(lat)
         useful = sum(r.n_real * r.rows_real for r in admitted)
         padded = self.max_batch * int(bucket.n_agents) * int(bucket.rows)
+        kw = {}
+        if self.depth == "adaptive":
+            depths = [int(np.asarray(out["depth"])[i])
+                      for i in range(len(admitted))]
+            kw = {"depths": depths,
+                  "layers_run": max(depths, default=0),
+                  "n_layers": self.cfg.n_layers}
         self.metrics.record_tick(bucket, len(admitted), self.max_batch,
-                                 useful, padded, lats, wall)
+                                 useful, padded, lats, wall, **kw)
         return len(admitted)
 
     def drain(self) -> int:
@@ -231,7 +298,7 @@ class FederationServer:
             solve = self._solver(bucket)
             empty, e_mask, e_t = self._empty_slot(bucket)
             stacked = [np.stack([empty[i]] * self.max_batch)
-                       for i in range(6)]
+                       for i in range(len(empty))]
             mask = np.stack([e_mask] * self.max_batch)
             t_real = np.full((self.max_batch,), e_t, np.float32)
             out = solve(stacked[0], self.theta, *stacked[1:], mask, t_real)

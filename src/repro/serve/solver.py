@@ -55,13 +55,9 @@ def resolve_serve_mix(mix):
         "mixers (ring/halo) cannot serve per-request topologies")
 
 
-def _serve_core(cfg: SURFConfig, activation, mix_fn=None, task=None):
-    """Single-cohort masked forward ``solve_s(S, theta, W0, Xl, Yl, Xte,
-    Yte, mask, t_real)`` at a bucket shape.  ``mask`` (n_pad,) flags real
-    agents; ``t_real`` is the request's true test-rows count (its padded
-    rows are row-0 copies — see ``buckets.pad_cohort``)."""
-    task = resolve_task(cfg, task)
-
+def _masked_scores(task):
+    """Padded-cohort loss/metric: the task's ``padded_local_*``
+    row-corrections per agent, averaged over REAL agents only."""
     def masked_scores(W, Xte, Yte, mask, t_real):
         per_loss = jax.vmap(task.padded_local_loss,
                             in_axes=(0, 0, 0, None))(W, Xte, Yte, t_real)
@@ -71,6 +67,17 @@ def _serve_core(cfg: SURFConfig, activation, mix_fn=None, task=None):
         loss = jnp.sum(jnp.where(mask, per_loss, 0.0)) / denom
         met = jnp.sum(jnp.where(mask, per_met, 0.0)) / denom
         return loss, met
+
+    return masked_scores
+
+
+def _serve_core(cfg: SURFConfig, activation, mix_fn=None, task=None):
+    """Single-cohort masked forward ``solve_s(S, theta, W0, Xl, Yl, Xte,
+    Yte, mask, t_real)`` at a bucket shape.  ``mask`` (n_pad,) flags real
+    agents; ``t_real`` is the request's true test-rows count (its padded
+    rows are row-0 copies — see ``buckets.pad_cohort``)."""
+    task = resolve_task(cfg, task)
+    masked_scores = _masked_scores(task)
 
     def solve_s(S, theta, W0, Xl, Yl, Xte, Yte, mask, t_real):
         TR.TRACE_COUNTS["serve"] += 1
@@ -94,30 +101,123 @@ def _serve_core(cfg: SURFConfig, activation, mix_fn=None, task=None):
     return solve_s
 
 
+def _serve_core_adaptive(cfg: SURFConfig, activation, mix_fn=None,
+                         task=None):
+    """Batched early-exit solver for one bucket: ``solve_batch(S, theta,
+    W0, Xl, Yl, Xte, Yte, Xp, Yp, mask, t_real)`` with leading (B,)
+    request axes on everything but theta.
+
+    Unlike the fixed path (vmap-of-scan), the batch shares ONE
+    ``lax.while_loop`` with a per-request ACTIVE mask: a request whose
+    grad-norm certificate fires freezes its W (``jnp.where`` select) and
+    stops accruing mixed/perceptron work logically; the loop exits when
+    every request is done or L is reached, so the batch's realized trip
+    count is max-over-requests depth.  The certificate uses
+    ``task.masked_grad_norm`` on the padded probe split — zeroed padded
+    rows and a real-agent denominator make it EQUAL to the unpadded
+    ``grad_norm`` (adding 0.0 is exact), so padding can never flip an
+    exit decision.  ``depth`` (B,) int32 is each request's realized
+    layer count (0 for empty slots, whose all-zero mask starts them
+    inactive)."""
+    task = resolve_task(cfg, task)
+    masked_scores = _masked_scores(task)
+    L_ = cfg.n_layers
+    thr = float(cfg.exit_threshold)
+    min_l = int(cfg.min_layers)
+    adaptive = thr > 0.0
+
+    def solve_batch(S, theta, W0, Xl, Yl, Xte, Yte, Xp, Yp, mask, t_real):
+        TR.TRACE_COUNTS["serve"] += 1
+        TR.TRACE_COUNTS["adaptive"] += 1
+        W0 = jnp.where(mask[:, :, None], W0, 0.0)
+        act0 = jnp.any(mask, axis=1)                 # empty slots: done
+        g0 = jax.vmap(task.masked_grad_norm)(W0, Xp, Yp, mask)
+        dep0 = jnp.zeros((W0.shape[0],), jnp.int32)
+
+        def layer(p_l, S1, W1, Xb1, Yb1):
+            return U.udgd_layer(p_l, S1, W1, Xb1, Yb1, cfg, activation,
+                                mix_fn=mix_fn, task=task)
+
+        def cond(carry):
+            l, _, _, act, _ = carry
+            return (l < L_) & jnp.any(act)
+
+        def body(carry):
+            l, W, g_prev, act, dep = carry
+            p_l = jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, l, 0, keepdims=False), theta)
+            Xb = jax.lax.dynamic_index_in_dim(Xl, l, 1, keepdims=False)
+            Yb = jax.lax.dynamic_index_in_dim(Yl, l, 1, keepdims=False)
+            Wn = jax.vmap(layer, in_axes=(None, 0, 0, 0, 0))(
+                p_l, S, W, Xb, Yb)
+            # same padded-agent re-zero as the fixed path, then freeze
+            # requests whose certificate already fired
+            Wn = jnp.where(mask[:, :, None], Wn, 0.0)
+            Wn = jnp.where(act[:, None, None], Wn, W)
+            g = jax.vmap(task.masked_grad_norm)(Wn, Xp, Yp, mask)
+            g = jnp.where(act, g, g_prev)
+            dep = dep + act.astype(jnp.int32)
+            if adaptive:
+                ratio = g / jnp.maximum(g_prev, 1e-12)
+                fire = (l + 1 >= min_l) & (ratio >= 1.0 - thr)
+                act = act & jnp.logical_not(fire)
+            return (l + 1, Wn, g, act, dep)
+
+        _, W_L, _, _, depth = jax.lax.while_loop(
+            cond, body, (jnp.zeros((), jnp.int32), W0, g0, act0, dep0))
+        loss, met = jax.vmap(masked_scores)(W_L, Xte, Yte, mask, t_real)
+        return {"W": W_L, "final_loss": loss, "final_acc": met,
+                "depth": depth}
+
+    return solve_batch
+
+
 def serve_cache_key(cfg: SURFConfig, bucket, max_batch, activation,
-                    mix_fn=None, task=None):
+                    mix_fn=None, task=None, depth="fixed"):
     """Per-bucket executable key: ``engine._engine_cache_key`` with a
     ("serve", n_pad, t_pad, B) variant tag and the cohort-shape cfg
     fields scrubbed (the bucket dims subsume them — requests of any true
-    size share the bucket's executable).  None for an untagged custom
-    mix_fn (uncacheable, same contract as the engine)."""
+    size share the bucket's executable).  The adaptive path tags
+    ("serve-adaptive", ..., thr, min_layers, probe_size) instead — the
+    exit knobs are scrubbed from cfg by ``_engine_cache_key`` (fixed
+    engines are shared across threshold sweeps) so they must ride in the
+    variant here.  None for an untagged custom mix_fn (uncacheable, same
+    contract as the engine)."""
+    variant = ("serve", int(bucket.n_agents), int(bucket.rows),
+               int(max_batch))
+    if depth == "adaptive":
+        variant = ("serve-adaptive", int(bucket.n_agents),
+                   int(bucket.rows), int(max_batch),
+                   float(cfg.exit_threshold), int(cfg.min_layers),
+                   int(cfg.probe_size))
     cfg = dataclasses.replace(cfg, n_agents=0, train_per_agent=0,
                               test_per_agent=0)
-    return TR._engine_cache_key(
-        cfg, ("serve", int(bucket.n_agents), int(bucket.rows),
-              int(max_batch)),
-        activation, False, mix_fn=mix_fn, task=task)
+    return TR._engine_cache_key(cfg, variant, activation, False,
+                                mix_fn=mix_fn, task=task)
 
 
 def make_bucket_solver(cfg: SURFConfig, bucket, max_batch, *,
                        activation="relu", mix_fn=None, task=None,
-                       cache=None):
-    """The jitted request-vmapped solver for one shape bucket:
-    ``solve(S (B,n,n), theta, W0 (B,n,d), Xl (B,L,n,b,F), Yl (B,L,n,b),
-    Xte (B,n,t,F), Yte (B,n,t), mask (B,n), t_real (B,))`` → per-request
-    metric stacks with a leading (B,) axis.  ``cache`` (a ``BoundedLRU``)
-    memoizes the executable under ``serve_cache_key``."""
+                       cache=None, depth="fixed"):
+    """The jitted request-batched solver for one shape bucket.
+
+    ``depth="fixed"`` (default): vmap-of-scan ``solve(S (B,n,n), theta,
+    W0 (B,n,d), Xl (B,L,n,b,F), Yl (B,L,n,b), Xte (B,n,t,F),
+    Yte (B,n,t), mask (B,n), t_real (B,))`` → per-request metric stacks
+    with a leading (B,) axis.
+
+    ``depth="adaptive"``: the shared early-exit while-loop
+    (``_serve_core_adaptive``) — same signature with probe arrays
+    ``Xp (B,n,p,F), Yp (B,n,p)`` inserted after Yte, and a ``depth``
+    (B,) field in the result.
+
+    ``cache`` (a ``BoundedLRU``) memoizes the executable under
+    ``serve_cache_key``."""
     def build():
+        if depth == "adaptive":
+            return jax.jit(_serve_core_adaptive(
+                cfg, activation, mix_fn=mix_fn, task=task))
         solve_s = _serve_core(cfg, activation, mix_fn=mix_fn, task=task)
         return jax.jit(jax.vmap(
             solve_s, in_axes=(0, None, 0, 0, 0, 0, 0, 0, 0)))
@@ -125,7 +225,7 @@ def make_bucket_solver(cfg: SURFConfig, bucket, max_batch, *,
     if cache is None:
         return build()
     key = serve_cache_key(cfg, bucket, max_batch, activation,
-                          mix_fn=mix_fn, task=task)
+                          mix_fn=mix_fn, task=task, depth=depth)
     if key is None:
         return build()
     return cache.get_or_build(key, build)

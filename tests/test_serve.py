@@ -175,6 +175,31 @@ def test_sparse_task_serving_with_row_padding():
 
 
 # ------------------------------------------------------ queue semantics
+def test_aging_prevents_bucket_starvation(trained):
+    """A steady stream of one popular shape must not starve a rare
+    shape: after max_wait_ticks passed-over ticks, the rare bucket's
+    head wins admission outright."""
+    state, _ = trained
+    srv = _server(state.theta, max_batch=2, max_wait_ticks=2)
+    _, S, ds = _cohort(12, 4, seed=90)          # the rare (16,4) request
+    rare = srv.submit(S, ds, seed=0)
+    futs = []
+    for tick in range(3):
+        for j in range(2):                      # two popular (8,4) per tick
+            _, S, ds = _cohort(6, 4, seed=91 + 2 * tick + j)
+            futs.append(srv.submit(S, ds, seed=tick))
+        if tick < 2:
+            # popular bucket is fuller (2 vs 1) — the rare one waits
+            assert srv.tick() == 2 and not rare.done()
+    # rare head has now been passed over max_wait_ticks=2 times: the
+    # aging override serves its bucket alone despite lower occupancy
+    assert srv.tick() == 1
+    assert rare.done()
+    assert sum(f.done() for f in futs) == 4     # 2 popular still queued
+    srv.drain()
+    assert all(f.done() for f in futs)
+
+
 def test_fifo_head_defines_tick_bucket(trained):
     """Mixed-size stream: the head's bucket is served first; later
     same-bucket requests ride along, other buckets wait their turn."""
