@@ -38,8 +38,19 @@
 #                       trace per warm bucket, zero replay traces, and
 #                       per-request parity vs the single-cohort reference
 #                       solve; stamps federations/s, p50/p99 latency,
-#                       pad-waste, backend + interpret mode:
+#                       pad-waste, backend + interpret mode; plus
+#                       sharded+async rows (mesh-sharded request axis +
+#                       AsyncDriver per shard count in {1,2,4,8}, parity
+#                       spot-checked, device_count + mesh fingerprints +
+#                       simulated-device caveat stamped):
 #                       BENCH_serve.json
+#   make bench-qsharded — Q-sharded train engine on 8 simulated devices:
+#                       ASSERTS trace-count==1 with in-scan Q-sharded
+#                       snapshot evals, allclose parity vs the replicated
+#                       run, and per-meta-step collective bytes FLAT over
+#                       Q -> 2Q -> 4Q (masked-psum select) while the
+#                       naive dynamic-index counterfactual grows ∝ Q:
+#                       BENCH_qsharded.json
 #   make bench-earlyexit — convergence-adaptive depth: sweeps
 #                       exit_threshold through the early-exit while-loop
 #                       solver; ASSERTS thr=0 parity with the fixed-L
@@ -55,7 +66,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-fast test-sharded bench bench-scan bench-topology \
 	bench-engine bench-mesh2d bench-tasks bench-kernels bench-serve \
-	bench-earlyexit
+	bench-qsharded bench-earlyexit
 
 test:
 	$(PY) -m pytest -x -q
@@ -90,6 +101,9 @@ bench-kernels:
 
 bench-serve:
 	sh scripts/bench.sh serve
+
+bench-qsharded:
+	sh scripts/bench.sh qsharded
 
 bench-earlyexit:
 	sh scripts/bench.sh earlyexit

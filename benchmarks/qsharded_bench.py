@@ -1,0 +1,172 @@
+"""Q-sharded train-engine perf tracking + smoke assertions
+(``make bench-qsharded`` / ``scripts/bench.sh qsharded``), as machine-
+readable JSON (``bench_out/BENCH_qsharded.json``).
+
+Three claims of the Q-sharded data-parallel axis, measured and ASSERTED
+over 8 simulated host devices:
+
+  1. trace-count == 1 — a ``train_surf(q_sharded=True)`` run with
+     in-scan snapshot evals (Q-sharded eval pool) traces ``meta_step``
+     exactly once: the owner-masked psum select and the sharded eval
+     vmap live INSIDE the one compiled scan.
+  2. parity — the Q-sharded run's final theta and snapshot stream match
+     the replicated (mesh=None) run to allclose (the masked-psum select
+     adds exact zeros, so the trajectory is bit-preserved).
+  3. bytes independent of Q — per-meta-step HLO collective bytes of the
+     REAL engine body (``launch.surf_dryrun.q_scan_collective_bytes``)
+     do NOT grow from Q to 2Q to 4Q (ratio ≤ 1.05), while the naive
+     dynamic-index counterfactual on the same sharded pool all-gathers
+     ∝ Q — the growth the masked select removes.
+
+Run via ``scripts/bench.sh qsharded`` (sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import OUT_DIR
+from repro import engine as E
+from repro.configs.base import SURFConfig
+from repro.core import surf
+from repro.data import synthetic
+from repro.launch.mesh import host_device_count, make_surf_mesh
+from repro.launch.surf_dryrun import q_scan_collective_bytes
+from repro.sharding.surf_rules import mesh_fingerprint
+
+CFG = SURFConfig(n_agents=32, n_layers=4, filter_taps=2, feature_dim=16,
+                 n_classes=8, batch_per_agent=6, train_per_agent=12,
+                 test_per_agent=6, eps=0.05, topology="ring", degree=2)
+STEPS = 40
+META_Q = 16           # train pool size (divisible by 8 shards)
+EVAL_Q = 8
+EVAL_EVERY = 10
+AGENT_SHARDS = 8
+
+
+def bench_qsharded_train(mesh):
+    """Q-sharded run vs replicated reference: ONE meta_step trace,
+    allclose parity on theta + every snapshot row."""
+    mds = synthetic.make_meta_dataset(CFG, META_Q, seed=0)
+    eval_ds = synthetic.make_meta_dataset(CFG, EVAL_Q, seed=777)
+    kw = dict(steps=STEPS, seed=0, log_every=STEPS,
+              eval_every=EVAL_EVERY, eval_datasets=eval_ds)
+    # replicated reference (no mesh)
+    ref_state, ref_hist, ref_snaps, _ = surf.train_surf(CFG, mds, **kw)
+    jax.block_until_ready(ref_state.theta)
+
+    E.TRACE_COUNTS["meta_step"] = 0
+    t0 = time.perf_counter()
+    state, hist, snaps, _ = surf.train_surf(CFG, mds, mesh=mesh,
+                                            q_sharded=True, **kw)
+    jax.block_until_ready(state.theta)
+    first_call_s = time.perf_counter() - t0
+    traces = E.TRACE_COUNTS["meta_step"]
+    assert traces == 1, \
+        f"Q-sharded engine traced meta_step {traces}x, not 1"
+
+    theta_delta = max(float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+                      for a, b in zip(jax.tree_util.tree_leaves(state.theta),
+                                      jax.tree_util.tree_leaves(
+                                          ref_state.theta)))
+    assert theta_delta < 1e-5, \
+        f"Q-sharded theta diverged from replicated: max delta {theta_delta}"
+    assert len(snaps) == len(ref_snaps) > 0
+    snap_delta = max(float(np.max(np.abs(np.asarray(s[k]) -
+                                         np.asarray(r[k]))))
+                     for s, r in zip(snaps, ref_snaps)
+                     for k in ("final_acc", "final_loss"))
+    assert snap_delta < 1e-4, \
+        f"Q-sharded snapshots diverged: max delta {snap_delta}"
+
+    # warm re-run through the cached engine (no retrace)
+    t0 = time.perf_counter()
+    iters = 3
+    for _ in range(iters):
+        out = surf.train_surf(CFG, mds, mesh=mesh, q_sharded=True, **kw)
+        jax.block_until_ready(out[0].theta)
+    warm_run_s = (time.perf_counter() - t0) / iters
+    assert E.TRACE_COUNTS["meta_step"] == 1, "warm rerun retraced"
+
+    rec = {"engine_variant": "qsharded-pool+snapshots",
+           "meta_q": META_Q, "eval_q": EVAL_Q, "steps": STEPS,
+           "eval_every": EVAL_EVERY, "meta_step_traces": traces,
+           "theta_max_delta_vs_replicated": theta_delta,
+           "snapshot_max_delta_vs_replicated": snap_delta,
+           "first_call_s": round(first_call_s, 3),
+           "warm_run_s": round(warm_run_s, 4),
+           "warm_step_us": round(warm_run_s / STEPS * 1e6, 1),
+           "snapshots": len(snaps),
+           "final_test_acc": round(float(hist[-1]["test_acc"]), 4)}
+    print(f"qsharded train: traces={traces} theta_delta={theta_delta:.2e} "
+          f"snap_delta={snap_delta:.2e} warm_step="
+          f"{rec['warm_step_us']:.1f}us")
+    return rec
+
+
+def bench_q_bytes(mesh):
+    """Per-meta-step collective bytes at Q, 2Q, 4Q: masked-psum select
+    stays FLAT (ratio ≤ 1.05); the naive dynamic-index counterfactual
+    on the same sharded pool grows ∝ Q."""
+    A, S = surf.make_problem(CFG, seed=0)
+    qs = (META_Q, 2 * META_Q, 4 * META_Q)
+    sharded, naive = [], []
+    kinds = None
+    for q in qs:
+        b, kinds = q_scan_collective_bytes(CFG, S, mesh, q, steps=4,
+                                           eval_q=EVAL_Q)
+        sharded.append(b)
+        nb, _ = q_scan_collective_bytes(CFG, S, mesh, q, steps=4,
+                                        eval_q=EVAL_Q, naive_select=True)
+        naive.append(nb)
+    growth = sharded[-1] / sharded[0] if sharded[0] else float("inf")
+    assert growth <= 1.05, \
+        f"Q-sharded collective bytes grew with Q: {sharded} (x{growth:.3f})"
+    naive_growth = naive[-1] / naive[0] if naive[0] else 0.0
+    assert naive_growth > growth, \
+        f"naive counterfactual should grow with Q: {naive}"
+    rec = {"engine_variant": "qsharded-scan-bytes",
+           "pool_sizes": list(qs),
+           "collective_bytes_per_meta_step": sharded,
+           "bytes_growth_qx4": round(growth, 4),
+           "naive_select_bytes_per_meta_step": naive,
+           "naive_bytes_growth_qx4": round(naive_growth, 4),
+           "collectives_by_kind_at_q4x": kinds}
+    print(f"qsharded bytes/step over Q={list(qs)}: {sharded} "
+          f"(x{growth:.3f}); naive {naive} (x{naive_growth:.2f})")
+    return rec
+
+
+def main():
+    ndev = host_device_count()
+    assert ndev >= AGENT_SHARDS, \
+        f"qsharded bench needs {AGENT_SHARDS} devices, got {ndev} " \
+        f"(run via scripts/bench.sh qsharded)"
+    mesh = make_surf_mesh(1, AGENT_SHARDS, n_agents=CFG.n_agents)
+    print(f"qsharded bench: {ndev} devices, mesh (agent={AGENT_SHARDS}), "
+          f"n={CFG.n_agents} L={CFG.n_layers} Q={META_Q}")
+    out = {"devices": ndev,
+           "device_count": jax.device_count(),
+           "backend": jax.default_backend(),
+           "simulated_devices": jax.default_backend() == "cpu",
+           "mesh_shape": {"agent": AGENT_SHARDS},
+           "mesh_fingerprint": mesh_fingerprint(mesh),
+           "engine": "repro.engine.scan+q_sharded",
+           "config": dataclasses.asdict(CFG),
+           "qsharded_train": bench_qsharded_train(mesh),
+           "q_bytes": bench_q_bytes(mesh)}
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "BENCH_qsharded.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -37,6 +37,15 @@
 #                              # single-cohort reference solve; stamps
 #                              # federations/s + p50/p99 latency +
 #                              # pad-waste) -> bench_out/BENCH_serve.json
+#   scripts/bench.sh qsharded  # Q-sharded train engine on an 8-way
+#                              # SIMULATED mesh: trace-count==1 with
+#                              # in-scan Q-sharded snapshot evals,
+#                              # allclose parity vs the replicated run,
+#                              # and per-meta-step collective bytes FLAT
+#                              # over Q -> 2Q -> 4Q while the naive
+#                              # dynamic-index counterfactual grows ∝ Q
+#                              # (all ASSERTED) ->
+#                              # bench_out/BENCH_qsharded.json
 #   scripts/bench.sh earlyexit # convergence-adaptive depth: sweep
 #                              # exit_threshold through the early-exit
 #                              # while-loop solver (thr=0 parity with the
@@ -70,9 +79,15 @@ case "${1:-scan}" in
     # compute and must not inherit an 8-way host-device split
     exec python -m benchmarks.kernels_bench ;;
   serve)
-    # no simulated-device XLA flags: serving times single-device request
-    # batching and must not inherit an 8-way host-device split
+    # 8 simulated host devices so the sharded+async rows can place the
+    # request axis over a real mesh; the JSON stamps device_count and
+    # the simulated-device caveat (shards share one physical CPU, so
+    # sharded rows track placement overhead, not real scaling)
+    export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
     exec python -m benchmarks.serve_bench ;;
+  qsharded)
+    export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+    exec python -m benchmarks.qsharded_bench ;;
   earlyexit)
     # no simulated-device XLA flags: the early-exit sweep runs the
     # single-device solve + serve paths
@@ -80,6 +95,6 @@ case "${1:-scan}" in
   all)
     exec python -m benchmarks.run ;;
   *)
-    echo "usage: scripts/bench.sh [scan|topology|engine|mesh2d|tasks|kernels|serve|earlyexit|all]" >&2
+    echo "usage: scripts/bench.sh [scan|topology|engine|mesh2d|tasks|kernels|serve|qsharded|earlyexit|all]" >&2
     exit 2 ;;
 esac

@@ -133,7 +133,7 @@ def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
                init="dgd", engine="scan", mix_fn=None, mix=None, mesh=None,
                scenario=None, schedule=None, seeds=None, eval_every=0,
                eval_datasets=None, checkpoint_every=0, checkpoint_dir=None,
-               task=None):
+               task=None, q_sharded=False):
     """Meta-train U-DGD on the config's topology. ``scenario`` (a name
     from ``SCENARIOS``) or ``schedule`` (an explicit
     ``TopologySchedule``) trains under TIME-VARYING graphs — the
@@ -179,7 +179,13 @@ def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
     ``classification_task(cfg)`` / ``sparse_recovery_task(...)``); None
     resolves ``cfg.task`` (legacy classification by default). Every
     engine path — dense/ring/halo mixers, schedules, seed batching —
-    is task-generic."""
+    is task-generic.
+
+    ``q_sharded``: shard the meta-training pool's Q axis over the mesh's
+    agent-role axis (memory-capacity mode for big pools — each device
+    holds Q/P datasets; dense/pallas mixing only, see
+    ``engine.scan.make_train_scan``). Requires ``mesh``; with ``seeds``
+    the mesh must be 2-D ('seed', 'agent')."""
     if engine not in ("scan", "python"):
         raise ValueError(f"engine must be 'scan' or 'python', got {engine!r}")
     if mesh is not None and engine != "scan":
@@ -244,7 +250,7 @@ def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
             eval_every=eval_every, eval_datasets=eval_datasets,
             S_eval_stack=S_stack if eval_every else None,
             checkpoint_every=checkpoint_every,
-            checkpoint_dir=checkpoint_dir, task=task)
+            checkpoint_dir=checkpoint_dir, task=task, q_sharded=q_sharded)
         return (*out, S_stack)
     _, S = make_problem(cfg, seed)
     if schedule is None:
@@ -257,9 +263,12 @@ def train_surf(cfg: SURFConfig, meta_datasets, steps, seed=0,
         kw = {"mix_fn": mix_fn, "mesh": mesh, "eval_every": eval_every,
               "eval_datasets": eval_datasets,
               "checkpoint_every": checkpoint_every,
-              "checkpoint_dir": checkpoint_dir}
+              "checkpoint_dir": checkpoint_dir, "q_sharded": q_sharded}
         if eval_every:
             kw["S_eval"] = S
+    elif q_sharded:
+        raise ValueError("q_sharded=True requires engine='scan' (the "
+                         "step-wise python driver is unsharded)")
     else:
         kw = {"mix_fn": mix_fn}
     driver = TR.train_scan if engine == "scan" else TR.train
@@ -459,17 +468,25 @@ def _batched_async(cfg: SURFConfig, activation, task=None):
 
 
 def evaluate_async(cfg: SURFConfig, state, S, datasets, n_async, seed=0,
-                   activation="relu", seeds=None, task=None):
+                   activation="relu", seeds=None, task=None, mesh=None):
     """Asynchronous communications (paper Fig. 8) over all downstream
     datasets in one vmapped computation, each dataset with its own mask.
 
     ``seeds``: optional batch of evaluation seeds — one outer-vmapped
     computation over (keys, masks); each seed draws its own per-dataset
     async masks and every returned metric gains a leading (n_seeds,)
-    axis, row i matching ``evaluate_async(..., seed=seeds[i])``."""
+    axis, row i matching ``evaluate_async(..., seed=seeds[i])``.
+    ``mesh`` places the stacked pool with its Q axis sharded over the
+    agent-role axis (``sharding.surf_rules.stacked_q_sharding``), exactly
+    like ``evaluate_surf`` — the inner dataset vmap partitions over Q."""
     TR._check_static_s(S, "evaluate_async")
     stacked = stack_meta_datasets(datasets)
     n_q = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    if mesh is not None:
+        from repro.sharding.surf_rules import stacked_q_sharding
+        q_sh = stacked_q_sharding(mesh, n_q)
+        stacked = jax.device_put(
+            stacked, jax.tree_util.tree_map(lambda _: q_sh, stacked))
     seed_arr, single = _seed_batch(seed, seeds)
     masks = jnp.stack([jnp.asarray(async_masks(cfg, n_q, n_async,
                                                seed=int(s)))

@@ -88,7 +88,7 @@ def _check_schedule_mix(S, mix_fn):
 
 def _scan_run(meta_step_s, snap_fn, eval_every, n_layers, state, stacked,
               key, steps, S, sched, eval_stacked, S_eval,
-              ckpt_every=0, ckpt_cb=None):
+              ckpt_every=0, ckpt_cb=None, select_fn=None):
     """The shared scan over meta-steps: every per-step selection (batch,
     RNG, S_t, snapshot cadence) indexes the CARRIED ``state.step``, not a
     scan-local counter — running ``k`` then ``steps−k`` meta-steps (with a
@@ -99,15 +99,25 @@ def _scan_run(meta_step_s, snap_fn, eval_every, n_layers, state, stacked,
     ``io_callback`` host save, ``checkpoint.io.state_save_callback``)
     with the just-updated state after every ``ckpt_every``-th meta-step —
     the cadence is on the ABSOLUTE carried step, so a resumed run keeps
-    checkpointing on the same grid as the uninterrupted one."""
+    checkpointing on the same grid as the uninterrupted one.
+
+    ``select_fn`` overrides the per-step dataset select: a Q-SHARDED pool
+    passes ``surf_rules.make_q_select`` (owner-masked psum — one
+    dataset's bytes of collective per step, independent of Q) instead of
+    the default ``dynamic_index_in_dim`` (which would make the
+    partitioner all-gather the whole sharded pool every step). The
+    select is bit-equal to the replicated index either way."""
     from jax.experimental import io_callback
     n_q = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    if select_fn is None:
+        def select_fn(pool, t):
+            return jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, t % n_q, 0, keepdims=False), pool)
 
     def body(st, _):
         t = st.step
-        batch = jax.tree_util.tree_map(
-            lambda a: jax.lax.dynamic_index_in_dim(
-                a, t % n_q, 0, keepdims=False), stacked)
+        batch = select_fn(stacked, t)
         S_t = (jax.lax.dynamic_index_in_dim(S, t % S.shape[0], 0,
                                             keepdims=False)
                if sched else S)
@@ -135,7 +145,7 @@ def make_train_scan(cfg: SURFConfig, S, *, constrained=True,
                     activation="relu", star=None, mix_fn=None, mesh=None,
                     stacked=None, eval_every=0, eval_stacked=None,
                     S_eval=None, checkpoint_every=0, checkpoint_dir=None,
-                    task=None):
+                    task=None, q_sharded=False):
     """Build the device-resident meta-training engine: one jitted
     ``lax.scan`` over meta-steps.
 
@@ -180,6 +190,19 @@ def make_train_scan(cfg: SURFConfig, S, *, constrained=True,
     long runs checkpoint inside the single compiled scan, and
     ``engine.resume.resume_train_scan`` restores from them bit-exactly.
     The cadence indexes the ABSOLUTE carried step.
+
+    ``mesh`` + ``eval_every`` additionally Q-SHARDS the snapshot pool
+    (dim 0 over the agent-role axis): the dense vmapped snapshot eval
+    partitions over Q inside the same scan — data-parallel snapshots
+    with one small mean-reduce, degrading to replication when Q doesn't
+    divide. ``q_sharded=True`` Q-shards the TRAIN pool itself (the
+    memory-capacity mode: each device holds Q/P datasets) and swaps the
+    per-step select for the owner-masked psum of
+    ``surf_rules.make_q_select`` so collective bytes stay independent of
+    Q; it requires ``mesh`` + ``stacked`` and the dense or S-as-argument
+    (``takes_S``) mixing path — the ring/halo mixers need the pool's
+    AGENT axis sharded, which conflicts with sharding Q over the same
+    devices.
     """
     _reject_seed_batched_mix(mix_fn, "make_train_scan")
     sched = isinstance(S, TopologySchedule)
@@ -205,6 +228,38 @@ def make_train_scan(cfg: SURFConfig, S, *, constrained=True,
                     "robustness protocols evaluate on the unperturbed "
                     "graph)")
             S_eval = S
+    n_q = (jax.tree_util.tree_leaves(stacked)[0].shape[0]
+           if stacked is not None else None)
+    n_eval_q = (jax.tree_util.tree_leaves(eval_stacked)[0].shape[0]
+                if eval_every and eval_stacked is not None else None)
+    select_fn = None
+    if q_sharded:
+        from repro.sharding.surf_rules import (axis_for_role, check_divides,
+                                               make_q_select, q_select_axis,
+                                               _axis_size)
+        if mesh is None or stacked is None:
+            raise ValueError(
+                "q_sharded=True needs mesh AND stacked (the Q-sharded "
+                "placement and the owner-masked select are built from the "
+                "mesh's agent-role axis and the pool's Q size)")
+        if mix_fn is not None and not getattr(mix_fn, "takes_S", False):
+            raise ValueError(
+                "q_sharded=True requires the dense mixing path or an "
+                "S-as-argument (takes_S) mixer: ring/halo mixers shard the "
+                "pool's AGENT axis over the same devices the Q axis would "
+                "shard over — one axis, one role")
+        agent_ax = axis_for_role(mesh, "agent")
+        size = _axis_size(mesh, agent_ax)
+        if size > 1:
+            check_divides(
+                n_q, size, "q_sharded train pool", "Q",
+                "the Q (meta-dataset pool) axis shards over the mesh's "
+                "agent-role axis")
+        q_ax = q_select_axis(mesh, n_q)
+        if q_ax is not None:
+            select_fn = make_q_select(mesh, q_ax)
+        # q_ax None (1-device axis): placement degrades to replication and
+        # the default dynamic-index select is already collective-free
     variant = (("train", constrained) + ((S.cache_tag,) if sched else ())
                + (("snap", int(eval_every)) if eval_every else ())
                # the save directory is baked into the callback closure, so
@@ -219,6 +274,11 @@ def make_train_scan(cfg: SURFConfig, S, *, constrained=True,
         cache_key = cache_key + (
             jax.tree_util.tree_structure(stacked),
             stacked_sharded_flags(stacked, cfg.n_agents))
+    if cache_key is not None and mesh is not None:
+        # Q placements bake pool sizes into in_shardings (divisibility is
+        # decided per-Q) and q_sharded swaps the select — key on both
+        cache_key = cache_key + (("qsh", bool(q_sharded), n_q),
+                                 ("evq", n_eval_q))
     S_arr = S.S if sched else S
     ev_arr = eval_stacked if eval_every else {}
     S_ev_arr = S_eval if eval_every else {}
@@ -242,8 +302,10 @@ def make_train_scan(cfg: SURFConfig, S, *, constrained=True,
     jit_kwargs = {}
     if mesh is not None:
         from repro.sharding.surf_rules import train_scan_shardings
-        in_sh, out_sh = train_scan_shardings(mesh, cfg.n_agents,
-                                             stacked=stacked)
+        in_sh, out_sh = train_scan_shardings(
+            mesh, cfg.n_agents, stacked=stacked,
+            eval_stacked=(eval_stacked if eval_every else None),
+            n_eval_q=n_eval_q, q_sharded=q_sharded, n_q=n_q)
         # dynamic-arg order is (state, stacked, key, S, eval_stacked,
         # S_eval) — ``steps`` is static and takes no sharding
         jit_kwargs = {"in_shardings": in_sh, "out_shardings": out_sh}
@@ -254,7 +316,8 @@ def make_train_scan(cfg: SURFConfig, S, *, constrained=True,
         return _scan_run(meta_step_s, snap_fn, eval_every, cfg.n_layers,
                          state, stacked, key, steps, S, sched,
                          eval_stacked, S_eval,
-                         ckpt_every=int(checkpoint_every), ckpt_cb=ckpt_cb)
+                         ckpt_every=int(checkpoint_every), ckpt_cb=ckpt_cb,
+                         select_fn=select_fn)
 
     if cache_key is not None:
         _ENGINE_CACHE[cache_key] = run_s
@@ -289,7 +352,7 @@ def train_scan(cfg: SURFConfig, S, meta_datasets, steps, key,
                constrained=True, activation="relu", log_every=0, init="dgd",
                mix_fn=None, mesh=None, eval_every=0, eval_datasets=None,
                S_eval=None, checkpoint_every=0, checkpoint_dir=None,
-               task=None):
+               task=None, q_sharded=False):
     """Run Algorithm 1 as ONE compiled scan over ``steps`` meta-iterations,
     cycling the meta-training datasets on device. Returns (state, history)
     — or (state, history, snapshots) when ``eval_every`` > 0 — with
@@ -299,7 +362,9 @@ def train_scan(cfg: SURFConfig, S, meta_datasets, steps, key,
     ``S`` may be a ``TopologySchedule`` for time-varying graphs (combine
     with a scheduled halo mixer to keep the ppermute savings);
     ``checkpoint_every``/``checkpoint_dir`` checkpoint the carried state
-    at a cadence WITHOUT leaving the scan."""
+    at a cadence WITHOUT leaving the scan; ``q_sharded=True`` shards the
+    TRAIN pool's Q axis over the mesh's agent-role axis (see
+    ``make_train_scan``)."""
     state = init_state(key, cfg, init=init, task=task)
     stacked = stack_meta_datasets(meta_datasets)
     ev_stacked = (stack_meta_datasets(eval_datasets) if eval_every
@@ -309,7 +374,8 @@ def train_scan(cfg: SURFConfig, S, meta_datasets, steps, key,
                           stacked=stacked, eval_every=eval_every,
                           eval_stacked=ev_stacked, S_eval=S_eval,
                           checkpoint_every=checkpoint_every,
-                          checkpoint_dir=checkpoint_dir, task=task)
+                          checkpoint_dir=checkpoint_dir, task=task,
+                          q_sharded=q_sharded)
     state, metrics, snaps = run(state, stacked, key, int(steps))
     hist = _decimate_history(metrics, int(steps), log_every)
     if eval_every:

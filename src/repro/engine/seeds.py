@@ -151,7 +151,7 @@ def make_seed_train_scan(cfg: SURFConfig, S_stack, *, constrained=True,
                          mix_fn=None, stacked=None, eval_every=0,
                          eval_stacked=None, S_eval_stack=None,
                          checkpoint_every=0, checkpoint_dir=None,
-                         task=None):
+                         task=None, q_sharded=False):
     """Build the seed-batched engine:
     ``run(states, stacked, keys, steps) -> (states, metrics, snaps)``.
 
@@ -179,7 +179,18 @@ def make_seed_train_scan(cfg: SURFConfig, S_stack, *, constrained=True,
     ``ckpt_<step>/seeds`` payload holding every lane (seeds advance in
     lockstep, so one scalar step names them all). The cadence indexes
     the ABSOLUTE carried step; ``engine.resume.resume_train_scan_seeds``
-    restores bit-exactly."""
+    restores bit-exactly.
+
+    On a 2-D mesh + ``eval_every``, the SHARED snapshot pool Q-shards
+    dim 0 over 'agent' (replicated over 'seed') — the seed-vmapped
+    snapshot eval partitions over Q inside each seed lane.
+    ``q_sharded=True`` Q-shards the shared TRAIN pool the same way
+    (memory-capacity mode, dense/takes_S mixing only) and swaps the
+    per-step select for ``surf_rules.make_q_select``'s owner-masked psum
+    so collective bytes stay independent of Q; it REQUIRES a 2-D
+    ('seed', 'agent') mesh — on a 1-D mesh the seed lanes own the single
+    sharded axis and a Q-sharded pool would gather across lanes every
+    step."""
     S_stack = jnp.asarray(S_stack, jnp.float32)
     if S_stack.ndim not in (3, 4):
         raise ValueError("S_stack must be (n_seeds, n, n) or "
@@ -218,6 +229,42 @@ def make_seed_train_scan(cfg: SURFConfig, S_stack, *, constrained=True,
         raise ValueError("checkpoint_every > 0 needs checkpoint_dir (the "
                          "directory the in-scan ckpt_<step> payloads are "
                          "written to)")
+    n_q = (jax.tree_util.tree_leaves(stacked)[0].shape[0]
+           if stacked is not None else None)
+    n_eval_q = (jax.tree_util.tree_leaves(eval_stacked)[0].shape[0]
+                if eval_every and eval_stacked is not None else None)
+    select_fn = None
+    if q_sharded:
+        from repro.sharding.surf_rules import (_axis_size, axis_for_role,
+                                               check_divides, make_q_select,
+                                               q_select_axis)
+        if mesh is None or stacked is None:
+            raise ValueError(
+                "q_sharded=True needs mesh AND stacked (the Q-sharded "
+                "placement and the owner-masked select are built from the "
+                "mesh's 'agent' axis and the pool's Q size)")
+        if mix_fn is not None and getattr(mix_fn, "seed_batched", False):
+            raise ValueError(
+                "q_sharded=True requires the dense mixing path or an "
+                "S-as-argument (takes_S) mixer: a seed-batched halo mixer "
+                "shards the pool's AGENT axis over the same 'agent' axis "
+                "the Q axis would shard over — one axis, one role")
+        seed_ax = axis_for_role(mesh, "seed")
+        agent_ax = axis_for_role(mesh, "agent")
+        if (agent_ax is None or agent_ax == seed_ax
+                or _axis_size(mesh, agent_ax) <= 1):
+            raise ValueError(
+                "q_sharded=True in the seed-batched engine needs a 2-D "
+                "('seed', 'agent') mesh with agent size > 1 "
+                "(launch.mesh.make_surf_mesh) — on a 1-D mesh the seed "
+                "lanes own the single sharded axis and a Q-sharded pool "
+                "would gather across lanes every step; got mesh axes "
+                f"{mesh.axis_names}")
+        check_divides(
+            n_q, _axis_size(mesh, agent_ax), "q_sharded train pool", "Q",
+            "the Q (meta-dataset pool) axis shards over the mesh's "
+            "'agent' axis")
+        select_fn = make_q_select(mesh, q_select_axis(mesh, n_q, agent_ax))
     variant = ("train-seeds", constrained, n_seeds, sched,
                int(eval_every)) + (
                    # save directory baked into the callback closure
@@ -230,6 +277,11 @@ def make_seed_train_scan(cfg: SURFConfig, S_stack, *, constrained=True,
         cache_key = cache_key + (
             jax.tree_util.tree_structure(stacked),
             stacked_sharded_flags(stacked, cfg.n_agents))
+    if cache_key is not None and mesh is not None:
+        # Q placements bake pool sizes into in_shardings (divisibility is
+        # decided per-Q) and q_sharded swaps the select — key on both
+        cache_key = cache_key + (("qsh", bool(q_sharded), n_q),
+                                 ("evq", n_eval_q))
     ev_arr = eval_stacked if eval_every else {}
     S_ev_arr = S_eval_stack if eval_every else {}
 
@@ -252,9 +304,10 @@ def make_seed_train_scan(cfg: SURFConfig, S_stack, *, constrained=True,
     jit_kwargs = {}
     if mesh is not None:
         from repro.sharding.surf_rules import seed_scan_shardings
-        in_sh, out_sh = seed_scan_shardings(mesh, n_seeds,
-                                            n_agents=cfg.n_agents,
-                                            stacked=stacked)
+        in_sh, out_sh = seed_scan_shardings(
+            mesh, n_seeds, n_agents=cfg.n_agents, stacked=stacked,
+            eval_stacked=(eval_stacked if eval_every else None),
+            n_eval_q=n_eval_q, q_sharded=q_sharded, n_q=n_q)
         jit_kwargs = {"in_shardings": in_sh, "out_shardings": out_sh}
     # only a SEED-BATCHED mixer carries per-lane coefficient blocks for
     # the vmap; takes_S mixers (Pallas dense path) receive each lane's
@@ -280,9 +333,12 @@ def make_seed_train_scan(cfg: SURFConfig, S_stack, *, constrained=True,
             # only executes at the cadence instead of being vmapped into
             # an every-step select.
             t = sts.step[0]
-            batch = jax.tree_util.tree_map(
-                lambda a: jax.lax.dynamic_index_in_dim(
-                    a, t % n_q, 0, keepdims=False), stacked)
+            if select_fn is not None:
+                batch = select_fn(stacked, t)
+            else:
+                batch = jax.tree_util.tree_map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, t % n_q, 0, keepdims=False), stacked)
             S_t = (jax.lax.dynamic_index_in_dim(
                 S_stack, t % S_stack.shape[1], 1, keepdims=False)
                 if sched else S_stack)
@@ -341,7 +397,8 @@ def train_scan_seeds(cfg: SURFConfig, S_stack, meta_datasets, steps, seeds,
                      constrained=True, activation="relu", log_every=0,
                      init="dgd", star=None, mesh=None, mix_fn=None,
                      eval_every=0, eval_datasets=None, S_eval_stack=None,
-                     checkpoint_every=0, checkpoint_dir=None, task=None):
+                     checkpoint_every=0, checkpoint_dir=None, task=None,
+                     q_sharded=False):
     """Seed-batched Algorithm 1: ONE compiled scan trains every seed in
     ``seeds`` (per-seed init/RNG/topology), returning (states, history) —
     or (states, history, snapshots) when ``eval_every`` > 0 — where
@@ -368,7 +425,8 @@ def train_scan_seeds(cfg: SURFConfig, S_stack, meta_datasets, steps, seeds,
                                eval_stacked=ev_stacked,
                                S_eval_stack=S_eval_stack,
                                checkpoint_every=checkpoint_every,
-                               checkpoint_dir=checkpoint_dir, task=task)
+                               checkpoint_dir=checkpoint_dir, task=task,
+                               q_sharded=q_sharded)
     states, metrics, snaps = run(states, stacked, keys, int(steps))
     hist = _decimate_history(metrics, int(steps), log_every)
     if eval_every:

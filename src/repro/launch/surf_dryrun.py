@@ -118,6 +118,66 @@ def seed_meta_step_collective_bytes(cfg, S_stack, mesh, mix_fn=None):
     return parsed["collective_bytes"], parsed["collectives"]
 
 
+def q_scan_collective_bytes(cfg, S, mesh, n_q, steps=4, eval_q=0,
+                            q_sharded=True, naive_select=False):
+    """Per-META-STEP collective traffic of the Q-SHARDED scan engine:
+    lower the REAL engine body (``engine.scan._scan_run`` — the same
+    select/meta-step/snapshot composition ``make_train_scan`` jits) with
+    the train pool's Q axis sharded (``q_sharded=True``) or replicated
+    (the baseline), plus an optionally Q-sharded in-scan snapshot pool
+    (``eval_q`` > 0 snapshots every 2 steps), and parse the post-SPMD
+    HLO.  Returns (collective bytes per meta-step, per-kind dict).
+
+    THE claim ``make bench-qsharded`` asserts: with the owner-masked
+    psum select, bytes are INDEPENDENT of ``n_q`` (one dataset's bytes
+    per step), where a naive dynamic index on the sharded pool would
+    all-gather the whole pool (bytes ∝ Q).  ``naive_select=True`` keeps
+    the Q-sharded pool placement but drops back to the naive
+    ``dynamic_index_in_dim`` select — the counterfactual the bench plots
+    to show the growth the masked select removes."""
+    from repro.engine.core import _meta_step_core
+    from repro.engine.scan import _scan_run
+    from repro.engine.snapshots import make_snapshot_fn
+    from repro.sharding.surf_rules import (make_q_select, q_select_axis,
+                                           train_scan_shardings)
+    steps = int(steps)
+    batch_spec = surf_batch_specs(cfg)
+    pool_spec = {k: jax.ShapeDtypeStruct((int(n_q),) + v.shape, v.dtype)
+                 for k, v in batch_spec.items()}
+    eval_every = 2 if eval_q else 0
+    eval_spec = ({k: jax.ShapeDtypeStruct((int(eval_q),) + v.shape,
+                                          v.dtype)
+                  for k, v in batch_spec.items()} if eval_q else {})
+    meta_step_s, _ = _meta_step_core(cfg, True, "relu", None, None, None)
+    snap_fn = make_snapshot_fn(cfg, "relu", None) if eval_q else None
+    select_fn = None
+    if q_sharded and not naive_select:
+        q_ax = q_select_axis(mesh, int(n_q))
+        if q_ax is not None:
+            select_fn = make_q_select(mesh, q_ax)
+
+    def run(state, stacked, key, S, ev, S_ev):
+        return _scan_run(meta_step_s, snap_fn, eval_every, cfg.n_layers,
+                         state, stacked, key, steps, S, False, ev, S_ev,
+                         select_fn=select_fn)
+
+    in_sh, out_sh = train_scan_shardings(
+        mesh, cfg.n_agents, stacked=pool_spec,
+        eval_stacked=(eval_spec if eval_q else None),
+        n_eval_q=(int(eval_q) if eval_q else None),
+        q_sharded=q_sharded, n_q=int(n_q))
+    fn = jax.jit(run, in_shardings=in_sh, out_shardings=out_sh)
+    state_spec = jax.eval_shape(lambda k: TR.init_state(k, cfg),
+                                jax.random.PRNGKey(0))
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    S_spec = jax.ShapeDtypeStruct((cfg.n_agents, cfg.n_agents),
+                                  jnp.float32)
+    txt = fn.lower(state_spec, pool_spec, key_spec, S_spec, eval_spec,
+                   S_spec if eval_q else {}).compile().as_text()
+    parsed = hlo_cost.summarize(txt)
+    return parsed["collective_bytes"] / steps, parsed["collectives"]
+
+
 def lower_surf_step(multi_pod: bool = False, cfg=DRYRUN, ring: bool = False,
                     infer: bool = False, mix: str | None = None):
     """``infer=True`` lowers the deployed unrolled optimizer (forward only,

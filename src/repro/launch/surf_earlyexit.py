@@ -208,8 +208,12 @@ def main(argv=None, parser=None):
           f"request_flops_saved={ssum['request_flops_saved']:.2f} "
           f"batch_flops_saved={ssum['batch_flops_saved']:.2f}")
 
+    from repro.sharding.surf_rules import mesh_fingerprint
     out = {
         "backend": backend, "interpret": bool(interpret),
+        "device_count": jax.device_count(),
+        "simulated_devices": backend == "cpu",
+        "mesh_fingerprint": mesh_fingerprint(None),
         "timing_caveat": ("Pallas in interpret mode on CPU: absolute "
                           "times are NOT accelerator perf" if interpret
                           and args.mix == "pallas" else

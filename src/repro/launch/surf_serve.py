@@ -19,6 +19,13 @@ Backend + resolved Pallas interpret mode are stamped into the JSON like
 ``BENCH_kernels.json`` — on CPU the kernel path is interpret-mode, so
 absolute throughput is a correctness-path number, not accelerator perf.
 
+A ``sharded_async`` section then replays a trace prefix per shard count
+through a MESH-SHARDED server (request axis placed over 'agent'-axis
+devices, ``serve.request_shardings``) driven by ``serve.AsyncDriver`` —
+federations/s vs shards + tick utilization + parity spot-checks, with
+``jax.device_count()``/mesh fingerprints stamped and the simulated-
+device caveat made explicit (forced host CPU devices share one chip).
+
   PYTHONPATH=src python -m repro.launch.surf_serve --requests 220
 """
 from __future__ import annotations
@@ -54,6 +61,9 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--task", choices=("classification", "sparse"),
                     default="classification")
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--sharded-requests", type=int, default=64,
+                    help="trace prefix replayed per sharded+async row "
+                         "(0 disables the sharded section)")
     ap.add_argument("--steps", type=int, default=40,
                     help="meta-training steps before serving")
     ap.add_argument("--seed", type=int, default=0)
@@ -86,6 +96,69 @@ def synth_trace(cfg, task, sizes, rows, dist, n_requests, seed):
         ds = task.synth_datasets(cfg_r, 1, seed=20_000 + i)[0]
         out.append({"cfg": cfg_r, "S": np.asarray(S), "ds": ds,
                     "seed": i % 16})
+    return out
+
+
+def bench_sharded_async(cfg, state, trace, args, sizes, rows, tol):
+    """The sharded+async rows: replay a trace prefix through a
+    mesh-sharded server (request axis over 'agent'-axis devices) driven
+    by ``AsyncDriver``, one row per shard count — federations/s vs
+    shards, tick utilization, and a per-row parity spot-check vs the
+    solo reference solve.  On forced-host CPU devices the shards share
+    one physical CPU, so rows track PLACEMENT overhead (zero-collective
+    claim), not real scaling — the caveat is stamped."""
+    from repro.launch.mesh import make_surf_mesh
+    from repro.serve import AsyncDriver
+    from repro.sharding.surf_rules import mesh_fingerprint
+    ndev = jax.device_count()
+    shard_counts = [s for s in (1, 2, 4, 8)
+                    if s <= ndev and ndev % s == 0
+                    and args.max_batch % s == 0]
+    sub = trace[:args.sharded_requests]
+    out = []
+    for shards in shard_counts:
+        mesh = make_surf_mesh(1, shards) if shards > 1 else None
+        server = FederationServer(
+            cfg, state.theta, mix=args.mix, max_batch=args.max_batch,
+            buckets=BucketSpec(agent_sizes=(8, 16, 32),
+                               row_sizes=(4, 8, 16)),
+            mesh=mesh)
+        server.warm((n, t) for n in sizes for t in rows)
+        driver = AsyncDriver(server)
+        with driver:
+            t0 = time.perf_counter()
+            futs = [driver.submit(req["S"], req["ds"], seed=req["seed"])
+                    for req in sub]
+            driver.wait(futs, timeout_s=300.0)
+            wall = time.perf_counter() - t0
+        max_d = 0.0
+        for req, fut in zip(sub[:8], futs[:8]):
+            ref = surf.solve_federation(req["cfg"], state, req["S"],
+                                        req["ds"], seed=req["seed"])
+            res = fut.result()
+            max_d = max(max_d,
+                        abs(float(res["final_loss"] - ref["final_loss"])),
+                        abs(float(res["final_acc"] - ref["final_acc"])))
+        assert max_d < tol, (
+            f"sharded serve (shards={shards}) diverged from reference: "
+            f"{max_d:.2e} (tol {tol})")
+        stats = driver.stats()
+        summary = server.metrics.summary()
+        row = {"shards": shards,
+               "mesh_fingerprint": mesh_fingerprint(mesh),
+               "requests": len(sub),
+               "federations_per_sec": summary["federations_per_sec"],
+               "async_wall_s": round(wall, 3),
+               "async_federations_per_sec": (len(sub) / wall
+                                             if wall > 0 else 0.0),
+               "tick_utilization": round(stats["tick_utilization"], 3),
+               "ticks": stats["ticks"],
+               "parity_spot_max_delta": max_d,
+               "bucket_cache": server.cache_stats()}
+        out.append(row)
+        print(f"sharded+async shards={shards}: "
+              f"{row['async_federations_per_sec']:.1f} federations/s "
+              f"util={row['tick_utilization']:.2f} parity={max_d:.2e}")
     return out
 
 
@@ -166,8 +239,19 @@ def main(argv=None, parser=None):
           f"occupancy={summary['occupancy']:.2f} "
           f"pad_waste={summary['pad_waste']:.2f}")
 
+    sharded_rows = (bench_sharded_async(cfg, state, trace, args, sizes,
+                                        rows, tol)
+                    if args.sharded_requests > 0 else [])
+
     out = {
         "backend": backend, "interpret": bool(interpret),
+        "device_count": jax.device_count(),
+        "simulated_devices": backend == "cpu",
+        "sharding_caveat": ("forced host-platform CPU devices share one "
+                            "physical CPU: sharded rows track placement "
+                            "overhead (zero-collective claim), not real "
+                            "scaling" if backend == "cpu" else
+                            "real accelerator devices"),
         "timing_caveat": ("Pallas in interpret mode on CPU: absolute "
                           "times are NOT accelerator perf" if interpret
                           and args.mix == "pallas" else
@@ -186,6 +270,7 @@ def main(argv=None, parser=None):
         "replay_wall_s": round(replay_wall, 3),
         "serve": summary,
         "bucket_cache": server.cache_stats(),
+        "sharded_async": sharded_rows,
     }
     out_dir = args.out or os.environ.get("BENCH_OUT", "bench_out")
     os.makedirs(out_dir, exist_ok=True)

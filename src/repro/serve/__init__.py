@@ -14,18 +14,23 @@ zero at request rate.
     server.tick()                        # or drain()
     fut.result()["final_acc"]
 
-Layers: ``solver`` (the jitted request-vmapped masked forward),
-``buckets`` (shape bucketing + provably-inert padding), ``queue``
-(continuous batching + futures), ``metrics`` (throughput/latency/
-pad-waste telemetry).  The CLI driver is ``repro.launch.surf_serve``.
+Layers: ``solver`` (the jitted request-vmapped masked forward;
+``mesh=`` shards the request axis over devices), ``buckets`` (shape
+bucketing + provably-inert padding), ``queue`` (continuous batching +
+futures, deadline-aware admission), ``driver`` (``AsyncDriver`` — a
+background tick thread so ``submit`` returns immediately), ``metrics``
+(throughput/latency/pad-waste/cache telemetry).  The CLI driver is
+``repro.launch.surf_serve``.
 """
 from repro.serve.buckets import Bucket, BucketSpec, pad_cohort, pad_probe
+from repro.serve.driver import AsyncDriver
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queue import FederationServer, ServeFuture
 from repro.serve.solver import (SERVE_MIXES, make_bucket_solver,
-                                resolve_serve_mix, serve_cache_key)
+                                request_shardings, resolve_serve_mix,
+                                serve_cache_key)
 
 __all__ = ["Bucket", "BucketSpec", "pad_cohort", "pad_probe",
-           "ServeMetrics", "FederationServer", "ServeFuture",
-           "SERVE_MIXES", "make_bucket_solver", "resolve_serve_mix",
-           "serve_cache_key"]
+           "AsyncDriver", "ServeMetrics", "FederationServer",
+           "ServeFuture", "SERVE_MIXES", "make_bucket_solver",
+           "request_shardings", "resolve_serve_mix", "serve_cache_key"]

@@ -15,6 +15,9 @@ per solver tick; ``summary()`` condenses them into the numbers
   * ``pad_waste`` — 1 − useful/padded compute cells, where a cell is
     one (agent × test-row) unit; waste comes from bucket rounding AND
     empty batch slots;
+  * ``bucket_cache`` — hit/miss/insert/eviction counts of the server's
+    bucket-executable LRU (``repro.cache_stats()`` format), so cache
+    churn and pad waste are diagnosable together;
   * adaptive-depth telemetry (``depth="adaptive"`` servers only) —
     ``depth_hist`` counts realized per-request depths,
     ``request_flops_saved`` = 1 − Σdepth/(N·L) is the per-request
@@ -31,7 +34,10 @@ import numpy as np
 
 
 class ServeMetrics:
-    def __init__(self, window: int = 64):
+    def __init__(self, window: int = 64, cache=None):
+        # the server's bucket-executable BoundedLRU; its live stats()
+        # ride along in every summary() snapshot
+        self.cache = cache
         self.latencies = []              # seconds, one per completed request
         self.completed = 0
         self.ticks = 0
@@ -98,6 +104,8 @@ class ServeMetrics:
                                  for (n, t), c in
                                  sorted(self.per_bucket.items())},
         }
+        if self.cache is not None:
+            out["bucket_cache"] = dict(self.cache.stats())
         if self.adaptive_ticks:
             total_depth = sum(d * c for d, c in self.depth_hist.items())
             n_req = sum(self.depth_hist.values())

@@ -15,7 +15,17 @@ position, so a uniform stream behaves exactly like head-of-queue FIFO),
 EXCEPT that any bucket whose head request has been passed over for
 ``max_wait_ticks`` ticks wins outright (oldest-waiting first) — an
 aging override that bounds every request's wait even when one popular
-shape could otherwise monopolize admission.
+shape could otherwise monopolize admission.  A request submitted with
+``deadline_ticks=`` outranks both rules once passing it over would miss
+the deadline — latency-sensitive requests cut ahead of fuller buckets.
+
+``mesh=`` shards the request axis of every bucket executable over the
+mesh's agent-role axis (``solver.request_shardings``) — serving is
+embarrassingly parallel, so a batch of B requests splits over devices
+with zero collectives.  ``serve.AsyncDriver`` wraps the server in a
+background tick thread (``submit`` returns immediately, ticks fire at a
+cadence); queue mutations are guarded by a server lock so driver ticks
+and caller submits interleave safely.
 
 ``depth="adaptive"`` serves through the batched early-exit solver
 (``solver._serve_core_adaptive``): each request additionally carries a
@@ -29,6 +39,7 @@ task) in a per-server ``BoundedLRU`` (registered as "serve-buckets" for
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import deque
 
@@ -81,6 +92,7 @@ class _Request:
     future: ServeFuture
     t_submit: float
     ticks_waited: int = 0                # ticks passed over (aging input)
+    deadline_ticks: int | None = None    # admission deadline (optional)
 
 
 class FederationServer:
@@ -95,7 +107,8 @@ class FederationServer:
     def __init__(self, cfg: SURFConfig, theta, *, activation="relu",
                  mix=None, task=None, buckets: BucketSpec = None,
                  max_batch: int = 8, max_buckets: int = 16,
-                 depth: str = "fixed", max_wait_ticks: int = 8):
+                 depth: str = "fixed", max_wait_ticks: int = 8,
+                 mesh=None):
         if cfg.topology == "star":
             raise ValueError(
                 "star-topology serving is unsupported: the server-row "
@@ -110,6 +123,13 @@ class FederationServer:
         if max_wait_ticks < 1:
             raise ValueError(f"max_wait_ticks must be >= 1, got "
                              f"{max_wait_ticks}")
+        if mesh is not None:
+            # fail at construction, not at the first tick: the request
+            # axis must split evenly over the mesh (ragged TRAFFIC is
+            # fine — masked empty slots — but the bucket batch shape
+            # is fixed)
+            from repro.serve.solver import request_shardings
+            request_shardings(mesh, int(max_batch), depth)
         self.depth = depth
         self.max_wait_ticks = int(max_wait_ticks)
         self.cfg = cfg
@@ -119,12 +139,18 @@ class FederationServer:
         self.task = resolve_task(cfg, task)
         self.buckets = buckets if buckets is not None else BucketSpec()
         self.max_batch = int(max_batch)
-        self.metrics = ServeMetrics()
+        self.mesh = mesh
         self._cache = BoundedLRU(maxsize=max_buckets, name="serve-buckets")
+        self.metrics = ServeMetrics(cache=self._cache)
         self._queue = deque()
+        # guards queue mutations only (submit's append, tick's admission
+        # sweep) so an async driver can tick while submits keep landing;
+        # the solve itself runs outside the lock
+        self._lock = threading.RLock()
 
     # ------------------------------------------------------------ admit
-    def submit(self, S, dataset, *, seed=0, q=0) -> ServeFuture:
+    def submit(self, S, dataset, *, seed=0, q=0,
+               deadline_ticks=None) -> ServeFuture:
         """Enqueue one federation: mixing matrix ``S`` (n, n) + dataset
         dict (``Xtr``/``Ytr``/``Xte``/``Yte`` in the (n, m, F)/(n, m)
         engine layout).  ``seed``/``q`` select the solve's RNG stream —
@@ -133,7 +159,17 @@ class FederationServer:
         ``q``, which is what makes serve results parity-testable
         against single-cohort evaluation.  Featurization (W0 + layer
         mini-batches) happens NOW at the true cohort shape; padding
-        follows, so it never perturbs the draw."""
+        follows, so it never perturbs the draw.
+
+        ``deadline_ticks``: optional admission deadline — the request
+        should be admitted within that many ticks of entering the
+        queue.  A tick PREFERS buckets holding a request that would
+        miss its deadline if passed over again (most-urgent first),
+        ahead of the aging and fullest-bucket rules
+        (``_select_bucket``)."""
+        if deadline_ticks is not None and int(deadline_ticks) < 1:
+            raise ValueError(f"deadline_ticks must be >= 1, got "
+                             f"{deadline_ticks}")
         S = np.asarray(S, np.float32)
         if S.ndim != 2 or S.shape[0] != S.shape[1]:
             raise ValueError(f"S must be square (n, n), got {S.shape}")
@@ -167,18 +203,29 @@ class FederationServer:
             Xp, Yp = U.probe_batch(batch, cfg_r)
             arrays = arrays + pad_probe(Xp, Yp, bucket)
         fut = ServeFuture()
-        self._queue.append(_Request(
+        req = _Request(
             bucket=bucket, arrays=arrays,
             mask=mask, t_real=t_real, n_real=n, rows_real=t, future=fut,
-            t_submit=time.perf_counter()))
+            t_submit=time.perf_counter(),
+            deadline_ticks=(None if deadline_ticks is None
+                            else int(deadline_ticks)))
+        with self._lock:
+            self._queue.append(req)
         return fut
+
+    def pending(self) -> int:
+        """Requests currently queued (admitted-but-unsolved is never
+        observable — a tick completes what it admits)."""
+        with self._lock:
+            return len(self._queue)
 
     # ------------------------------------------------------------ solve
     def _solver(self, bucket):
         return make_bucket_solver(self.cfg, bucket, self.max_batch,
                                   activation=self.activation,
                                   mix_fn=self.mix_fn, task=self.task,
-                                  cache=self._cache, depth=self.depth)
+                                  cache=self._cache, depth=self.depth,
+                                  mesh=self.mesh)
 
     def _empty_slot(self, bucket):
         """All-zero, all-masked batch slot — t_real = t_pad keeps the
@@ -202,19 +249,33 @@ class FederationServer:
         return arrays, np.zeros(n, bool), np.float32(t)
 
     def _select_bucket(self):
-        """The tick's bucket, by the aging admission policy:
+        """The tick's bucket, by the deadline-then-aging admission
+        policy:
 
-          1. if any bucket's HEAD request has been passed over for
+          1. if any queued request would MISS its ``deadline_ticks``
+             when passed over this tick (slack = deadline − waited ≤ 1),
+             the bucket holding the most urgent such request wins
+             (smallest slack; FIFO position breaks ties) — a deadline
+             beats a fuller bucket;
+          2. else, if any bucket's HEAD request has been passed over for
              ``max_wait_ticks`` ticks, the oldest-waiting such bucket
              wins (FIFO position breaks ties) — no shape starves;
-          2. otherwise the FULLEST bucket wins (occupancy capped at
+          3. otherwise the FULLEST bucket wins (occupancy capped at
              ``max_batch`` — surplus beyond one batch confers no
              advantage), ties broken by FIFO head position, so a
              single-shape stream degenerates to plain FIFO."""
-        counts, first_pos = {}, {}
+        counts, first_pos, urgent = {}, {}, {}
         for i, r in enumerate(self._queue):
             counts[r.bucket] = counts.get(r.bucket, 0) + 1
             first_pos.setdefault(r.bucket, i)
+            if r.deadline_ticks is not None:
+                slack = r.deadline_ticks - r.ticks_waited
+                if slack <= 1:
+                    cur = urgent.get(r.bucket)
+                    if cur is None or slack < cur[0]:
+                        urgent[r.bucket] = (slack, i)
+        if urgent:
+            return min(urgent, key=lambda b: urgent[b])
         aged = [b for b, i in first_pos.items()
                 if self._queue[i].ticks_waited >= self.max_wait_ticks]
         if aged:
@@ -228,19 +289,22 @@ class FederationServer:
         (``_select_bucket``), admit up to ``max_batch`` of its requests
         FIFO-within-bucket, solve, complete their futures.  Passed-over
         requests age by one tick.  Returns the number of requests
-        completed (0 on an empty queue)."""
-        if not self._queue:
-            return 0
-        bucket = self._select_bucket()
-        admitted, rest = [], deque()
-        while self._queue:
-            r = self._queue.popleft()
-            if r.bucket == bucket and len(admitted) < self.max_batch:
-                admitted.append(r)
-            else:
-                r.ticks_waited += 1
-                rest.append(r)
-        self._queue = rest
+        completed (0 on an empty queue).  Bucket selection and admission
+        run under the server lock (an async driver may tick while
+        submits keep landing); the solve itself does not."""
+        with self._lock:
+            if not self._queue:
+                return 0
+            bucket = self._select_bucket()
+            admitted, rest = [], deque()
+            while self._queue:
+                r = self._queue.popleft()
+                if r.bucket == bucket and len(admitted) < self.max_batch:
+                    admitted.append(r)
+                else:
+                    r.ticks_waited += 1
+                    rest.append(r)
+            self._queue = rest
         arrays, mask, t_real = zip(*[(r.arrays, r.mask, r.t_real)
                                      for r in admitted])
         empty, e_mask, e_t = self._empty_slot(bucket)

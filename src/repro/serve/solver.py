@@ -174,7 +174,7 @@ def _serve_core_adaptive(cfg: SURFConfig, activation, mix_fn=None,
 
 
 def serve_cache_key(cfg: SURFConfig, bucket, max_batch, activation,
-                    mix_fn=None, task=None, depth="fixed"):
+                    mix_fn=None, task=None, depth="fixed", mesh=None):
     """Per-bucket executable key: ``engine._engine_cache_key`` with a
     ("serve", n_pad, t_pad, B) variant tag and the cohort-shape cfg
     fields scrubbed (the bucket dims subsume them — requests of any true
@@ -182,8 +182,10 @@ def serve_cache_key(cfg: SURFConfig, bucket, max_batch, activation,
     ("serve-adaptive", ..., thr, min_layers, probe_size) instead — the
     exit knobs are scrubbed from cfg by ``_engine_cache_key`` (fixed
     engines are shared across threshold sweeps) so they must ride in the
-    variant here.  None for an untagged custom mix_fn (uncacheable, same
-    contract as the engine)."""
+    variant here.  ``mesh`` rides through ``_engine_cache_key`` as its
+    fingerprint — a request-sharded solver never collides with the
+    single-device one.  None for an untagged custom mix_fn (uncacheable,
+    same contract as the engine)."""
     variant = ("serve", int(bucket.n_agents), int(bucket.rows),
                int(max_batch))
     if depth == "adaptive":
@@ -194,12 +196,38 @@ def serve_cache_key(cfg: SURFConfig, bucket, max_batch, activation,
     cfg = dataclasses.replace(cfg, n_agents=0, train_per_agent=0,
                               test_per_agent=0)
     return TR._engine_cache_key(cfg, variant, activation, False,
-                                mix_fn=mix_fn, task=task)
+                                mesh=mesh, mix_fn=mix_fn, task=task)
+
+
+def request_shardings(mesh, max_batch, depth="fixed"):
+    """(in_shardings, out_shardings) for a bucket solver on ``mesh``: the
+    REQUEST axis (leading B on every arg and output) shards over the
+    mesh's agent-role axis, theta (arg 1) replicates.  Requests are
+    embarrassingly parallel — each device solves its block of request
+    slots with ZERO collectives (the fixed path's HLO has none at all;
+    the adaptive path keeps only the scalar ``any(active)`` loop
+    predicate).  ``max_batch`` must divide the shard count — ragged
+    tails already ride as masked empty slots, so the constraint is on
+    the BUCKET batch shape, not on traffic."""
+    from repro.sharding.surf_rules import (_axis_size, axis_for_role,
+                                           check_divides, replicated)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    axis = axis_for_role(mesh, "agent")
+    shards = _axis_size(mesh, axis)
+    check_divides(max_batch, shards, "the sharded serve batch",
+                  "max_batch",
+                  "each device solves an equal block of request slots "
+                  "(ragged traffic rides as masked empty slots)")
+    rep = replicated(mesh)
+    req = NamedSharding(mesh, P(axis)) if shards > 1 else rep
+    n_args = 11 if depth == "adaptive" else 9
+    in_sh = tuple(rep if i == 1 else req for i in range(n_args))
+    return in_sh, req
 
 
 def make_bucket_solver(cfg: SURFConfig, bucket, max_batch, *,
                        activation="relu", mix_fn=None, task=None,
-                       cache=None, depth="fixed"):
+                       cache=None, depth="fixed", mesh=None):
     """The jitted request-batched solver for one shape bucket.
 
     ``depth="fixed"`` (default): vmap-of-scan ``solve(S (B,n,n), theta,
@@ -212,20 +240,28 @@ def make_bucket_solver(cfg: SURFConfig, bucket, max_batch, *,
     ``Xp (B,n,p,F), Yp (B,n,p)`` inserted after Yte, and a ``depth``
     (B,) field in the result.
 
+    ``mesh`` shards the request axis over the mesh's agent-role axis
+    (``request_shardings``): a bucket's (B, n_pad, ...) stacked cohorts
+    split over devices, zero collectives per request.
+
     ``cache`` (a ``BoundedLRU``) memoizes the executable under
     ``serve_cache_key``."""
     def build():
+        jit_kwargs = {}
+        if mesh is not None:
+            in_sh, out_sh = request_shardings(mesh, max_batch, depth)
+            jit_kwargs = {"in_shardings": in_sh, "out_shardings": out_sh}
         if depth == "adaptive":
             return jax.jit(_serve_core_adaptive(
-                cfg, activation, mix_fn=mix_fn, task=task))
+                cfg, activation, mix_fn=mix_fn, task=task), **jit_kwargs)
         solve_s = _serve_core(cfg, activation, mix_fn=mix_fn, task=task)
         return jax.jit(jax.vmap(
-            solve_s, in_axes=(0, None, 0, 0, 0, 0, 0, 0, 0)))
+            solve_s, in_axes=(0, None, 0, 0, 0, 0, 0, 0, 0)), **jit_kwargs)
 
     if cache is None:
         return build()
     key = serve_cache_key(cfg, bucket, max_batch, activation,
-                          mix_fn=mix_fn, task=task, depth=depth)
+                          mix_fn=mix_fn, task=task, depth=depth, mesh=mesh)
     if key is None:
         return build()
     return cache.get_or_build(key, build)

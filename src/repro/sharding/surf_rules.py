@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import numpy as np
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -153,6 +154,68 @@ def stacked_q_sharding(mesh: Mesh, n_q: int | None = None,
     return NamedSharding(mesh, _dim_spec(n_q, mesh, axis, 0))
 
 
+def stacked_q_tree(stacked, mesh: Mesh, n_q: int | None = None, axis=None):
+    """Per-leaf Q shardings for a stacked dataset pytree: EVERY leaf of a
+    ``stack_meta_datasets`` tree leads with the Q axis (the stacker adds
+    the axis to every leaf, aux entries included), so one uniform
+    ``stacked_q_sharding`` covers the tree. Degrades to replication as a
+    unit when Q doesn't divide the axis."""
+    q = stacked_q_sharding(mesh, n_q, axis)
+    return jax.tree_util.tree_map(lambda _: q, stacked)
+
+
+def q_select_axis(mesh: Mesh | None, n_q: int | None = None, axis=None):
+    """The mesh axis a Q-SHARDED pool's per-step owner-masked select runs
+    over, or None when the pool would replicate anyway (no mesh, axis size
+    1, or indivisible Q) — the single gate both ``make_q_select`` and the
+    Q-sharded placement rules consult, so the select and the shardings
+    can never disagree."""
+    if mesh is None:
+        return None
+    axis = axis_for_role(mesh, "agent") if axis is None else axis
+    size = _axis_size(mesh, axis)
+    if size <= 1 or n_q is None or n_q % size != 0:
+        return None
+    return axis
+
+
+def make_q_select(mesh: Mesh, axis):
+    """``select(stacked, t) -> batch`` for a Q-SHARDED meta-dataset pool:
+    the per-meta-step dataset select that keeps collective bytes
+    INDEPENDENT of Q.
+
+    A plain ``dynamic_index_in_dim`` on a dim-0-sharded pool makes the
+    SPMD partitioner all-gather the WHOLE pool every step (bytes ∝ Q —
+    measured, see BENCH_qsharded.json). Instead each shard slices its
+    LOCAL block at ``(t % n_q) % q_local``, masks the slice to zero unless
+    it owns dataset ``t % n_q``, and a ``psum`` over the Q-carrying axis
+    re-assembles exactly one dataset: one all-reduce of ONE dataset's
+    bytes per step, whatever Q is. The masked sum adds exact zeros, so
+    the selected batch is BIT-equal to the replicated index. ``n_q`` is
+    derived from the local block (global dim 0 = local · shards), so one
+    select serves every pool size."""
+    from jax.experimental.shard_map import shard_map
+    n_shards = int(mesh.shape[axis])
+
+    def select(stacked, t):
+        def body(local, t):
+            q_local = jax.tree_util.tree_leaves(local)[0].shape[0]
+            q = t % (q_local * n_shards)
+            own = (q // q_local) == jax.lax.axis_index(axis)
+
+            def one(a):
+                loc = jax.lax.dynamic_index_in_dim(a, q % q_local, 0,
+                                                   keepdims=False)
+                masked = jnp.where(own, loc, jnp.zeros_like(loc))
+                return jax.lax.psum(masked, axis)
+            return jax.tree_util.tree_map(one, local)
+
+        return shard_map(body, mesh=mesh, in_specs=(P(axis), P()),
+                         out_specs=P())(stacked, t)
+
+    return select
+
+
 def schedule_sharding(mesh: Mesh) -> NamedSharding:
     """The stacked (T, n, n) mixing-matrix schedule
     (``topology.schedule.TopologySchedule.S``): REPLICATED. Every agent
@@ -195,7 +258,9 @@ def stacked_sharded_flags(stacked, n_agents: int):
 
 
 def train_scan_shardings(mesh: Mesh, n_agents: int | None = None,
-                         axis=None, stacked=None):
+                         axis=None, stacked=None, eval_stacked=None,
+                         n_eval_q: int | None = None, q_sharded=False,
+                         n_q: int | None = None):
     """(in_shardings, out_shardings) for the scan engine's
     ``run_s(state, stacked, key, S, eval_stacked, S_eval)`` dynamic
     arguments (``steps`` is static): state/key/S replicated, stacked
@@ -207,13 +272,36 @@ def train_scan_shardings(mesh: Mesh, n_agents: int | None = None,
     given, the dataset entry is the leaf-aware tree from
     ``stacked_shardings_tree``; otherwise a pytree-prefix spec (only safe
     for flat Xtr/Ytr/Xte/Yte dicts whose every leaf has the agent axis at
-    dim 1)."""
+    dim 1).
+
+    Q-axis extensions (the two data-parallel pools):
+
+      * ``eval_stacked``/``n_eval_q`` — the in-scan SNAPSHOT pool's slot
+        gets ``stacked_q_tree`` (dim 0 over the AGENT-role axis): the
+        dense vmapped snapshot eval partitions over Q with one small
+        mean-reduce all-reduce per snapshot, whatever Q is. Degrades to
+        replication when Q doesn't divide the axis.
+      * ``q_sharded=True``/``n_q`` — the TRAIN pool itself shards its Q
+        axis (dim 0) instead of the agent axis: the memory-capacity mode
+        for the paper's 600-dataset pool (each device holds Q/P
+        datasets). The per-step select MUST then be the owner-masked
+        psum of ``make_q_select`` — a plain dynamic index would
+        all-gather the whole pool every step. Gated by ``q_select_axis``
+        so the placement and the select agree."""
     rep = replicated(mesh)
-    if stacked is None:
+    if q_sharded and q_select_axis(mesh, n_q, axis) is not None:
+        stacked_sh = (stacked_q_tree(stacked, mesh, n_q, axis)
+                      if stacked is not None
+                      else stacked_q_sharding(mesh, n_q, axis))
+    elif stacked is None:
         stacked_sh = stacked_agent_sharding(mesh, n_agents, axis)
     else:
         stacked_sh = stacked_shardings_tree(stacked, mesh, n_agents, axis)
-    return (rep, stacked_sh, rep, rep, rep, rep), (rep, rep, rep)
+    if eval_stacked is not None:
+        ev_sh = stacked_q_tree(eval_stacked, mesh, n_eval_q, axis)
+    else:
+        ev_sh = rep
+    return (rep, stacked_sh, rep, rep, ev_sh, rep), (rep, rep, rep)
 
 
 def seed_sharding(mesh: Mesh, n_seeds: int | None = None,
@@ -231,7 +319,9 @@ def seed_sharding(mesh: Mesh, n_seeds: int | None = None,
 
 def seed_scan_shardings(mesh: Mesh, n_seeds: int | None = None,
                         axis=None, n_agents: int | None = None,
-                        stacked=None):
+                        stacked=None, eval_stacked=None,
+                        n_eval_q: int | None = None, q_sharded=False,
+                        n_q: int | None = None):
     """(in_shardings, out_shardings) for the seed-batched engine's
     ``run_s(states, stacked, keys, S_stack, eval_stacked, S_eval_stack)``
     dynamic arguments (``steps`` is static): per-seed stacks over the
@@ -245,13 +335,28 @@ def seed_scan_shardings(mesh: Mesh, n_seeds: int | None = None,
     under the seed vmap — pass ``stacked`` for the leaf-aware tree
     (aux leaves without an agent axis replicate). On a 1-D mesh both
     roles resolve to the same axis, so the pool stays replicated (the
-    pre-2-D behavior). The held-out snapshot pool always replicates."""
+    pre-2-D behavior).
+
+    Q-axis extensions mirror ``train_scan_shardings`` and apply ONLY on a
+    2-D mesh (``agent_ax != seed_ax``): the snapshot pool
+    (``eval_stacked``/``n_eval_q``) Q-shards dim 0 over 'agent' — the
+    snapshot runs under the seed vmap, so the pool is replicated over
+    'seed' and data-parallel over 'agent'; ``q_sharded``/``n_q`` Q-shards
+    the shared TRAIN pool the same way (the engine pairs it with
+    ``make_q_select``). On a 1-D mesh the seed lanes own the single
+    sharded axis and both pools stay replicated — Q-sharding there would
+    gather across seed lanes every step."""
     seed_ax = axis_for_role(mesh, "seed") if axis is None else axis
     agent_ax = axis_for_role(mesh, "agent")
     seed = seed_sharding(mesh, n_seeds, seed_ax)
     rep = replicated(mesh)
-    if (agent_ax is not None and agent_ax != seed_ax
-            and _axis_size(mesh, agent_ax) > 1):
+    two_d = (agent_ax is not None and agent_ax != seed_ax
+             and _axis_size(mesh, agent_ax) > 1)
+    if two_d and q_sharded and q_select_axis(mesh, n_q, agent_ax) is not None:
+        stacked_sh = (stacked_q_tree(stacked, mesh, n_q, agent_ax)
+                      if stacked is not None
+                      else stacked_q_sharding(mesh, n_q, agent_ax))
+    elif two_d:
         if stacked is not None:
             stacked_sh = stacked_shardings_tree(stacked, mesh, n_agents,
                                                 agent_ax)
@@ -259,4 +364,8 @@ def seed_scan_shardings(mesh: Mesh, n_seeds: int | None = None,
             stacked_sh = stacked_agent_sharding(mesh, n_agents, agent_ax)
     else:
         stacked_sh = rep
-    return (seed, stacked_sh, seed, seed, rep, seed), (seed, seed, seed)
+    if two_d and eval_stacked is not None:
+        ev_sh = stacked_q_tree(eval_stacked, mesh, n_eval_q, agent_ax)
+    else:
+        ev_sh = rep
+    return (seed, stacked_sh, seed, seed, ev_sh, seed), (seed, seed, seed)

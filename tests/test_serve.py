@@ -19,8 +19,8 @@ from repro.configs.surf_paper import SMOKE, SPARSE_SMOKE
 from repro.core import surf
 from repro.core.tasks import resolve_task, sparse_recovery_task
 from repro.data import synthetic
-from repro.serve import (Bucket, BucketSpec, FederationServer, pad_cohort,
-                         serve_cache_key)
+from repro.serve import (AsyncDriver, Bucket, BucketSpec,
+                         FederationServer, pad_cohort, serve_cache_key)
 from repro.utils.cache import BoundedLRU
 
 CFG = SMOKE
@@ -360,3 +360,87 @@ def test_serve_smoke_mini_trace(trained):
     np.testing.assert_allclose(fut.result()["final_acc"],
                                ref["final_acc"], atol=1e-5, rtol=1e-5)
     assert srv.metrics.summary()["requests_completed"] == 12
+
+
+# ------------------------------------------------- deadline admission
+def test_deadline_beats_fuller_bucket(trained):
+    """A request about to miss its deadline wins admission over a
+    fuller bucket: deadline urgency outranks occupancy (and aging)."""
+    state, _ = trained
+    srv = _server(state.theta, max_batch=4)
+    _, S, ds = _cohort(12, 4, seed=60)          # lone (16,4) request,
+    urgent = srv.submit(S, ds, seed=0, deadline_ticks=1)   # due NOW
+    bulk = []
+    for j in range(3):                          # fuller (8,4) bucket
+        _, S, ds = _cohort(6, 4, seed=61 + j)
+        bulk.append(srv.submit(S, ds, seed=j))
+    assert srv.tick() == 1                      # deadline bucket first
+    assert urgent.done() and not any(f.done() for f in bulk)
+    assert srv.tick() == 3
+    assert all(f.done() for f in bulk)
+
+
+def test_deadline_validation(trained):
+    state, _ = trained
+    srv = _server(state.theta)
+    _, S, ds = _cohort(6, 4, seed=65)
+    with pytest.raises(ValueError, match="deadline_ticks"):
+        srv.submit(S, ds, seed=0, deadline_ticks=0)
+
+
+def test_bucket_cache_in_metrics_summary(trained):
+    """The server's bucket-executable LRU stats ride along in every
+    metrics snapshot — cache churn diagnosable next to pad waste."""
+    state, _ = trained
+    srv = _server(state.theta)
+    _, S, ds = _cohort(6, 4, seed=66)
+    srv.submit(S, ds, seed=0)
+    srv.drain()
+    summ = srv.metrics.summary()
+    assert summ["bucket_cache"] == srv.cache_stats()
+    assert summ["bucket_cache"]["misses"] >= 1
+
+
+# ------------------------------------------------------- async driver
+def test_async_driver_matches_manual_tick_loop(trained):
+    """The background tick loop adds no scheduling of its own: the same
+    submission order yields the same per-request results as a manual
+    tick loop (padding is inert, so batch composition never matters)."""
+    state, _ = trained
+    reqs = [_cohort([6, 8, 12, 16][i % 4], 4, seed=70 + i)
+            for i in range(10)]
+
+    manual = _server(state.theta)
+    m_futs = [manual.submit(S, ds, seed=i)
+              for i, (_, S, ds) in enumerate(reqs)]
+    manual.drain()
+
+    srv = _server(state.theta)
+    with AsyncDriver(srv) as driver:
+        a_futs = [driver.submit(S, ds, seed=i)
+                  for i, (_, S, ds) in enumerate(reqs)]
+        driver.wait(a_futs, timeout_s=120.0)
+    for mf, af in zip(m_futs, a_futs):
+        m, a = mf.result(), af.result()
+        np.testing.assert_array_equal(np.asarray(m["final_loss"]),
+                                      np.asarray(a["final_loss"]))
+        np.testing.assert_array_equal(np.asarray(m["final_acc"]),
+                                      np.asarray(a["final_acc"]))
+    stats = driver.stats()
+    assert stats["requests_completed"] == len(reqs)
+    assert stats["busy_s"] > 0 and not stats["running"]
+
+
+def test_async_driver_stop_without_drain_leaves_queue(trained):
+    """``stop(drain=False)`` exits after the in-flight tick; queued
+    requests stay pending on the untouched server and a later manual
+    drain completes them."""
+    state, _ = trained
+    srv = _server(state.theta)
+    driver = AsyncDriver(srv)                   # never started: queue
+    _, S, ds = _cohort(6, 4, seed=85)           # only drains manually
+    fut = driver.submit(S, ds, seed=0)
+    driver.stop(drain=False)
+    assert not fut.done() and srv.pending() == 1
+    srv.drain()
+    assert fut.done() and srv.pending() == 0
